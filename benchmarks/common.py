@@ -1,0 +1,31 @@
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts")
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"
+
+
+def spearman(a, b) -> float:
+    """Spearman rank correlation without scipy."""
+    import numpy as np
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    den = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / den) if den else 0.0

@@ -1,0 +1,58 @@
+"""Fig 10-11: validate the absolute latency-sensitivity metric lambda.
+
+Protocol (paper §4.1, gem5 replaced by the eDAG discrete-event simulator):
+for each of the 15 PolyBench linear-algebra kernels, sweep the memory
+latency alpha and rank kernels by mean simulated runtime ("ground truth");
+independently rank them by lambda (m=4).  Report per-kernel rank pairs,
+exact matches, max/mean rank distance and Spearman correlation.
+
+Paper's result: 6/15 exact, max distance 2, mean 0.93.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import spearman
+from repro.apps import polybench
+from repro.configs.paper_suite import (ANALYSIS, POLYBENCH_N,
+                                        SIM_COMPUTE_SLOTS)
+from repro.core import lambda_abs, latency_sweep
+
+
+def run(N: int = POLYBENCH_N, full_sweep: bool = False, m: int = 4):
+    alphas = (ANALYSIS.alpha_sweep_full if full_sweep
+              else ANALYSIS.alpha_sweep)
+    names = polybench.PAPER_15
+    sim_mean, lam = {}, {}
+    for name in names:
+        g = polybench.trace_kernel(name, N)
+        lay = g.mem_layers()
+        lam[name] = lambda_abs(lay.W, lay.D, m)
+        sim_mean[name] = float(np.mean(latency_sweep(g, alphas, m=m, compute_slots=SIM_COMPUTE_SLOTS)))
+    truth = sorted(names, key=lambda n: -sim_mean[n])
+    pred = sorted(names, key=lambda n: -lam[n])
+    t_rank = {n: i for i, n in enumerate(truth)}
+    p_rank = {n: i for i, n in enumerate(pred)}
+    dists = [abs(t_rank[n] - p_rank[n]) for n in names]
+    rows = [dict(kernel=n, sim_rank=t_rank[n], lambda_rank=p_rank[n],
+                 lam=lam[n], sim_mean=sim_mean[n]) for n in names]
+    return dict(rows=rows,
+                exact=sum(d == 0 for d in dists),
+                max_dist=max(dists),
+                mean_dist=float(np.mean(dists)),
+                spearman=spearman([sim_mean[n] for n in names],
+                                  [lam[n] for n in names]))
+
+
+def main():
+    res = run()
+    print("kernel,sim_rank,lambda_rank,lambda,sim_mean")
+    for r in sorted(res["rows"], key=lambda r: r["sim_rank"]):
+        print(f"{r['kernel']},{r['sim_rank']},{r['lambda_rank']},"
+              f"{r['lam']:.1f},{r['sim_mean']:.0f}")
+    print(f"# exact={res['exact']}/15 max_dist={res['max_dist']} "
+          f"mean_dist={res['mean_dist']:.2f} spearman={res['spearman']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Fig 12: validate the *relative* sensitivity Lambda.
+
+Ground truth = mean relative slowdown vs the alpha0 baseline across the
+latency sweep; prediction = Lambda ranking.  The paper found this weaker
+(mean rank distance 2.67) and identified W/C > 0.3 as the regime where
+Lambda is trustworthy — we report the same split.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import spearman
+from repro.apps import polybench
+from repro.configs.paper_suite import (ANALYSIS, POLYBENCH_N,
+                                        SIM_COMPUTE_SLOTS)
+from repro.core import (lambda_abs, lambda_rel, latency_sweep,
+                        non_memory_cost)
+
+
+def run(N: int = POLYBENCH_N, full_sweep: bool = False, m: int = 4):
+    alphas = np.asarray(ANALYSIS.alpha_sweep_full if full_sweep
+                        else ANALYSIS.alpha_sweep, float)
+    names = polybench.PAPER_15
+    rel_slow, Lam, wc = {}, {}, {}
+    for name in names:
+        g = polybench.trace_kernel(name, N)
+        lay = g.mem_layers()
+        C = non_memory_cost(g)
+        lam = lambda_abs(lay.W, lay.D, m)
+        Lam[name] = lambda_rel(lam, ANALYSIS.alpha0, C)
+        wc[name] = lay.W / max(C, 1)
+        times = latency_sweep(g, alphas, m=m, compute_slots=SIM_COMPUTE_SLOTS)
+        base = times[0]
+        rel_slow[name] = float(np.mean(times / base - 1.0))
+    truth = sorted(names, key=lambda n: -rel_slow[n])
+    pred = sorted(names, key=lambda n: -Lam[n])
+    t_rank = {n: i for i, n in enumerate(truth)}
+    p_rank = {n: i for i, n in enumerate(pred)}
+    dists = [abs(t_rank[n] - p_rank[n]) for n in names]
+    hi = [n for n in names if wc[n] > 0.3]
+    hi_d = [abs(t_rank[n] - p_rank[n]) for n in hi]
+    return dict(
+        rows=[dict(kernel=n, sim_rank=t_rank[n], Lambda_rank=p_rank[n],
+                   Lam=Lam[n], rel_slow=rel_slow[n], w_over_c=wc[n])
+              for n in names],
+        exact=sum(d == 0 for d in dists),
+        mean_dist=float(np.mean(dists)),
+        mean_dist_high_wc=float(np.mean(hi_d)) if hi_d else None,
+        n_high_wc=len(hi),
+        spearman=spearman([rel_slow[n] for n in names],
+                          [Lam[n] for n in names]))
+
+
+def main():
+    res = run()
+    print("kernel,sim_rank,Lambda_rank,Lambda,rel_slowdown,W_over_C")
+    for r in sorted(res["rows"], key=lambda r: r["sim_rank"]):
+        print(f"{r['kernel']},{r['sim_rank']},{r['Lambda_rank']},"
+              f"{r['Lam']:.4f},{r['rel_slow']:.3f},{r['w_over_c']:.2f}")
+    print(f"# exact={res['exact']}/15 mean_dist={res['mean_dist']:.2f} "
+          f"mean_dist(W/C>0.3)={res['mean_dist_high_wc']} "
+          f"spearman={res['spearman']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig 13: memory depth D vs data size N.
+
+The paper's insight: data-oblivious kernels have constant D under idealized
+(unbounded-register) tracing; spill-afflicted kernels (their trmm) grow
+linearly.  Our tracer has unlimited virtual registers (the paper's §7 wish),
+so data-oblivious kernels all show constant depth; the spilled-accumulator
+trmm variant reproduces the paper's linear-growth case explicitly.
+"""
+from __future__ import annotations
+
+from repro.apps import polybench
+
+KERNELS = polybench.PAPER_15 + ["trmm_spill", "cholesky", "durbin"]
+SIZES = (6, 10, 14, 18)
+
+
+def run(sizes=SIZES):
+    out = {}
+    for name in KERNELS:
+        out[name] = [polybench.trace_kernel(name, N).mem_layers().D
+                     for N in sizes]
+    return out
+
+
+def classify(depths):
+    return "constant" if len(set(depths)) == 1 else \
+        ("linear" if depths[-1] > depths[0] else "other")
+
+
+def main():
+    res = run()
+    print("kernel," + ",".join(f"D(N={n})" for n in SIZES) + ",class")
+    n_const = 0
+    for name, ds in res.items():
+        c = classify(ds)
+        n_const += c == "constant"
+        print(f"{name}," + ",".join(map(str, ds)) + f",{c}")
+    print(f"# constant-depth: {n_const}/{len(res)} "
+          "(paper: 8/15 constant with compiler spills; ideal-register "
+          "tracing recovers constant depth for every data-oblivious kernel)")
+
+
+if __name__ == "__main__":
+    main()

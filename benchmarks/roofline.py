@@ -1,0 +1,65 @@
+"""Roofline report (beyond-paper, deliverable g): per (arch x shape x mesh)
+cell, the three roofline terms from the dry-run artifacts, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the paper's per-axis collective
+lambda — EDAN's multi-pod latency-sensitivity analysis applied to our own
+compiled steps.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ART
+
+
+def load_cells(mesh: str = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(path))
+        if "skipped" in d or "error" in d:
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("# no dry-run artifacts; run: python -m repro.launch.dryrun --all")
+        return
+    print("arch,shape,mesh,fits,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,lam_model,lam_data,lam_pod,hbm_GiB")
+    for d in cells:
+        r = d["roofline"]
+        lam = {ax: v["lam"] for ax, v in d.get("per_axis_lambda", {}).items()}
+        print(f"{d['arch']},{d['shape']},{d['mesh']},{int(d['fits_hbm'])},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['dominant']},"
+              f"{(d.get('useful_flops_ratio') or 0):.3f},"
+              f"{lam.get('model', 0):.0f},{lam.get('data', 0):.0f},"
+              f"{lam.get('pod', 0):.0f},"
+              f"{d['hbm_per_device_bytes'] / 2**30:.1f}")
+    # summary: which cells are the hillclimb candidates
+    pod = [d for d in cells if d["mesh"] == "pod"]
+    if pod:
+        worst = min(pod, key=lambda d: _roofline_fraction(d))
+        collb = max(pod, key=lambda d: d["roofline"]["collective_s"] /
+                    max(sum(d["roofline"][k] for k in
+                            ("compute_s", "memory_s", "collective_s")), 1e-12))
+        print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({_roofline_fraction(worst):.3f})")
+        print(f"# most collective-bound: {collb['arch']}/{collb['shape']}")
+
+
+def _roofline_fraction(d) -> float:
+    """compute_term / max(all terms): 1.0 == perfectly compute-bound."""
+    r = d["roofline"]
+    top = max(r["compute_s"], r["memory_s"], r["collective_s"], 1e-12)
+    return r["compute_s"] / top
+
+
+if __name__ == "__main__":
+    main()

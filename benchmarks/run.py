@@ -1,0 +1,117 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus each harness's own
+detailed CSV beneath).  Usage: PYTHONPATH=src python -m benchmarks.run
+[--full] (--full uses the paper's 5ns-step latency sweep).
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import time
+from contextlib import redirect_stdout
+
+from .common import csv_row
+
+
+def _run(name, fn, derive):
+    t0 = time.time()
+    out = fn()
+    us = (time.time() - t0) * 1e6
+    print(csv_row(name, us, derive(out)))
+    return out
+
+
+def fig09():
+    from . import fig09_datamovement as m
+    out = _run("fig09_15_16_data_movement", lambda: m.run_lu()[1],
+               lambda U: f"lu_peak_bytes={U.max():.0f}")
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        m.main()
+    print("\n".join("  " + l for l in buf.getvalue().rstrip().splitlines()))
+    return out
+
+
+def fig10_11(full=False):
+    from . import fig10_11_lambda as m
+    res = _run("fig10_11_lambda_ranking", lambda: m.run(full_sweep=full),
+               lambda r: (f"exact={r['exact']}/15;mean_dist="
+                          f"{r['mean_dist']:.2f};spearman="
+                          f"{r['spearman']:.3f}"))
+    for r in sorted(res["rows"], key=lambda r: r["sim_rank"]):
+        print(f"  {r['kernel']},sim={r['sim_rank']},lam={r['lambda_rank']}")
+    return res
+
+
+def fig12(full=False):
+    from . import fig12_Lambda as m
+    return _run("fig12_Lambda_ranking", lambda: m.run(full_sweep=full),
+               lambda r: (f"exact={r['exact']}/15;mean_dist="
+                          f"{r['mean_dist']:.2f};"
+                          f"high_WC_dist={r['mean_dist_high_wc']}"))
+
+
+def fig13():
+    from . import fig13_depth as m
+    return _run("fig13_depth_vs_N", m.run,
+                lambda r: ("const=" + str(sum(
+                    1 for v in r.values() if len(set(v)) == 1)) +
+                    f"/{len(r)};trmm_spill=" +
+                    "-".join(map(str, r["trmm_spill"]))))
+
+
+def table1():
+    from . import table1_hpcg as m
+    res = _run("table1_hpcg_cache", m.run,
+               lambda rows: (f"W_red32k={rows[1]['W_red']:.0f}%;"
+                             f"lam_red32k={rows[1]['lam_red']:.0f}%"))
+    for r in res:
+        print(f"  cache={r['cache']},W={r['W']},D={r['D']},"
+              f"lam={r['lam']:.0f},Lam={r['Lam']:.4f},B={r['B_gbs']:.2f}GB/s")
+    return res
+
+
+def table2():
+    from . import table2_lulesh as m
+    res = _run("table2_lulesh_cache", m.run,
+               lambda rows: (f"W_red32k={rows[1]['W_red']:.0f}%;"
+                             f"D_red32k={rows[1]['D_red']:.0f}%"))
+    for r in res:
+        print(f"  cache={r['cache']},W={r['W']},D={r['D']},"
+              f"lam={r['lam']:.0f},Lam={r['Lam']:.4f},B={r['B_gbs']:.2f}GB/s")
+    return res
+
+
+def roofline():
+    from .roofline import _roofline_fraction, load_cells
+    cells = load_cells()
+
+    def derive(_):
+        if not cells:
+            return "no-artifacts"
+        pod = [d for d in cells if d["mesh"] == "pod"] or cells
+        worst = min(pod, key=_roofline_fraction)
+        return (f"cells={len(cells)};fits={sum(d['fits_hbm'] for d in cells)};"
+                f"worst={worst['arch']}/{worst['shape']}"
+                f"@{_roofline_fraction(worst):.3f}")
+    return _run("roofline_table", lambda: None, derive)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-fidelity latency sweep (5ns steps)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    fig09()
+    fig10_11(args.full)
+    fig12(args.full)
+    fig13()
+    table1()
+    table2()
+    roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 2: LULESH proxy (LagrangeLeapFrog skeleton) under cache configs.
+
+Same columns as Table 1.  The paper's observation: unlike HPCG, caching
+also removes most memory vertices from the *critical path* (D drops ~75%),
+shortening T_inf.
+"""
+from __future__ import annotations
+
+from repro.apps import lulesh
+from repro.configs.paper_suite import ANALYSIS, LULESH_ITERS, LULESH_NE
+from repro.core import CostModelParams, make_cache, report
+
+
+def run(ne: int = LULESH_NE, iters: int = LULESH_ITERS):
+    rows = []
+    base = None
+    for cs in ANALYSIS.cache_sizes:
+        g = lulesh.trace_step(ne=ne, iters=iters, cache=make_cache(
+            cs, ANALYSIS.cache_line, ANALYSIS.cache_ways))
+        r = report(g, CostModelParams(m=ANALYSIS.m,
+                                      alpha=ANALYSIS.alpha_mem, alpha0=1.0))
+        row = dict(cache=cs, W=r.W, D=r.D, lam=r.lam, Lam=r.Lam,
+                   B_gbs=r.B_gbs)
+        if base is None:
+            base = row
+        for k in ("W", "D", "lam", "Lam"):
+            row[f"{k}_red"] = (1 - row[k] / base[k]) * 100 if base[k] else 0.0
+        rows.append(row)
+    return rows
+
+
+def main():
+    print("cache,W,D,lambda,Lambda,B_GBs,W_red%,D_red%,lambda_red%,Lambda_red%")
+    for r in run():
+        print(f"{r['cache']},{r['W']},{r['D']},{r['lam']:.0f},{r['Lam']:.4f},"
+              f"{r['B_gbs']:.2f},{r['W_red']:.1f},{r['D_red']:.1f},"
+              f"{r['lam_red']:.1f},{r['Lam_red']:.1f}")
+    print("# paper Table 2: >70% W and D reduction at 32kB; D leaves the "
+          "critical path (B rises slightly)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver: train a ~100M-parameter LM on synthetic data with the
+full production stack — sharded params, AdamW, grad accumulation, periodic
+checkpoints, fault-tolerant resume, and a final EDAN analysis of the step.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200 --scale 10m
+      (--scale 100m for the full-size example; ~100M params is ~20 GFLOP
+      per 1k tokens — budget minutes per step on a laptop CPU, seconds on
+      any accelerator)
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from dataclasses import replace
+
+from repro.configs import ARCHS, TrainConfig
+from repro.data import SyntheticLMData
+from repro.models import get_model
+from repro.train.fault import FaultTolerantLoop
+from repro.train.optimizer import adamw_init
+from repro.train.train_loop import make_train_step
+
+SCALES = {
+    # ~10M / ~100M params: qwen3 family scaled down
+    "10m": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                head_dim=64, d_ff=1024, vocab_size=8192),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=SCALES, default="10m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = replace(ARCHS["qwen3-0.6b"], **SCALES[args.scale],
+                  qk_norm=True, dtype="float32", remat="block",
+                  attn_chunk_kv=128)
+    api = get_model(cfg)
+    print(f"model: {api.n_params() / 1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    tc = TrainConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps,
+                     microbatches=args.microbatches)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(api, tc), donate_argnums=(0, 1))
+    data = SyntheticLMData(vocab_size=cfg.padded_vocab(), seq_len=args.seq,
+                           global_batch=args.batch, seed=0)
+
+    losses = []
+
+    def step_fn(state, s):
+        b = data.batch(s)
+        p, o, m = step(state["params"], state["opt"],
+                       {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+        if s % 10 == 0:
+            print(f"step {s:5d}  loss {m['loss']:.4f}  "
+                  f"gnorm {m['grad_norm']:.3f}  lr {m['lr']:.2e}")
+        return {"params": p, "opt": o}
+
+    loop = FaultTolerantLoop({"params": params, "opt": opt}, args.ckpt_dir,
+                             save_every=50)
+    t0 = time.time()
+    loop.run(step_fn, args.steps)
+    dt = time.time() - t0
+    done = args.steps - loop.start_step
+    print(f"\ntrained {done} steps in {dt:.0f}s "
+          f"({dt / max(done, 1):.2f}s/step); "
+          f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
+
+    # the paper's loop, closed: analyze our own step
+    from repro.core import CostModelParams, edag_from_fn, report
+    b = data.batch(0)
+    g = edag_from_fn(lambda p: api.loss_fn(p, {
+        "tokens": jnp.asarray(b["tokens"]),
+        "labels": jnp.asarray(b["labels"])}), params,
+        mem_threshold_bytes=1 << 20, scan_unroll_limit=4)
+    r = report(g, CostModelParams(m=8, alpha=200.0))
+    print(f"EDAN on this step: {g.n_vertices} vertices, W={r.W}, D={r.D}, "
+          f"lambda={r.lam:.0f}, parallelism={r.parallelism:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Regenerate the EXPERIMENTS.md roofline table from dry-run artifacts."""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def table(mesh_filter=None):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(f))
+        name = os.path.basename(f).replace(".json", "")
+        if "skipped" in d:
+            arch, shape, mesh = name.split("__")
+            rows.append(f"| {arch} | {shape} | {mesh} | skip | — | — | — | — | — | — |")
+            continue
+        if "error" in d:
+            continue
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        r = d["roofline"]
+        lam = d.get("per_axis_lambda", {})
+        lam_s = " ".join(f"{k.split('(')[0]}:{v['lam']:.0f}"
+                         for k, v in sorted(lam.items())
+                         if k in ("model", "data", "pod"))
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{'yes' if d['fits_hbm'] else 'NO'} "
+            f"({d['hbm_per_device_bytes'] / 2**30:.1f}G) | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | **{r['dominant'][:4]}** | "
+            f"{(d.get('useful_flops_ratio') or 0):.2f} | {lam_s} |")
+    return rows
+
+
+if __name__ == "__main__":
+    hdr = ("| arch | shape | mesh | fits (HBM/dev) | compute s | memory s | "
+           "collective s | dominant | useful | per-axis λ |")
+    sep = "|" + "---|" * 10
+    print(hdr)
+    print(sep)
+    for r in table():
+        print(r)

@@ -1,0 +1,11 @@
+"""The paper's analyzed applications: PolyBench, HPCG, LULESH (§4-5).
+
+Each app exists in two forms:
+  * a scalar-traced form (``Tracer`` DSL) — instruction-level eDAGs matching
+    the paper's RISC-V methodology;
+  * a JAX form — the same math as a jittable function, analyzed through the
+    jaxpr/HLO frontends and usable as a real workload.
+"""
+from . import polybench, hpcg, lulesh
+
+__all__ = ["polybench", "hpcg", "lulesh"]

@@ -1,0 +1,162 @@
+"""HPCG-style conjugate gradient on a 3D 27-point stencil (§5.2).
+
+The paper traces HPCG 3.1's CG phase (setup excluded).  We implement the same
+computational core — SpMV over the 27-point stencil operator (diag 26,
+off-diag -1), dot products, and AXPYs — in both the scalar trace DSL and JAX.
+The paper's multigrid preconditioner is omitted (plain CG); this keeps the
+trace focused on the latency-relevant SpMV/dot pattern and is noted in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.trace import Tracer
+
+
+def neighbor_offsets():
+    return [(dx, dy, dz)
+            for dx in (-1, 0, 1) for dy in (-1, 0, 1) for dz in (-1, 0, 1)
+            if not (dx == dy == dz == 0)]
+
+
+def build_problem(n: int, seed: int = 0):
+    """b for A x = b with A = 27-pt stencil (diag 26, off-diag -1)."""
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal(n ** 3)
+    return b
+
+
+def _nidx(i, j, k, n):
+    return (i * n + j) * n + k
+
+
+def spmv_numpy(p: np.ndarray, n: int) -> np.ndarray:
+    out = 26.0 * p.copy()
+    P = p.reshape(n, n, n)
+    O = out.reshape(n, n, n)
+    for dx, dy, dz in neighbor_offsets():
+        xs = slice(max(0, -dx), n - max(0, dx))
+        ys = slice(max(0, -dy), n - max(0, dy))
+        zs = slice(max(0, -dz), n - max(0, dz))
+        xd = slice(max(0, dx), n - max(0, -dx))
+        yd = slice(max(0, dy), n - max(0, -dy))
+        zd = slice(max(0, dz), n - max(0, -dz))
+        O[xd, yd, zd] -= P[xs, ys, zs]
+    return out
+
+
+# ----------------------------------------------------------------- scalar CG
+
+def trace_cg(n: int = 8, iters: int = 5, cache=None, seed: int = 0):
+    """Scalar-traced CG; returns (eDAG, residual_history)."""
+    tr = Tracer(cache=cache)
+    N = n ** 3
+    b_np = build_problem(n, seed)
+    offs = neighbor_offsets()
+
+    b = tr.array(b_np, "b")
+    x = tr.zeros(N, "x")
+    r = tr.zeros(N, "r")
+    p = tr.zeros(N, "p")
+    Ap = tr.zeros(N, "Ap")
+
+    # r = b; p = b  (x0 = 0)
+    for i in range(N):
+        v = b.load(i)
+        r.store(i, v)
+        p.store(i, v)
+
+    def dot(u, v):
+        acc = tr.const(0.0)
+        for i in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', u.load(i), v.load(i)))
+        return acc
+
+    def spmv():
+        for ix in range(n):
+            for iy in range(n):
+                for iz in range(n):
+                    i = _nidx(ix, iy, iz, n)
+                    acc = tr.alu('*', tr.const(26.0), p.load(i))
+                    for dx, dy, dz in offs:
+                        jx, jy, jz = ix + dx, iy + dy, iz + dz
+                        if 0 <= jx < n and 0 <= jy < n and 0 <= jz < n:
+                            acc = tr.alu('-', acc, p.load(_nidx(jx, jy, jz, n)))
+                    Ap.store(i, acc)
+
+    res = []
+    rs_old = dot(r, r)
+    for _ in range(iters):
+        spmv()
+        pAp = dot(p, Ap)
+        alpha = tr.alu(lambda a, c: a / c if abs(c) > 1e-30 else 0.0,
+                       rs_old, pAp, label="div")
+        for i in range(N):
+            x.store(i, tr.alu('+', x.load(i), tr.alu('*', alpha, p.load(i))))
+        for i in range(N):
+            r.store(i, tr.alu('-', r.load(i), tr.alu('*', alpha, Ap.load(i))))
+        rs_new = dot(r, r)
+        beta = tr.alu(lambda a, c: a / c if abs(c) > 1e-30 else 0.0,
+                      rs_new, rs_old, label="div")
+        for i in range(N):
+            p.store(i, tr.alu('+', r.load(i), tr.alu('*', beta, p.load(i))))
+        rs_old = rs_new
+        res.append(float(rs_new.val))
+    return tr.edag, res
+
+
+# -------------------------------------------------------------------- JAX CG
+
+def spmv_jax(p, n: int):
+    P = p.reshape(n, n, n)
+    out = 26.0 * P
+    for dx, dy, dz in neighbor_offsets():
+        shifted = jnp.roll(P, (dx, dy, dz), axis=(0, 1, 2))
+        # zero out the wrapped-around halo
+        mask = jnp.ones((n, n, n), dtype=p.dtype)
+        if dx:
+            mask = mask.at[(slice(0, 1) if dx > 0 else slice(n - 1, n))].set(0)
+        if dy:
+            mask = mask.at[:, (slice(0, 1) if dy > 0 else slice(n - 1, n))].set(0)
+        if dz:
+            mask = mask.at[:, :, (slice(0, 1) if dz > 0 else slice(n - 1, n))].set(0)
+        out = out - shifted * mask
+    return out.reshape(-1)
+
+
+def cg_jax(b, n: int, iters: int):
+    def body(carry, _):
+        x, r, p, rs_old = carry
+        Ap = spmv_jax(p, n)
+        alpha = rs_old / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / rs_old) * p
+        return (x, r, p, rs_new), rs_new
+    x0 = jnp.zeros_like(b)
+    (x, r, p, _), hist = jax.lax.scan(body, (x0, b, b, jnp.vdot(b, b)),
+                                      None, length=iters)
+    return x, hist
+
+
+def reference_solution(n: int, iters: int, seed: int = 0):
+    """NumPy CG for cross-validation of the traced and JAX versions."""
+    b = build_problem(n, seed)
+    x = np.zeros_like(b)
+    r = b.copy(); p = b.copy(); rs_old = r @ r
+    hist = []
+    for _ in range(iters):
+        Ap = spmv_numpy(p, n)
+        alpha = rs_old / (p @ Ap)
+        x += alpha * p
+        r -= alpha * Ap
+        rs_new = r @ r
+        p = r + (rs_new / rs_old) * p
+        rs_old = rs_new
+        hist.append(rs_new)
+    return x, np.array(hist)

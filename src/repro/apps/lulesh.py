@@ -1,0 +1,124 @@
+"""LULESH-style explicit shock hydrodynamics proxy (§5.3).
+
+LULESH 2.0's LagrangeLeapFrog step is approximated by its memory-system
+signature: per-element gathers of 8 corner nodes, element-centered physics,
+scatter-adds of nodal forces (read-modify-write through memory — elements
+sharing a node serialize, the irregular-dependence pattern the paper
+highlights), then nodal integration and element quantity updates.  The
+physics is simplified (this is a proxy, noted in DESIGN.md); the access
+pattern — gather / compute / scatter-add / update — is the LULESH kernel
+skeleton.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.trace import Tracer
+
+
+def mesh_connectivity(ne: int):
+    """Hex mesh: (ne)^3 elements over (ne+1)^3 nodes; returns (nelem, 8) ids."""
+    nn = ne + 1
+    conn = np.zeros((ne ** 3, 8), dtype=np.int64)
+    e = 0
+    for i in range(ne):
+        for j in range(ne):
+            for k in range(ne):
+                n0 = (i * nn + j) * nn + k
+                conn[e] = [n0, n0 + 1, n0 + nn, n0 + nn + 1,
+                           n0 + nn * nn, n0 + nn * nn + 1,
+                           n0 + nn * nn + nn, n0 + nn * nn + nn + 1]
+                e += 1
+    return conn
+
+
+# ------------------------------------------------------------------- scalar
+
+def trace_step(ne: int = 6, iters: int = 2, cache=None, seed: int = 0):
+    """Scalar-traced leapfrog steps; returns the eDAG."""
+    rng = np.random.default_rng(seed)
+    conn = mesh_connectivity(ne)
+    nnode = (ne + 1) ** 3
+    nelem = ne ** 3
+    tr = Tracer(cache=cache)
+
+    X = tr.array(rng.standard_normal(nnode), "x")       # 1D coords per axis,
+    V = tr.array(np.zeros(nnode), "v")                  # flattened physics
+    F = tr.zeros(nnode, "f")
+    M = tr.array(np.abs(rng.standard_normal(nnode)) + 1.0, "m")
+    E = tr.array(np.abs(rng.standard_normal(nelem)) + 1.0, "e")   # energy
+    Q = tr.zeros(nelem, "q")                                      # viscosity
+    dt = tr.const(1e-3)
+
+    for _ in range(iters):
+        # 1. CalcForceForNodes: gather corners, element physics, scatter-add
+        for e in range(nelem):
+            corner_vals = [X.load(int(c)) for c in conn[e]]
+            vol = corner_vals[0]
+            for cv in corner_vals[1:]:
+                vol = tr.alu('+', vol, cv)
+            en = E.load(e)
+            press = tr.alu('*', en, vol)
+            qv = Q.load(e)
+            press = tr.alu('+', press, qv)
+            share = tr.alu('*', press, tr.const(0.125))
+            for c in conn[e]:
+                f = F.load(int(c))
+                F.store(int(c), tr.alu('+', f, share))   # RMW through memory
+        # 2. nodal integration: a = F/m; v += a dt; x += v dt; F = 0
+        for nd in range(nnode):
+            a = tr.alu('/', F.load(nd), M.load(nd))
+            v = tr.alu('+', V.load(nd), tr.alu('*', a, dt))
+            V.store(nd, v)
+            X.store(nd, tr.alu('+', X.load(nd), tr.alu('*', v, dt)))
+            F.store(nd, tr.const(0.0))
+        # 3. CalcQForElems: gather velocities, update element viscosity/energy
+        for e in range(nelem):
+            g = V.load(int(conn[e][0]))
+            for c in conn[e][1:]:
+                g = tr.alu('-', g, V.load(int(c)))
+            Q.store(e, tr.alu('*', g, g))
+            E.store(e, tr.alu('+', E.load(e), tr.alu('*', Q.load(e), dt)))
+    return tr.edag
+
+
+# ---------------------------------------------------------------------- JAX
+
+def make_jax_step(ne: int):
+    conn = jnp.asarray(mesh_connectivity(ne))
+
+    def step(state, _):
+        x, v, e, q, m = state
+        corners = x[conn]                                 # (nelem, 8) gather
+        vol = corners.sum(axis=1)
+        press = e * vol + q
+        share = press * 0.125
+        f = jnp.zeros_like(x).at[conn.reshape(-1)].add(
+            jnp.repeat(share, 8))                         # scatter-add
+        a = f / m
+        v = v + a * 1e-3
+        x = x + v * 1e-3
+        gv = v[conn]
+        g = gv[:, 0] - gv[:, 1:].sum(axis=1)
+        q = g * g
+        e = e + q * 1e-3
+        return (x, v, e, q, m), jnp.sum(e)
+
+    return step
+
+
+def run_jax(ne: int = 6, iters: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    nnode = (ne + 1) ** 3
+    nelem = ne ** 3
+    state = (jnp.asarray(rng.standard_normal(nnode)),
+             jnp.zeros(nnode),
+             jnp.asarray(np.abs(rng.standard_normal(nelem)) + 1.0),
+             jnp.zeros(nelem),
+             jnp.asarray(np.abs(rng.standard_normal(nnode)) + 1.0))
+    step = make_jax_step(ne)
+    state, hist = jax.lax.scan(step, state, None, length=iters)
+    return state, hist

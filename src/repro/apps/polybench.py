@@ -1,0 +1,386 @@
+"""PolyBench-C linear-algebra kernels (§4, §5.1) against the scalar trace API.
+
+The 15 kernels of the paper's Fig 10-13 study plus cholesky/durbin.  All
+follow the PolyBench C reference semantics with all problem dimensions = N
+(the paper's 'small' preset collapses similarly).  Each traced load/store
+hits the cache model with a real byte address, so W/D/lambda/Lambda/B can be
+computed exactly as in the paper.
+
+JAX twins (``jax_kernels``) carry the same math as jittable functions for
+jaxpr/HLO-level analysis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core.trace import Tracer, TracedArray, Value
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape)
+
+
+# --------------------------------------------------------------------------
+# scalar (traced) kernels; each fn(tr, N, rng) builds arrays and runs kernel
+# --------------------------------------------------------------------------
+
+def k_2mm(tr: Tracer, N: int, rng) -> None:
+    A, B, C, D = (tr.array(_rand(rng, N, N), n) for n in "ABCD")
+    tmp = tr.zeros((N, N), "tmp")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(N):
+            acc = tr.const(0.0)
+            for k in range(N):
+                a = A.load(i, k); b = B.load(k, j)
+                acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', alpha, a), b))
+            tmp.store((i, j), acc)
+    for i in range(N):
+        for j in range(N):
+            d = tr.alu('*', D.load(i, j), beta)
+            for k in range(N):
+                t = tmp.load(i, k); c = C.load(k, j)
+                d = tr.alu('+', d, tr.alu('*', t, c))
+            D.store((i, j), d)
+
+
+def k_3mm(tr: Tracer, N: int, rng) -> None:
+    A, B, C, D = (tr.array(_rand(rng, N, N), n) for n in "ABCD")
+    E, F, G = tr.zeros((N, N), "E"), tr.zeros((N, N), "F"), tr.zeros((N, N), "G")
+    def mm(X, Y, Z):
+        for i in range(N):
+            for j in range(N):
+                acc = tr.const(0.0)
+                for k in range(N):
+                    acc = tr.alu('+', acc, tr.alu('*', X.load(i, k), Y.load(k, j)))
+                Z.store((i, j), acc)
+    mm(A, B, E); mm(C, D, F); mm(E, F, G)
+
+
+def k_atax(tr: Tracer, N: int, rng) -> None:
+    A = tr.array(_rand(rng, N, N), "A")
+    x = tr.array(_rand(rng, N), "x")
+    y, tmp = tr.zeros(N, "y"), tr.zeros(N, "tmp")
+    for i in range(N):
+        acc = tr.const(0.0)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), x.load(j)))
+        tmp.store(i, acc)
+    for j in range(N):
+        acc = y.load(j)
+        for i in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), tmp.load(i)))
+        y.store(j, acc)
+
+
+def k_bicg(tr: Tracer, N: int, rng) -> None:
+    A = tr.array(_rand(rng, N, N), "A")
+    p, r = tr.array(_rand(rng, N), "p"), tr.array(_rand(rng, N), "r")
+    q, s = tr.zeros(N, "q"), tr.zeros(N, "s")
+    for i in range(N):
+        acc = tr.const(0.0)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), p.load(j)))
+        q.store(i, acc)
+    for j in range(N):
+        acc = tr.const(0.0)
+        for i in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), r.load(i)))
+        s.store(j, acc)
+
+
+def k_doitgen(tr: Tracer, N: int, rng) -> None:
+    R = max(2, N // 2)
+    A = tr.array(_rand(rng, R, R, N), "A")
+    C4 = tr.array(_rand(rng, N, N), "C4")
+    s = tr.zeros(N, "sum")
+    for r in range(R):
+        for q in range(R):
+            for p in range(N):
+                acc = tr.const(0.0)
+                for k in range(N):
+                    acc = tr.alu('+', acc, tr.alu('*', A.load(r, q, k), C4.load(k, p)))
+                s.store(p, acc)
+            for p in range(N):
+                A.store((r, q, p), s.load(p))
+
+
+def k_mvt(tr: Tracer, N: int, rng) -> None:
+    A = tr.array(_rand(rng, N, N), "A")
+    x1, x2 = tr.array(_rand(rng, N), "x1"), tr.array(_rand(rng, N), "x2")
+    y1, y2 = tr.array(_rand(rng, N), "y1"), tr.array(_rand(rng, N), "y2")
+    for i in range(N):
+        acc = x1.load(i)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), y1.load(j)))
+        x1.store(i, acc)
+    for i in range(N):
+        acc = x2.load(i)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', A.load(j, i), y2.load(j)))
+        x2.store(i, acc)
+
+
+def k_gemm(tr: Tracer, N: int, rng) -> None:
+    A, B, C = (tr.array(_rand(rng, N, N), n) for n in "ABC")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(N):
+            acc = tr.alu('*', C.load(i, j), beta)
+            for k in range(N):
+                acc = tr.alu('+', acc,
+                             tr.alu('*', tr.alu('*', alpha, A.load(i, k)), B.load(k, j)))
+            C.store((i, j), acc)
+
+
+def k_gemver(tr: Tracer, N: int, rng) -> None:
+    A = tr.array(_rand(rng, N, N), "A")
+    u1, v1, u2, v2, y, z = (tr.array(_rand(rng, N), n)
+                            for n in ("u1", "v1", "u2", "v2", "y", "z"))
+    x, w = tr.zeros(N, "x"), tr.zeros(N, "w")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(N):
+            a = A.load(i, j)
+            a = tr.alu('+', a, tr.alu('*', u1.load(i), v1.load(j)))
+            a = tr.alu('+', a, tr.alu('*', u2.load(i), v2.load(j)))
+            A.store((i, j), a)
+    for i in range(N):
+        acc = x.load(i)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', beta, A.load(j, i)), y.load(j)))
+        x.store(i, acc)
+    for i in range(N):
+        x.store(i, tr.alu('+', x.load(i), z.load(i)))
+    for i in range(N):
+        acc = w.load(i)
+        for j in range(N):
+            acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', alpha, A.load(i, j)), x.load(j)))
+        w.store(i, acc)
+
+
+def k_gesummv(tr: Tracer, N: int, rng) -> None:
+    A, B = tr.array(_rand(rng, N, N), "A"), tr.array(_rand(rng, N, N), "B")
+    x = tr.array(_rand(rng, N), "x")
+    y = tr.zeros(N, "y")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        t = tr.const(0.0); yv = tr.const(0.0)
+        for j in range(N):
+            t = tr.alu('+', t, tr.alu('*', A.load(i, j), x.load(j)))
+            yv = tr.alu('+', yv, tr.alu('*', B.load(i, j), x.load(j)))
+        y.store(i, tr.alu('+', tr.alu('*', alpha, t), tr.alu('*', beta, yv)))
+
+
+def k_symm(tr: Tracer, N: int, rng) -> None:
+    A, B, C = (tr.array(_rand(rng, N, N), n) for n in "ABC")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(N):
+            temp2 = tr.const(0.0)
+            for k in range(i):
+                ck = C.load(k, j)
+                ck = tr.alu('+', ck, tr.alu('*', tr.alu('*', alpha, B.load(i, j)), A.load(i, k)))
+                C.store((k, j), ck)
+                temp2 = tr.alu('+', temp2, tr.alu('*', B.load(k, j), A.load(i, k)))
+            cij = tr.alu('*', beta, C.load(i, j))
+            cij = tr.alu('+', cij, tr.alu('*', tr.alu('*', alpha, B.load(i, j)), A.load(i, i)))
+            cij = tr.alu('+', cij, tr.alu('*', alpha, temp2))
+            C.store((i, j), cij)
+
+
+def k_syr2k(tr: Tracer, N: int, rng) -> None:
+    A, B, C = (tr.array(_rand(rng, N, N), n) for n in "ABC")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(i + 1):
+            C.store((i, j), tr.alu('*', C.load(i, j), beta))
+        for k in range(N):
+            for j in range(i + 1):
+                c = C.load(i, j)
+                c = tr.alu('+', c, tr.alu('*', tr.alu('*', A.load(j, k), alpha), B.load(i, k)))
+                c = tr.alu('+', c, tr.alu('*', tr.alu('*', B.load(j, k), alpha), A.load(i, k)))
+                C.store((i, j), c)
+
+
+def k_syrk(tr: Tracer, N: int, rng) -> None:
+    A, C = tr.array(_rand(rng, N, N), "A"), tr.array(_rand(rng, N, N), "C")
+    alpha, beta = tr.const(1.5), tr.const(1.2)
+    for i in range(N):
+        for j in range(i + 1):
+            C.store((i, j), tr.alu('*', C.load(i, j), beta))
+        for k in range(N):
+            for j in range(i + 1):
+                c = C.load(i, j)
+                c = tr.alu('+', c, tr.alu('*', tr.alu('*', alpha, A.load(i, k)), A.load(j, k)))
+                C.store((i, j), c)
+
+
+def k_trmm(tr: Tracer, N: int, rng) -> None:
+    """Fig 14: B := alpha * A^T * B, A unit lower triangular."""
+    A, B = tr.array(_rand(rng, N, N), "A"), tr.array(_rand(rng, N, N), "B")
+    alpha = tr.const(1.5)
+    for i in range(N):
+        for j in range(N):
+            b = B.load(i, j)
+            for k in range(i + 1, N):
+                b = tr.alu('+', b, tr.alu('*', A.load(k, i), B.load(k, j)))
+            B.store((i, j), tr.alu('*', alpha, b))
+
+
+def k_lu(tr: Tracer, N: int, rng) -> None:
+    """In-place LU decomposition (Fig 9's kernel) — loop-carried RAW chains."""
+    M = _rand(rng, N, N) + N * np.eye(N)         # diagonally dominant
+    A = tr.array(M, "A")
+    for i in range(N):
+        for j in range(i):
+            a = A.load(i, j)
+            for k in range(j):
+                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(k, j)))
+            A.store((i, j), tr.alu('/', a, A.load(j, j)))
+        for j in range(i, N):
+            a = A.load(i, j)
+            for k in range(i):
+                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(k, j)))
+            A.store((i, j), a)
+
+
+def k_trisolv(tr: Tracer, N: int, rng) -> None:
+    """Forward substitution — inherently sequential."""
+    L = tr.array(np.tril(_rand(rng, N, N)) + N * np.eye(N), "L")
+    b = tr.array(_rand(rng, N), "b")
+    x = tr.zeros(N, "x")
+    for i in range(N):
+        acc = b.load(i)
+        for j in range(i):
+            acc = tr.alu('-', acc, tr.alu('*', L.load(i, j), x.load(j)))
+        x.store(i, tr.alu('/', acc, L.load(i, i)))
+
+
+def k_cholesky(tr: Tracer, N: int, rng) -> None:
+    M = _rand(rng, N, N)
+    M = M @ M.T + N * np.eye(N)
+    A = tr.array(M, "A")
+    import math
+    for i in range(N):
+        for j in range(i):
+            a = A.load(i, j)
+            for k in range(j):
+                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(j, k)))
+            A.store((i, j), tr.alu('/', a, A.load(j, j)))
+        a = A.load(i, i)
+        for k in range(i):
+            a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(i, k)))
+        A.store((i, i), tr.alu(lambda v: math.sqrt(abs(v)) + 1e-12, a, label="sqrt"))
+
+
+def k_durbin(tr: Tracer, N: int, rng) -> None:
+    r = tr.array(_rand(rng, N), "r")
+    y, z = tr.zeros(N, "y"), tr.zeros(N, "z")
+    y.store(0, tr.alu(lambda v: -v, r.load(0), label="neg"))
+    beta, alpha = tr.const(1.0), tr.alu(lambda v: -v, r.load(0), label="neg")
+    for k in range(1, N):
+        beta = tr.alu('*', tr.alu(lambda a: 1 - a * a, alpha, label="1-a2"), beta)
+        acc = tr.const(0.0)
+        for i in range(k):
+            acc = tr.alu('+', acc, tr.alu('*', r.load(k - i - 1), y.load(i)))
+        alpha = tr.alu(lambda s, rk, b: -(rk + s) / (b if abs(b) > 1e-9 else 1e-9),
+                       acc, r.load(k), beta, label="alpha")
+        for i in range(k):
+            z.store(i, tr.alu('+', y.load(i), tr.alu('*', alpha, y.load(k - i - 1))))
+        for i in range(k):
+            y.store(i, z.load(i))
+        y.store(k, alpha)
+
+
+def k_trmm_spill(tr: Tracer, N: int, rng) -> None:
+    """trmm compiled under register pressure (§5.1, Fig 14 discussion): the
+    accumulator B[i][j] is spilled, i.e. every k-iteration round-trips it
+    through memory (load-fma-store), creating the extraneous load/store
+    dependence chains that give trmm the fastest-growing memory depth in the
+    paper's Fig 13."""
+    A, B = tr.array(_rand(rng, N, N), "A"), tr.array(_rand(rng, N, N), "B")
+    alpha = tr.const(1.5)
+    for i in range(N):
+        for j in range(N):
+            for k in range(i + 1, N):
+                b = B.load(i, j)                     # spilled accumulator:
+                b = tr.alu('+', b, tr.alu('*', A.load(k, i), B.load(k, j)))
+                B.store((i, j), b)                   # ...store every iter
+            B.store((i, j), tr.alu('*', alpha, B.load(i, j)))
+
+
+SCALAR_KERNELS = {
+    "2mm": k_2mm, "3mm": k_3mm, "atax": k_atax, "bicg": k_bicg,
+    "doitgen": k_doitgen, "mvt": k_mvt, "gemm": k_gemm, "gemver": k_gemver,
+    "gesummv": k_gesummv, "symm": k_symm, "syr2k": k_syr2k, "syrk": k_syrk,
+    "trmm": k_trmm, "lu": k_lu, "trisolv": k_trisolv,
+    "cholesky": k_cholesky, "durbin": k_durbin, "trmm_spill": k_trmm_spill,
+}
+
+# the paper's 15 linear-algebra benchmarks (Fig 10-13)
+PAPER_15 = ["2mm", "3mm", "atax", "bicg", "doitgen", "mvt", "gemm", "gemver",
+            "gesummv", "symm", "syr2k", "syrk", "trmm", "lu", "trisolv"]
+
+
+def trace_kernel(name: str, N: int, cache=None, max_regs=None,
+                 false_deps: bool = False, seed: int = 0):
+    """Run one kernel under the tracer; returns the finalized eDAG."""
+    rng = np.random.default_rng(seed)
+    tr = Tracer(cache=cache, max_regs=max_regs, false_deps=false_deps)
+    SCALAR_KERNELS[name](tr, N, rng)
+    return tr.edag
+
+
+# --------------------------------------------------------------------------
+# JAX twins (same math, jittable) for jaxpr/HLO analysis
+# --------------------------------------------------------------------------
+
+def j_2mm(A, B, C, D, alpha=1.5, beta=1.2):
+    return (alpha * A @ B) @ C + beta * D
+
+def j_3mm(A, B, C, D):
+    return (A @ B) @ (C @ D)
+
+def j_atax(A, x):
+    return A.T @ (A @ x)
+
+def j_bicg(A, p, r):
+    return A @ p, A.T @ r
+
+def j_mvt(A, x1, x2, y1, y2):
+    return x1 + A @ y1, x2 + A.T @ y2
+
+def j_gemm(A, B, C, alpha=1.5, beta=1.2):
+    return alpha * A @ B + beta * C
+
+def j_gemver(A, u1, v1, u2, v2, y, z, alpha=1.5, beta=1.2):
+    A = A + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x = beta * (A.T @ y) + z
+    return A, x, alpha * (A @ x)
+
+def j_gesummv(A, B, x, alpha=1.5, beta=1.2):
+    return alpha * (A @ x) + beta * (B @ x)
+
+def j_syrk(A, C, alpha=1.5, beta=1.2):
+    return alpha * A @ A.T + beta * C
+
+def j_syr2k(A, B, C, alpha=1.5, beta=1.2):
+    return alpha * (A @ B.T + B @ A.T) + beta * C
+
+def j_trisolv(L, b):
+    import jax
+    def body(x, i):
+        xi = (b[i] - L[i] @ x) / L[i, i]
+        return x.at[i].set(xi), None
+    x0 = jnp.zeros_like(b)
+    x, _ = jax.lax.scan(body, x0, jnp.arange(b.shape[0]))
+    return x
+
+JAX_KERNELS = {
+    "2mm": j_2mm, "3mm": j_3mm, "atax": j_atax, "bicg": j_bicg,
+    "mvt": j_mvt, "gemm": j_gemm, "gemver": j_gemver, "gesummv": j_gesummv,
+    "syrk": j_syrk, "syr2k": j_syr2k, "trisolv": j_trisolv,
+}

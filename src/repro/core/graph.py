@@ -1,0 +1,198 @@
+"""Execution DAG (eDAG) — the paper's central data structure (§2.1, §2.2, §3.3.1).
+
+Vertices are executed operations (instructions in the scalar frontend, jaxpr
+equations or HLO ops in the JAX frontends); edges are *true* (RAW) data
+dependencies.  The structure is append-only and is finalized into flat numpy
+arrays; all analyses (T1, T-inf, memory layering, start/finish schedule) are
+single topological passes, exploiting the invariant that vertices are inserted
+in a topological order (every edge satisfies src < dst).
+"""
+from __future__ import annotations
+
+import numpy as np
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+@dataclass
+class MemLayering:
+    """Result of the §3.3.1 layer decomposition.
+
+    ``level[v]`` is the number of memory vertices on the heaviest
+    (memory-vertex-count) path ending at ``v``, inclusive of ``v`` when it is
+    itself a memory vertex.  Memory vertex ``v`` therefore belongs to layer
+    ``level[v]`` (1-based); ``depth`` is the paper's memory depth D and
+    ``work`` its memory work W.  ``layer_sizes[i]`` is W_{i+1}.
+    """
+
+    level: np.ndarray
+    depth: int
+    work: int
+    layer_sizes: np.ndarray
+
+    @property
+    def D(self) -> int:  # noqa: N802 - paper notation
+        return self.depth
+
+    @property
+    def W(self) -> int:  # noqa: N802 - paper notation
+        return self.work
+
+
+class EDag:
+    """Append-only execution DAG with topological-order analyses."""
+
+    def __init__(self) -> None:
+        self._cost: list = []
+        self._is_mem: list = []
+        self._nbytes: list = []
+        self._label: list = []
+        self._src: list = []
+        self._dst: list = []
+        self._finalized = False
+        self._indptr: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------ build
+    def add_vertex(self, cost: float = 1.0, is_mem: bool = False,
+                   nbytes: float = 0.0, label: str = "") -> int:
+        """Add a vertex; returns its id.  Ids are assigned in insertion order."""
+        vid = len(self._cost)
+        self._cost.append(float(cost))
+        self._is_mem.append(bool(is_mem))
+        self._nbytes.append(float(nbytes))
+        self._label.append(label)
+        self._finalized = False
+        return vid
+
+    def add_edge(self, u: int, v: int) -> None:
+        """Add the true-dependency edge u -> v.  Requires u < v (topo insert)."""
+        if not (0 <= u < v < len(self._cost)):
+            raise ValueError(f"edge ({u},{v}) violates topological insertion order")
+        self._src.append(u)
+        self._dst.append(v)
+        self._finalized = False
+
+    # --------------------------------------------------------------- finalize
+    def _finalize(self) -> None:
+        if self._finalized:
+            return
+        self.cost = np.asarray(self._cost, dtype=np.float64)
+        self.is_mem = np.asarray(self._is_mem, dtype=bool)
+        self.nbytes = np.asarray(self._nbytes, dtype=np.float64)
+        src = np.asarray(self._src, dtype=np.int64)
+        dst = np.asarray(self._dst, dtype=np.int64)
+        if len(dst) and np.any(np.diff(dst) < 0):       # keep CSR by dst
+            order = np.argsort(dst, kind="stable")
+            src, dst = src[order], dst[order]
+        self.src, self.dst = src, dst
+        n = len(self.cost)
+        self._indptr = np.zeros(n + 1, dtype=np.int64)
+        if len(dst):
+            np.add.at(self._indptr, dst + 1, 1)
+        np.cumsum(self._indptr, out=self._indptr)
+        self._finalized = True
+
+    # ------------------------------------------------------------- properties
+    @property
+    def n_vertices(self) -> int:
+        return len(self._cost)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self._src)
+
+    def labels(self) -> Sequence[str]:
+        return self._label
+
+    def preds(self, v: int) -> np.ndarray:
+        self._finalize()
+        lo, hi = self._indptr[v], self._indptr[v + 1]
+        return self.src[lo:hi]
+
+    # -------------------------------------------------------------- analyses
+    def _accumulate(self, base: np.ndarray) -> np.ndarray:
+        """F[v] = base[v] + max(F[u] for u in preds(v), default 0).
+
+        One pass in topological (insertion) order.  This single kernel yields
+        finish times (base=cost), memory levels (base=is_mem) and other
+        longest-path style recurrences.
+        """
+        self._finalize()
+        F = base.astype(np.float64).tolist()
+        base_l = base.tolist()
+        for s, d in zip(self._src, self._dst):
+            nf = F[s] + base_l[d]
+            if nf > F[d]:
+                F[d] = nf
+        return np.asarray(F, dtype=np.float64)
+
+    def t1(self) -> float:
+        """Total work T1 = sum of vertex costs (§2.2)."""
+        self._finalize()
+        return float(self.cost.sum())
+
+    def finish_times(self, cost: Optional[np.ndarray] = None) -> np.ndarray:
+        self._finalize()
+        return self._accumulate(self.cost if cost is None else cost)
+
+    def t_inf(self, cost: Optional[np.ndarray] = None) -> float:
+        """Span / critical-path length T-inf (§2.2)."""
+        F = self.finish_times(cost)
+        return float(F.max()) if len(F) else 0.0
+
+    def start_finish(self, cost: Optional[np.ndarray] = None):
+        """Eq 6-7: greedy unlimited-parallelism start/finish times S(v), F(v)."""
+        self._finalize()
+        c = self.cost if cost is None else np.asarray(cost, dtype=np.float64)
+        F = self._accumulate(c)
+        S = F - c
+        return S, F
+
+    def parallelism(self) -> float:
+        """Average degree of parallelism T1 / T-inf (§2.2)."""
+        ti = self.t_inf()
+        return self.t1() / ti if ti > 0 else 0.0
+
+    def mem_layers(self, is_mem: Optional[np.ndarray] = None) -> MemLayering:
+        """§3.3.1 layer decomposition of memory-access vertices.
+
+        ``is_mem`` may override the stored memory classification (the HLO
+        frontend uses this to layer *collectives on one mesh axis*)."""
+        self._finalize()
+        mem = self.is_mem if is_mem is None else np.asarray(is_mem, dtype=bool)
+        level = self._accumulate(mem.astype(np.float64)).astype(np.int64)
+        mem_levels = level[mem]
+        depth = int(mem_levels.max()) if mem_levels.size else 0
+        work = int(mem.sum())
+        sizes = (np.bincount(mem_levels, minlength=depth + 1)[1:]
+                 if depth else np.zeros(0, dtype=np.int64))
+        return MemLayering(level=level, depth=depth, work=work, layer_sizes=sizes)
+
+    def critical_path(self, cost: Optional[np.ndarray] = None) -> list:
+        """One critical path (vertex ids, topologically ordered)."""
+        self._finalize()
+        c = self.cost if cost is None else np.asarray(cost, dtype=np.float64)
+        F = self._accumulate(c)
+        if not len(F):
+            return []
+        v = int(np.argmax(F))
+        path = [v]
+        while True:
+            ps = self.preds(v)
+            if not len(ps):
+                break
+            want = F[v] - c[v]
+            u = int(ps[np.argmax(F[ps])])
+            if abs(F[u] - want) > 1e-9 and F[u] < want - 1e-9:
+                break  # no predecessor on the critical path (shouldn't happen)
+            v = u
+            path.append(v)
+        path.reverse()
+        return path
+
+    # ------------------------------------------------------------------ misc
+    def subgraph_stats(self) -> dict:
+        self._finalize()
+        return dict(n_vertices=self.n_vertices, n_edges=self.n_edges,
+                    n_mem=int(self.is_mem.sum()),
+                    bytes_total=float(self.nbytes.sum()))

@@ -1,0 +1,112 @@
+"""Latency-sensitivity and bandwidth metrics (§3.3.2-3.3.3, Eq 3-7)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .cost import CostModelParams, non_memory_cost
+from .graph import EDag
+
+
+# ------------------------------------------------------------------- Eq 3-4
+
+def lambda_abs(W: float, D: float, m: int) -> float:
+    """Eq 3: absolute memory latency sensitivity  (W-D)/m + D.
+
+    Derivative of the Eq-2 upper bound w.r.t. alpha; equals
+    W/m + (1-1/m)*D after rearranging (§3.3.2)."""
+    return (W - D) / m + D
+
+
+def lambda_rel(lam: float, alpha0: float, C: float) -> float:
+    """Eq 4: relative sensitivity  Lambda = lambda / (lambda*alpha0 + C)."""
+    denom = lam * alpha0 + C
+    return lam / denom if denom > 0 else 0.0
+
+
+# --------------------------------------------------------------------- Eq 5
+
+def cost_vector(g: EDag, alpha: float, unit: float = 1.0) -> np.ndarray:
+    """Per-vertex execution times: alpha for RAM accesses, unit otherwise."""
+    g._finalize()
+    return np.where(g.is_mem, float(alpha), float(unit))
+
+
+def bandwidth_utilization(g: EDag, alpha: float, unit: float = 1.0,
+                          cycles_per_second: float = 1e9) -> float:
+    """Eq 5: B = sum_v w(v) / T_inf, in bytes/second at the given clock.
+
+    Only RAM-touching traffic counts as moved data (cache hits stay on chip).
+    The paper's tables report GB/s at 1 GHz (1 cycle == 1 ns)."""
+    g._finalize()
+    c = cost_vector(g, alpha, unit)
+    t_inf = g.t_inf(c)
+    if t_inf <= 0:
+        return 0.0
+    moved = float(g.nbytes[g.is_mem].sum())
+    return moved / t_inf * cycles_per_second
+
+
+# ------------------------------------------------------------------- Eq 6-7
+
+def data_movement_over_time(g: EDag, alpha: float, tau: float = 1.0,
+                            unit: float = 1.0):
+    """Eq 6-7: stratify the greedy schedule into ceil(T_inf/tau) phases and
+    sum the data moved by vertices active in each phase (Fig 9/15/16).
+
+    Returns (phase_times, U) where U[i] is bytes in flight during phase i."""
+    g._finalize()
+    c = cost_vector(g, alpha, unit)
+    S, F = g.start_finish(c)
+    t_inf = float(F.max()) if len(F) else 0.0
+    n_phases = int(np.ceil(t_inf / tau)) + 1
+    U = np.zeros(n_phases + 1, dtype=np.float64)
+    mem = g.is_mem
+    w = g.nbytes
+    # vertex v is active in phase i iff S(v) <= tau*i <= F(v)
+    lo = np.ceil(S[mem] / tau).astype(np.int64)
+    hi = np.floor(F[mem] / tau).astype(np.int64)
+    wv = w[mem]
+    # difference-array trick: +w at lo, -w after hi, then prefix sum
+    np.add.at(U, lo, wv)
+    np.add.at(U, np.minimum(hi + 1, n_phases), -wv)
+    U = np.cumsum(U)[:n_phases]
+    return np.arange(n_phases) * tau, U
+
+
+# ------------------------------------------------------------------ summary
+
+@dataclass
+class Report:
+    W: int
+    D: int
+    C: float
+    lam: float
+    Lam: float
+    B_gbs: float
+    t1: float
+    t_inf: float
+    parallelism: float
+    layer_sizes: np.ndarray
+
+    def row(self) -> dict:
+        return dict(W=self.W, D=self.D, C=self.C, lam=self.lam, Lam=self.Lam,
+                    B_gbs=self.B_gbs, t1=self.t1, t_inf=self.t_inf,
+                    parallelism=self.parallelism)
+
+
+def report(g: EDag, params: CostModelParams = CostModelParams()) -> Report:
+    """One-stop §3.3 report for an eDAG: W, D, C, lambda, Lambda, B."""
+    lay = g.mem_layers()
+    C = non_memory_cost(g, params.unit)
+    lam = lambda_abs(lay.W, lay.D, params.m)
+    Lam = lambda_rel(lam, params.alpha0, C)
+    B = bandwidth_utilization(g, params.alpha, params.unit) / 1e9
+    c = cost_vector(g, params.alpha, params.unit)
+    t_inf = g.t_inf(c)
+    t1 = float(c.sum())
+    return Report(W=lay.W, D=lay.D, C=C, lam=lam, Lam=Lam, B_gbs=B,
+                  t1=t1, t_inf=t_inf,
+                  parallelism=t1 / t_inf if t_inf else 0.0,
+                  layer_sizes=lay.layer_sizes)

@@ -1,0 +1,72 @@
+"""Latency sensitivity of compiled multi-pod steps (beyond-paper extension).
+
+Applies the paper's Eq 3-4 at datacenter granularity: the "memory accesses"
+are the collectives on one mesh axis, alpha is that axis's per-collective
+launch/fabric latency, and m is the number of concurrently-progressing
+collective channels per chip.  ``lambda_axis = (W_ax - D_ax)/m + D_ax`` is
+then d(step_time)/d(alpha_axis): how many microseconds a step loses per
+microsecond of added fabric latency on that axis — the capacity-planning
+number for resource disaggregation (paper §1's motivation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence, Tuple
+
+from .hlo import analyze_collectives
+from .metrics import lambda_abs, lambda_rel
+
+# Default per-collective latencies (seconds): intra-pod ICI hop vs inter-pod
+# DCI.  These are order-of-magnitude fabric constants, not measurements.
+DEFAULT_ALPHAS = {
+    "model": 1e-6,          # 1 us per ICI collective (tight ring)
+    "data": 2e-6,           # larger ring within pod
+    "data+model": 2e-6,
+    "pod": 10e-6,           # inter-pod DCI
+    "pod+data": 10e-6,
+    "pod+data+model": 10e-6,
+}
+
+
+@dataclass
+class AxisSensitivity:
+    axis: str
+    W: float                # collectives per step on this axis
+    D: float                # collective depth (chained) per step
+    bytes: float
+    lam: float              # d(step)/d(alpha_axis), dimensionless count
+    lam_seconds: float      # lam * alpha_axis: seconds lost per step now
+
+    def row(self):
+        return dict(axis=self.axis, W=self.W, D=self.D, bytes=self.bytes,
+                    lam=self.lam, lam_seconds=self.lam_seconds)
+
+
+def collective_sensitivity(hlo_text: str,
+                           mesh_axis_sizes: Sequence[Tuple[str, int]],
+                           m: int = 4,
+                           alphas: Dict[str, float] = None) -> dict:
+    """Per-axis lambda from a compiled module's HLO text."""
+    alphas = dict(DEFAULT_ALPHAS, **(alphas or {}))
+    stats = analyze_collectives(hlo_text, mesh_axis_sizes)
+    out = {}
+    for axis, st in stats["per_axis"].items():
+        lam = lambda_abs(st["count"], st["depth"], m)
+        a = alphas.get(axis, 5e-6)
+        out[axis] = AxisSensitivity(axis=axis, W=st["count"], D=st["depth"],
+                                    bytes=st["bytes"], lam=lam,
+                                    lam_seconds=lam * a)
+    return dict(per_axis=out, raw=stats)
+
+
+def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],
+                           step_seconds: float) -> dict:
+    """Relative sensitivity per axis: Eq 4 with C = everything that is not
+    this axis's collectives."""
+    out = {}
+    for axis, s in per_axis.items():
+        C = max(step_seconds - s.lam_seconds, 0.0)
+        # express alpha in seconds, so Lambda has units 1/second: the
+        # fractional slowdown per second of added per-collective latency.
+        out[axis] = lambda_rel(s.lam, s.lam_seconds / max(s.lam, 1e-12), C)
+    return out

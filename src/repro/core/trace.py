@@ -1,0 +1,348 @@
+"""Scalar trace frontend — the paper's Algorithm 1 (§3.1-3.2).
+
+Two entry points:
+
+1. ``build_edag_from_trace``: the *literal* Algorithm 1 — consumes an
+   instruction trace in the paper's format (Fig 5: ``insn ; data_addr``),
+   keeps a ``curr_vs`` map from storage location (register name or memory
+   address) to its last producing vertex, and adds true-dependency edges.
+   ``false_deps=True`` additionally keeps WAR/WAW edges (Fig 6a mode).
+
+2. ``Tracer``: an array-DSL tracing interpreter used to generate large traces
+   programmatically (PolyBench / HPCG / LULESH kernels).  It is the QEMU-TCG
+   plugin's stand-in: kernels are executed once in Python and every scalar
+   load/store/ALU op becomes a vertex with a real byte address, so the cache
+   model (§3.2) is address-accurate.  Registers are *virtual and unlimited*
+   (the paper's §7 wish), with an optional bounded register file that
+   reproduces spill-induced extra dependencies (§3.2.1, §5.1 trmm study).
+"""
+from __future__ import annotations
+
+import re
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cache import NoCache, make_cache
+from .graph import EDag
+
+
+# --------------------------------------------------------------------------
+# 1. Literal Algorithm 1 over a textual instruction trace (paper Fig 5 format)
+# --------------------------------------------------------------------------
+
+_LOADS = {"lb", "lh", "lw", "ld", "lbu", "lhu", "lwu", "flw", "fld"}
+_STORES = {"sb", "sh", "sw", "sd", "fsw", "fsd"}
+_BRANCHES = {"beq", "bne", "blt", "bge", "bltu", "bgeu", "beqz", "bnez"}
+_MEM_RE = re.compile(r"(-?\d+)\((\w+)\)")
+
+
+def _parse_insn(text: str):
+    """Returns (opcode, operand list)."""
+    parts = text.strip().split(None, 1)
+    op = parts[0]
+    ops = [o.strip() for o in parts[1].split(",")] if len(parts) > 1 else []
+    return op, ops
+
+
+def build_edag_from_trace(lines: Sequence[str], cache=None,
+                          false_deps: bool = False,
+                          line_bytes: int = 64) -> EDag:
+    """Algorithm 1 of the paper, over Fig-5-format trace lines.
+
+    dep_vals(v) are the registers read and (for loads) the memory address;
+    targets(v) are the registers/addresses written.  Only true (RAW) edges are
+    added unless ``false_deps``.
+    """
+    cache = cache or NoCache()
+    g = EDag()
+    curr_vs: dict = {}          # storage location -> last writer vertex
+    readers: dict = {}          # storage location -> vertices that read it
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        if ";" in line:
+            insn, addr_s = line.split(";", 1)
+            data_addr = int(addr_s.strip(), 16)
+        else:
+            insn, data_addr = line, None
+        op, ops = _parse_insn(insn)
+
+        dep_vals, targets = [], []
+        is_mem, nbytes = False, 0.0
+        if op in _LOADS:
+            rd = ops[0]
+            m = _MEM_RE.match(ops[1])
+            dep_vals.append(m.group(2))                     # address register
+            if data_addr is not None:
+                dep_vals.append(("M", data_addr))           # RAW through memory
+                hit = cache.access(data_addr, is_write=False)
+                is_mem = not hit
+                nbytes = 8.0 if op in ("ld", "fld") else 4.0
+            targets.append(rd)
+        elif op in _STORES:
+            rs2 = ops[0]
+            m = _MEM_RE.match(ops[1])
+            dep_vals += [rs2, m.group(2)]
+            if data_addr is not None:
+                hit = cache.access(data_addr, is_write=True)
+                is_mem = not hit
+                nbytes = 8.0 if op in ("sd", "fsd") else 4.0
+                targets.append(("M", data_addr))
+        elif op in _BRANCHES:
+            dep_vals += [o for o in ops[:-1] if not o.lstrip("-").isdigit()]
+        elif op == "li":
+            targets.append(ops[0])
+        elif op in ("mv", "fmv.d", "fmv.s", "sext.w"):
+            dep_vals.append(ops[1])
+            targets.append(ops[0])
+        elif op in ("j", "jal", "jalr", "ret", "nop"):
+            pass
+        else:                                               # ALU r-type / i-type
+            targets.append(ops[0])
+            for o in ops[1:]:
+                if not re.fullmatch(r"-?\d+", o):
+                    dep_vals.append(o)
+
+        v = g.add_vertex(cost=1.0, is_mem=is_mem, nbytes=nbytes, label=op)
+        deps = set()
+        for val in dep_vals:
+            if val == "zero":
+                continue
+            dep_v = curr_vs.get(val)
+            if dep_v is not None:
+                deps.add(dep_v)                             # RAW (true) edges
+        if false_deps:
+            for t in targets:
+                w = curr_vs.get(t)
+                if w is not None:
+                    deps.add(w)                             # WAW
+                for r in readers.get(t, ()):  # WAR
+                    deps.add(r)
+        for d in sorted(deps):
+            if d != v:
+                g.add_edge(d, v)
+        for val in dep_vals:
+            if val != "zero":
+                readers.setdefault(val, []).append(v)
+        for t in targets:
+            curr_vs[t] = v
+            readers[t] = []
+    return g
+
+
+# --------------------------------------------------------------------------
+# 2. Array-DSL tracing interpreter (programmatic trace generation at scale)
+# --------------------------------------------------------------------------
+
+class Value:
+    """A traced scalar: python value + id of the vertex that produced it."""
+
+    __slots__ = ("val", "vid")
+
+    def __init__(self, val, vid: Optional[int]):
+        self.val = val
+        self.vid = vid
+
+    def __repr__(self):
+        return f"Value({self.val}, v{self.vid})"
+
+
+class TracedArray:
+    """A numpy array whose element accesses are traced with real addresses."""
+
+    def __init__(self, tracer: "Tracer", arr: np.ndarray, name: str):
+        self.tr = tracer
+        self.arr = arr
+        self.name = name
+        self.base = tracer._alloc(arr.nbytes)
+        self.itemsize = arr.itemsize
+
+    def _addr(self, idx) -> int:
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        flat = int(np.ravel_multi_index(tuple(int(i) for i in idx), self.arr.shape))
+        return self.base + flat * self.itemsize
+
+    def load(self, *idx) -> Value:
+        """Load element; idx components may be ints or Values (pointer chase)."""
+        idx_vids = [i.vid for i in idx if isinstance(i, Value)]
+        idx = tuple(int(i.val) if isinstance(i, Value) else int(i) for i in idx)
+        addr = self._addr(idx)
+        return self.tr._load(addr, self.arr[idx], self.itemsize, idx_vids,
+                             label=f"ld {self.name}")
+
+    def store(self, idx, value) -> None:
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        idx_vids = [i.vid for i in idx if isinstance(i, Value)]
+        idx = tuple(int(i.val) if isinstance(i, Value) else int(i) for i in idx)
+        addr = self._addr(idx)
+        val = value.val if isinstance(value, Value) else value
+        self.arr[idx] = val
+        dep = value.vid if isinstance(value, Value) else None
+        self.tr._store(addr, dep, self.itemsize, idx_vids,
+                       label=f"st {self.name}")
+
+
+_OPS = {
+    "+": lambda a, b: a + b, "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b, "/": lambda a, b: a / b,
+    "max": max, "min": min,
+}
+
+
+class Tracer:
+    """Tracing interpreter emitting an eDAG (Algorithm 1 semantics).
+
+    * unlimited virtual registers by default (``max_regs=None``);
+    * ``max_regs=K`` simulates a bounded register file with LRU spilling:
+      evicted live values are written to a spill slot (a store vertex) and
+      transparently reloaded on next use (a load vertex), reproducing the
+      spill-induced dependence chains of §3.2.1 / §5.1;
+    * every load/store consults the cache model; misses become memory-access
+      vertices (is_mem=True).
+    """
+
+    def __init__(self, cache=None, max_regs: Optional[int] = None,
+                 false_deps: bool = False, spill_policy: str = "fifo"):
+        self.g = EDag()
+        self.cache = cache or NoCache()
+        self.false_deps = false_deps
+        self.max_regs = max_regs
+        # "fifo" evicts the oldest live range (Chaitin-style: longest live
+        # range spills first — this is what makes trmm's accumulator spill,
+        # §5.1); "lru" evicts the least recently touched value.
+        self.spill_policy = spill_policy
+        self._heap = 0x4000_0000
+        self._curr_vs: dict = {}         # memory address -> last store vertex
+        self._readers: dict = {}         # memory address -> reader vertices
+        # bounded-register-file emulation state
+        self._live: OrderedDict = OrderedDict()   # orig vid -> None
+        self._spill_addr: dict = {}      # orig vid -> spill address
+        self._resident: dict = {}        # orig vid -> currently usable vid
+
+    # ------------------------------------------------------------ allocation
+    def _alloc(self, nbytes: int) -> int:
+        base = self._heap
+        self._heap += (nbytes + 63) & ~63        # 64-byte align allocations
+        return base
+
+    def array(self, arr: np.ndarray, name: str = "") -> TracedArray:
+        return TracedArray(self, np.array(arr, copy=True), name)
+
+    def zeros(self, shape, name: str = "", dtype=np.float64) -> TracedArray:
+        return TracedArray(self, np.zeros(shape, dtype=dtype), name)
+
+    # -------------------------------------------------------- register model
+    def _touch(self, vid: int) -> int:
+        """Mark vid used; with a bounded register file, reload if spilled."""
+        if self.max_regs is None or vid is None:
+            return vid
+        cur = self._resident.get(vid, vid)
+        if cur in self._live:
+            if self.spill_policy == "lru":
+                self._live.move_to_end(cur)
+            return cur
+        # value was spilled: emit a reload depending on the spill store
+        addr = self._spill_addr[vid]
+        hit = self.cache.access(addr, is_write=False)
+        rv = self.g.add_vertex(cost=1.0, is_mem=not hit, nbytes=8.0,
+                               label="ld spill")
+        w = self._curr_vs.get(addr)
+        if w is not None:
+            self.g.add_edge(w, rv)
+        self._resident[vid] = rv
+        self._resident[rv] = rv
+        self._admit(rv, orig=vid)
+        return rv
+
+    def _admit(self, vid: int, orig: Optional[int] = None) -> None:
+        if self.max_regs is None:
+            return
+        while len(self._live) >= self.max_regs:
+            evict, _ = self._live.popitem(last=False)
+            # spill the evicted live value
+            addr = self._spill_addr.get(evict)
+            if addr is None:
+                addr = self._spill_addr[evict] = self._alloc(8)
+            # map back to original id so future reloads find the slot
+            for o, r in list(self._resident.items()):
+                if r == evict:
+                    self._spill_addr[o] = addr
+            hit = self.cache.access(addr, is_write=True)
+            sv = self.g.add_vertex(cost=1.0, is_mem=not hit, nbytes=8.0,
+                                   label="st spill")
+            self.g.add_edge(evict, sv) if evict < sv else None
+            self._curr_vs[addr] = sv
+        self._live[vid] = None
+
+    # ----------------------------------------------------------- vertex emit
+    def _load(self, addr: int, pyval, itemsize: int, idx_vids, label="ld") -> Value:
+        hit = self.cache.access(addr, is_write=False)
+        deps = set()
+        for iv in idx_vids:
+            iv2 = self._touch(iv)
+            if iv2 is not None:
+                deps.add(iv2)
+        w = self._curr_vs.get(addr)
+        if w is not None:
+            deps.add(w)
+        v = self.g.add_vertex(cost=1.0, is_mem=not hit,
+                              nbytes=float(itemsize), label=label)
+        for d in sorted(deps):
+            self.g.add_edge(d, v)
+        self._readers.setdefault(addr, []).append(v)
+        self._admit(v)
+        self._resident[v] = v
+        return Value(pyval, v)
+
+    def _store(self, addr: int, dep_vid, itemsize: int, idx_vids, label="st") -> int:
+        hit = self.cache.access(addr, is_write=True)
+        deps = set()
+        if dep_vid is not None:
+            deps.add(self._touch(dep_vid))
+        for iv in idx_vids:
+            iv2 = self._touch(iv)
+            if iv2 is not None:
+                deps.add(iv2)
+        if self.false_deps:
+            w = self._curr_vs.get(addr)
+            if w is not None:
+                deps.add(w)                                  # WAW
+            deps.update(self._readers.get(addr, ()))         # WAR
+        v = self.g.add_vertex(cost=1.0, is_mem=not hit,
+                              nbytes=float(itemsize), label=label)
+        for d in sorted(deps):
+            if d != v:
+                self.g.add_edge(d, v)
+        self._curr_vs[addr] = v
+        self._readers[addr] = []
+        return v
+
+    def alu(self, op: str, *operands, label: Optional[str] = None) -> Value:
+        """ALU vertex: op in {+,-,*,/,max,min} or a callable."""
+        fn = _OPS[op] if isinstance(op, str) else op
+        vals = [o.val if isinstance(o, Value) else o for o in operands]
+        deps = set()
+        for o in operands:
+            if isinstance(o, Value) and o.vid is not None:
+                deps.add(self._touch(o.vid))
+        v = self.g.add_vertex(cost=1.0, is_mem=False, nbytes=0.0,
+                              label=label or (op if isinstance(op, str) else "alu"))
+        for d in sorted(deps):
+            self.g.add_edge(d, v)
+        self._admit(v)
+        self._resident[v] = v
+        result = fn(*vals) if len(vals) > 1 else fn(vals[0])
+        return Value(result, v)
+
+    def const(self, v) -> Value:
+        return Value(v, None)
+
+    # ---------------------------------------------------------------- output
+    @property
+    def edag(self) -> EDag:
+        return self.g

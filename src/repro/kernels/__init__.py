@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three layers:
+  * ``<name>.py``  — pl.pallas_call + explicit VMEM BlockSpecs, TPU-native
+    tiling (MXU-aligned blocks, online-softmax / state carried across the
+    sequential minor grid dimension in VMEM scratch);
+  * ``ops.py``     — jit'd dispatch wrappers the models call;
+  * ``ref.py``     — pure-jnp oracles (sequential + chunked forms) that the
+    tests sweep shapes/dtypes against (interpret=True on CPU).
+
+Kernels: ``flash_attention`` (blocked causal/SWA GQA attention),
+``rwkv6_wkv`` (chunked WKV recurrence with data-dependent decay),
+``mamba2_ssd`` (chunked state-space dual scan).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

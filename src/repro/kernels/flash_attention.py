@@ -1,0 +1,111 @@
+"""Blocked flash attention for TPU (pl.pallas_call + explicit VMEM BlockSpecs).
+
+TPU adaptation of the FlashAttention tiling: the grid's minor dimension is
+the KV-block index, which TPU executes *sequentially* per core, so the
+online-softmax state (m, l, acc) lives in VMEM scratch across KV iterations
+— no HBM round-trips for scores/probabilities (this removes the O(T*S)
+score traffic that makes the jnp reference memory-bound in the roofline
+table, EXPERIMENTS.md §Perf).  Block shapes default to 128 (MXU-aligned).
+
+GQA is handled in the BlockSpec index maps: the KV block for q-head h is
+head h*KV//H — no materialized head repetition.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sm_scale: float, causal: bool, window: int,
+            block_q: int, block_kv: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False):
+    """q: (B,T,H,hd); k,v: (B,S,KV,hd) -> (B,T,H,hd)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    assert T % block_q == 0 and S % block_kv == 0, (T, S, block_q, block_kv)
+    nq, nk = T // block_q, S // block_kv
+
+    qt = q.transpose(0, 2, 1, 3)                        # (B,H,T,hd)
+    kt = k.transpose(0, 2, 1, 3)                        # (B,KV,S,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, sm_scale=hd ** -0.5, causal=causal,
+                          window=window, block_q=block_q, block_kv=block_kv,
+                          nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki: (b, h * KV // H, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, h, qi, ki: (b, h * KV // H, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)                    # (B,T,H,hd)

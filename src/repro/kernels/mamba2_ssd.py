@@ -1,0 +1,100 @@
+"""Mamba2 SSD (state-space dual) — chunked Pallas TPU kernel.
+
+Same TPU structure as the WKV kernel: chunk-parallel MXU work inside a
+chunk, scalar-per-head decay exp(A*dt) accumulated in log space, and the
+(P x N) state carried across the sequential chunk grid dimension in VMEM.
+
+    S_t = exp(A dt_t) S_{t-1} + dt_t x_t B_t^T
+    y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, s0_ref, y_ref, sf_ref,
+            S_scr, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)                 # (C,P)
+    dt = dt_ref[0, 0].astype(jnp.float32)               # (C,)
+    A = a_ref[0]                                        # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)                # (C,N)
+    Cm = c_ref[0, 0].astype(jnp.float32)                # (C,N)
+    D = d_ref[0]
+    C = x.shape[0]
+
+    a = A * dt                                          # (C,) negative
+    cs = jnp.cumsum(a)                                  # inclusive
+    S = S_scr[...]                                      # (P,N)
+
+    # inter-chunk: y_t += (C_t exp(cs_t)) @ S^T
+    y = jax.lax.dot_general(Cm * jnp.exp(cs)[:, None], S,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C,P)
+    # intra-chunk: M[t,s] = (C_t . B_s) exp(cs_t - cs_s), s <= t
+    M = jax.lax.dot_general(Cm * jnp.exp(cs)[:, None],
+                            Bm * jnp.exp(-cs)[:, None],
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C,C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    M = jnp.where(ti >= si, M, 0.0)
+    y = y + jax.lax.dot_general(M * dt[None, :], x,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + D * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    xb = (dt * jnp.exp(cs[-1] - cs))[:, None] * x       # (C,P)
+    S_scr[...] = jnp.exp(cs[-1]) * S + jax.lax.dot_general(
+        xb, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (P,N)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0] = S_scr[...].astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A, Bm, Cm, D, state, *, chunk: int = 64,
+               interpret: bool = False):
+    """x: (B,H,T,P); dt: (B,H,T); A,D: (H,); Bm,Cm: (B,G,T,N);
+    state: (B,H,P,N).  Heads grouped over G via index maps."""
+    B, H, T, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[-1]
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    nc = T // C
+    grid = (B, H, nc)
+    y, sf = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, C, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, C, N), lambda b, h, c: (b, h * G // H, c, 0)),
+            pl.BlockSpec((1, 1, C, N), lambda b, h, c: (b, h * G // H, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, C, P), lambda b, h, c: (b, h, c, 0)),
+                   pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, H, T, P), x.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D, state)
+    return y, sf

@@ -1,0 +1,51 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Each op has: a Pallas TPU kernel (``<name>.py``, pl.pallas_call + BlockSpec),
+a pure-jnp oracle/reference (``ref.py``), and this wrapper that picks the
+implementation (``use_pallas``; CPU validation uses interpret mode in tests,
+models on CPU use the chunked jnp forms).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+def wkv6(r, k, v, w, u, state, *, chunk: int = 64, use_pallas: bool = False,
+         interpret: bool = False):
+    """RWKV6 WKV recurrence.  r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K);
+    state: (B,H,K,V).  Returns (y (B,H,T,V), final state)."""
+    if use_pallas:
+        from .rwkv6_wkv import wkv6_pallas
+        return wkv6_pallas(r, k, v, w, u, state, chunk=chunk,
+                           interpret=interpret)
+    return ref.wkv6_chunked_ref(r, k, v, w, u, state, chunk=chunk)
+
+
+def ssd(x, dt, A, Bm, Cm, D, state, *, chunk: int = 64,
+        use_pallas: bool = False, interpret: bool = False):
+    """Mamba2 SSD recurrence.  x: (B,H,T,P); dt: (B,H,T); A: (H,);
+    Bm,Cm: (B,G,T,N); D: (H,); state: (B,H,P,N)."""
+    if use_pallas:
+        from .mamba2_ssd import ssd_pallas
+        return ssd_pallas(x, dt, A, Bm, Cm, D, state, chunk=chunk,
+                          interpret=interpret)
+    return ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    use_pallas: bool = False, interpret: bool = False):
+    """Blocked attention.  q: (B,T,H,hd); k,v: (B,S,KV,hd)."""
+    if use_pallas:
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=interpret)
+    from ..models.layers import attention_ref
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         chunk_kv=block_kv)

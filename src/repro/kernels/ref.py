@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every Pallas kernel (and the chunked forms the
+models use on CPU).  Shapes follow the kernels' conventions:
+
+  wkv6:  r,k,w: (B,H,T,K), v: (B,H,T,V), u: (H,K), state: (B,H,K,V)
+         recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                     y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+  ssd:   x: (B,H,T,P), dt: (B,H,T), B,C: (B,G,T,N), A: (H,) (negative),
+         state: (B,H,P,N)
+         recurrence  S_t = exp(A dt_t) S_{t-1} + dt_t x_t B_t^T
+                     y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------- RWKV6
+
+def wkv6_ref(r, k, v, w, u, state):
+    """Sequential oracle.  Returns (y: (B,H,T,V), final state)."""
+    B, H, T, K = r.shape
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (B,H,K/V)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+    inputs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    S, ys = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(ys, 0, 2), S
+
+
+def wkv6_chunked_ref(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked parallel form (the Pallas kernel's algorithm, in jnp)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    n = T // C
+    rc, kc, vc, wc = (a.reshape(B, H, n, C, -1) for a in (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))                # (B,H,n,C,K)
+    csum = jnp.cumsum(logw, axis=3)                       # inclusive cumsum
+
+    def chunk_step(S, inp):
+        rt, kt, vt, cs = inp           # (B,H,C,K/V), cs: (B,H,C,K)
+        cs_prev = jnp.pad(cs, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+        # inter-chunk: y_t += (r_t * exp(cs_{t-1})) @ S
+        y = jnp.einsum("bhck,bhkv->bhcv", rt * jnp.exp(cs_prev), S)
+        # intra-chunk: M[t,s] = sum_k r_t[k] exp(cs_{t-1}-cs_s)[k] k_s[k], s<t
+        ratio = jnp.exp(cs_prev[:, :, :, None, :] - cs[:, :, None, :, :])
+        M = jnp.einsum("bhck,bhcsk,bhsk->bhcs", rt, ratio, kt)
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        M = jnp.where(tri[None, None], M, 0.0)
+        # diagonal (bonus) term: (r_t * u) . k_t
+        diag = jnp.einsum("bhck,hk,bhck->bhc", rt, u, kt)
+        y = y + jnp.einsum("bhcs,bhsv->bhcv", M, vt) + diag[..., None] * vt
+        # state update: S' = diag(exp(cs_T)) S + sum_s diag(exp(cs_T-cs_s)) k_s v_s^T
+        decay_all = jnp.exp(cs[:, :, -1:, :])             # (B,H,1,K)
+        kdec = kt * jnp.exp(cs[:, :, -1:, :] - cs)        # (B,H,C,K)
+        S = decay_all[:, :, 0, :, None] * S + \
+            jnp.einsum("bhck,bhcv->bhkv", kdec, vt)
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(a, 2, 0)
+                   for a in (rc, kc, vc, csum))
+    S, ys = jax.lax.scan(chunk_step, state, inputs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, V)
+    return y, S
+
+
+# ------------------------------------------------------------------- Mamba2
+
+def ssd_ref(x, dt, A, Bm, Cm, D, state):
+    """Sequential oracle.  x:(B,H,T,P) dt:(B,H,T) A:(H,) Bm/Cm:(B,G,T,N)
+    D:(H,) state:(B,H,P,N).  Heads are grouped over G (H % G == 0)."""
+    B_, H, T, P = x.shape
+    G = Bm.shape[1]
+    rep = H // G
+    def step(S, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P),(B,H),(B,G,N),(B,G,N)
+        bth = jnp.repeat(bt, rep, axis=1)
+        cth = jnp.repeat(ct, rep, axis=1)
+        decay = jnp.exp(A[None, :] * dtt)                 # (B,H)
+        S = decay[..., None, None] * S + \
+            (dtt[..., None] * xt)[..., :, None] * bth[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", S, cth) + D[None, :, None] * xt
+        return S, y
+    inputs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+              jnp.moveaxis(Bm, 2, 0), jnp.moveaxis(Cm, 2, 0))
+    S, ys = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(ys, 0, 2), S
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D, state, chunk: int = 64):
+    """Chunked (state-space dual) form — the Mamba2 SSD algorithm in jnp."""
+    B_, H, T, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[-1]
+    rep = H // G
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    n = T // C
+    xc = x.reshape(B_, H, n, C, P)
+    dtc = dt.reshape(B_, H, n, C)
+    Bc = jnp.repeat(Bm, rep, axis=1).reshape(B_, H, n, C, N)
+    Cc = jnp.repeat(Cm, rep, axis=1).reshape(B_, H, n, C, N)
+    a = A[None, :, None, None] * dtc                      # (B,H,n,C) negative
+    cs = jnp.cumsum(a, axis=3)
+
+    def chunk_step(S, inp):
+        xt, dtt, bt, ct, cst = inp
+        cs_incl = cst                                     # (B,H,C)
+        # inter-chunk
+        y = jnp.einsum("bhcn,bhpn->bhcp", ct * jnp.exp(cs_incl)[..., None], S)
+        # intra-chunk: L[t,s] = exp(cs_t - cs_s) for s <= t
+        L = jnp.exp(cs_incl[:, :, :, None] - cs_incl[:, :, None, :])
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        L = jnp.where(tri[None, None], L, 0.0)
+        M = jnp.einsum("bhcn,bhsn->bhcs", ct, bt) * L
+        y = y + jnp.einsum("bhcs,bhs,bhsp->bhcp", M, dtt, xt)
+        # state update
+        dec_all = jnp.exp(cs_incl[:, :, -1])              # (B,H)
+        kdec = jnp.exp(cs_incl[:, :, -1:] - cs_incl)      # (B,H,C)
+        S = dec_all[..., None, None] * S + jnp.einsum(
+            "bhc,bhc,bhcp,bhcn->bhpn", kdec, dtt, xt, bt)
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(z, 2, 0) for z in (xc, dtc, Bc, Cc, cs))
+    S, ys = jax.lax.scan(chunk_step, state, inputs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B_, H, T, P)
+    return y + D[None, :, None, None] * x, S

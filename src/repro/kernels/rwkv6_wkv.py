@@ -1,0 +1,97 @@
+"""RWKV6 WKV recurrence — chunked Pallas TPU kernel.
+
+TPU adaptation of the CUDA WKV kernel: instead of one thread per channel
+running a T-step scalar recurrence, the sequence is processed in chunks of C
+tokens; within a chunk everything is dense (C x C) MXU work, and the (K x V)
+matrix state is carried across the chunk dimension in VMEM scratch (the TPU
+grid's minor dimension executes sequentially per core).  HBM traffic is
+O(T*(K+V)) — inputs/outputs only; the state never leaves VMEM.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sf_ref, S_scr,
+            *, nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)                 # (C,K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (C,V)
+    w = w_ref[0, 0].astype(jnp.float32)                 # (C,K) decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)                    # (K,)
+    C = r.shape[0]
+
+    cs = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-38)), axis=0)   # (C,K)
+    cs_prev = jnp.concatenate([jnp.zeros_like(cs[:1]), cs[:-1]], axis=0)
+
+    S = S_scr[...]
+    # inter-chunk
+    y = jax.lax.dot_general(r * jnp.exp(cs_prev), S,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C,V)
+    # intra-chunk: M[t,s] = sum_k r_t exp(cs_{t-1}-cs_s) k_s, strictly s<t
+    q_dec = r * jnp.exp(cs_prev)                        # (C,K)
+    k_dec = k * jnp.exp(-cs)                            # (C,K)
+    M = jax.lax.dot_general(q_dec, k_dec, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C,C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    M = jnp.where(ti > si, M, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)          # (C,)
+    y = y + jax.lax.dot_general(M, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(exp(cs_C)) S + sum_s exp(cs_C - cs_s) k_s v_s^T
+    k_tail = k * jnp.exp(cs[-1][None, :] - cs)          # (C,K)
+    S_scr[...] = jnp.exp(cs[-1])[:, None] * S + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0] = S_scr[...].astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K); state: (B,H,K,V)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    while T % C:
+        C -= 1
+    nc = T // C
+    grid = (B, H, nc)
+    io_spec = lambda last: pl.BlockSpec((1, 1, C, last),
+                                        lambda b, h, c: (b, h, c, 0))
+    st_spec = pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0))
+    y, sf = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, chunk=C),
+        grid=grid,
+        in_specs=[io_spec(K), io_spec(K), io_spec(V), io_spec(K),
+                  pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+                  st_spec],
+        out_specs=(io_spec(V), st_spec),
+        out_shape=(jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+                   jax.ShapeDtypeStruct((B, H, K, V), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, sf

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_allow_excess_precision=false "
+                           + os.environ.get("XLA_FLAGS", ""))
+# --xla_allow_excess_precision=false: stop the CPU backend from upgrading
+# bf16 loop carries (KV caches, saved activations) to f32 shadow copies —
+# it doubles reported HBM for buffers a TPU keeps in bf16 natively.
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init).  The dry-run is the only entry point that fakes 512
+# devices; smoke tests and benches see the real host devices.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+full-size ShapeDtypeStruct inputs (zero allocation), then record:
+
+  * memory_analysis()      — per-device bytes: proves the cell fits HBM;
+  * cost_analysis()        — XLA's per-device FLOPs/bytes (NOTE: XLA counts
+    while bodies once; our own trip-scaled estimators are the primary
+    roofline source, cross-checked against these);
+  * collective stats       — per-mesh-axis W/D/bytes from the post-SPMD HLO
+    (EDAN's HLO frontend), with the paper's per-axis lambda;
+  * roofline terms         — compute/memory/collective seconds per step on
+    TPU v5e constants (197 TF bf16, 819 GB/s HBM, 50 GB/s/link ICI).
+
+Usage:
+  python -m repro.launch.dryrun --cell <arch> <shape> <mesh>     # one cell
+  python -m repro.launch.dryrun --all [--resume]                 # orchestrate
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "experiments", "artifacts")
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (fwd)."""
+    from repro.models import get_model
+    api = get_model(cfg)
+    n = api.n_params()
+    if cfg.n_experts:
+        # subtract inactive expert params: 3*d*ff per expert per layer
+        expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        n = n - expert_p * (1 - cfg.top_k / cfg.n_experts)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token per seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             overrides=None, cast_bf16: bool = False,
+             bf16_params: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import ARCHS, SHAPES, HW, shape_applicable
+    from repro.core.hlo import (analyze_collectives, hlo_flops_estimate,
+                                hlo_hbm_bytes_estimate)
+    from repro.core.sensitivity import collective_sensitivity
+    from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+    from repro.models import get_model
+    from repro.models.module import abstract_params
+    from repro.sharding import param_partition_specs, sharding_ctx
+    from repro.sharding.rules import DEFAULT_RULES, decode_cache_rules
+    from repro.train.optimizer import AdamState
+    from repro.train.train_loop import make_train_step
+    from repro.configs.base import TrainConfig
+
+    import dataclasses
+
+    cfg = ARCHS[arch]
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            ft = type(getattr(cfg, k))
+            typed[k] = (v.lower() in ("1", "true") if ft is bool else ft(v))
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(arch, shape):
+        return {"skipped": "full-attention arch at long_500k (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    axes = mesh_axis_sizes(mesh)
+    api = get_model(cfg)
+
+    rules = dict(DEFAULT_RULES)
+    rules.update(api.rules_override())
+    if shape.kind == "decode":
+        rules.update(decode_cache_rules(shape.global_batch, shape.seq_len,
+                                        mesh))
+
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    specs = api.specs()
+    pspecs = param_partition_specs(specs, mesh, rules)
+    aparams = abstract_params(specs)
+    if bf16_params and shape.kind != "train":
+        # serving deployments store bf16 weights: halves the per-token
+        # weight-read traffic and the resident param bytes
+        aparams = jax.tree_util.tree_map(
+            lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.bfloat16)
+            if s_.dtype == jnp.float32 else s_, aparams)
+    batch_sds, batch_logical = api.input_specs(shape)
+    from repro.sharding.rules import spec_for
+    bspecs = {k: spec_for(batch_sds[k].shape, batch_logical[k], mesh, rules)
+              for k in batch_sds}
+
+    t0 = time.time()
+    if shape.kind == "train":
+        # production-style grad accumulation: activation memory scales 1/mb
+        # (MoE counts too: dispatch buffers scale with tokens per microbatch)
+        n = get_model(cfg).n_params()
+        mb = 8 if n > 20e9 else (4 if (n > 1e9 or cfg.n_experts) else 1)
+        tc = TrainConfig(microbatches=mb, cast_params_bf16=cast_bf16)
+        step = make_train_step(api, tc)
+        opt_abs = AdamState(
+            mu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), aparams),
+            nu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), aparams),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        opt_specs = AdamState(mu=pspecs, nu=pspecs, step=P())
+
+        def fn(params, opt, batch):
+            with sharding_ctx(mesh, rules):
+                return step(params, opt, batch)
+        jf = jax.jit(fn, in_shardings=(ns(pspecs), ns(opt_specs), ns(bspecs)),
+                     out_shardings=(ns(pspecs), ns(opt_specs), None),
+                     donate_argnums=(0, 1))
+        lowered = jf.lower(aparams, opt_abs, batch_sds)
+    elif shape.kind == "prefill":
+        def fn(params, batch):
+            with sharding_ctx(mesh, rules):
+                return api.prefill_fn(params, batch,
+                                      cache_len=shape.seq_len)
+        jf = jax.jit(fn, in_shardings=(ns(pspecs), ns(bspecs)))
+        lowered = jf.lower(aparams, batch_sds)
+    else:                                        # decode
+        cspecs_tree = api.cache_specs(shape)
+        cache_abs = abstract_params(cspecs_tree)
+        cache_pspecs = param_partition_specs(cspecs_tree, mesh, rules)
+
+        def fn(params, cache, batch):
+            with sharding_ctx(mesh, rules):
+                return api.decode_fn(params, cache, batch)
+        jf = jax.jit(fn, in_shardings=(ns(pspecs), ns(cache_pspecs),
+                                       ns(bspecs)),
+                     out_shardings=(None, ns(cache_pspecs)),
+                     donate_argnums=(1,))
+        lowered = jf.lower(aparams, cache_abs, batch_sds)
+    t_lower = time.time() - t0
+
+    def _shard_shape(sds, pspec):
+        dims = list(sds.shape)
+        for i, entry in enumerate(pspec):
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                dims[i] //= mesh.shape[ax]
+        return tuple(dims)
+
+    def bf16_shadow_bytes(txt) -> int:
+        """CPU-backend artifact: the CPU has no native bf16 dot, so XLA
+        materializes full f32 copies of bf16 loop-carried caches (convert
+        hoisted across the while carry).  A TPU reads bf16 on the MXU
+        directly — these shadows do not exist on target hardware.  Detected
+        mechanically: a `convert` producing f32 at exactly a bf16 cache
+        leaf's per-device shard shape."""
+        if shape.kind != "decode":
+            return 0
+        import re as _re
+        total = 0
+        leaves = jax.tree_util.tree_leaves(cache_abs)
+        specs_l = jax.tree_util.tree_leaves(
+            cache_pspecs, is_leaf=lambda x: isinstance(x, P))
+        for sds, sp in zip(leaves, specs_l):
+            if sds.dtype != jnp.bfloat16:
+                continue
+            shard = _shard_shape(sds, sp)
+            pat = _re.escape("f32[" + ",".join(map(str, shard)) + "]")
+            if _re.search(r"= " + pat + r"\{[^}]*\} convert\(", txt):
+                import numpy as _np
+                total += int(_np.prod(shard)) * 4
+        return total
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k, 0)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")} if ma else {}
+    try:
+        ca = dict(compiled.cost_analysis() or {})
+        ca = {k: float(v) for k, v in ca.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "optimal_seconds", "transcendentals")}
+    except Exception:
+        ca = {}
+
+    txt = compiled.as_text()
+    coll = analyze_collectives(txt, axes)
+    flops_dev = hlo_flops_estimate(txt)
+    bytes_dev = hlo_hbm_bytes_estimate(txt)
+    sens = collective_sensitivity(txt, axes)
+    n_dev = mesh.size
+
+    compute_t = flops_dev / HW["peak_flops_bf16"]
+    memory_t = bytes_dev / HW["hbm_bw"]
+    coll_bytes = coll["total"]["bytes"]
+    coll_t = coll_bytes / HW["ici_bw_per_link"]
+    mf = model_flops(cfg, shape)
+    # donated inputs alias their outputs — count once
+    hbm_raw = (mem.get("argument_size_in_bytes", 0) +
+               mem.get("temp_size_in_bytes", 0) +
+               mem.get("output_size_in_bytes", 0) -
+               mem.get("alias_size_in_bytes", 0))
+    shadow = bf16_shadow_bytes(txt) if shape.kind == "decode" else 0
+    hbm_used = hbm_raw - shadow
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "hbm_per_device_bytes": hbm_used,
+        "hbm_per_device_bytes_cpu_backend": hbm_raw,
+        "cpu_bf16_shadow_bytes": shadow,
+        "fits_hbm": hbm_used <= HW["hbm_bytes"],
+        "cost_analysis": ca,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "per_axis_lambda": {ax: s.row() for ax, s in sens["per_axis"].items()},
+        "roofline": {
+            "compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t,
+            "dominant": max(
+                (("compute", compute_t), ("memory", memory_t),
+                 ("collective", coll_t)), key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / flops_dev if flops_dev else None,
+    }
+    return result
+
+
+def cell_path(out_dir, arch, shape, mesh):
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="ModelConfig field override")
+    ap.add_argument("--cast-bf16", action="store_true",
+                    help="train: bf16 compute copy of the params")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="serve: store params in bf16")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for variants")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--mesh", default=None, choices=["pod", "multipod"])
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACTS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.cell:
+        arch, shape, mesh = args.cell
+        overrides = dict(kv.split("=", 1) for kv in args.set)
+        try:
+            res = run_cell(arch, shape, mesh, args.out, overrides=overrides,
+                           cast_bf16=args.cast_bf16,
+                           bf16_params=args.bf16_params)
+            res["variant"] = {"set": overrides, "cast_bf16": args.cast_bf16,
+                              "bf16_params": args.bf16_params,
+                              "tag": args.tag}
+            status = "skip" if "skipped" in res else "ok"
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "error": repr(e), "traceback": traceback.format_exc()}
+            status = "error"
+        path = cell_path(args.out, arch, shape, mesh)
+        if args.tag:
+            path = path.replace(".json", f"__{args.tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        print(f"[{status}] {arch} {shape} {mesh}")
+        sys.exit(0 if status != "error" else 1)
+
+    # orchestrator: one subprocess per cell (bounded memory, resumable)
+    from repro.configs import ARCHS, SHAPES
+    cells = [(a, s, m)
+             for a in ARCHS
+             for s in SHAPES
+             for m in ("pod", "multipod")]
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.mesh:
+        cells = [c for c in cells if c[2] == args.mesh]
+    todo = []
+    for c in cells:
+        p = cell_path(args.out, *c)
+        if args.resume and os.path.exists(p):
+            continue
+        todo.append(c)
+    print(f"dry-run: {len(todo)} cells to compile "
+          f"({len(cells) - len(todo)} cached)")
+    failures = 0
+    for i, (a, s, m) in enumerate(todo):
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--cell", a, s, m, "--out", args.out],
+            env={**os.environ},
+            capture_output=True, text=True)
+        dt = time.time() - t0
+        tail = (r.stdout + r.stderr).strip().splitlines()
+        msg = tail[-1] if tail else ""
+        print(f"[{i+1}/{len(todo)}] {a} {s} {m}: {msg} ({dt:.0f}s)",
+              flush=True)
+        failures += r.returncode != 0
+    print(f"done; {failures} failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Serving launcher: the continuous-batching engine over a selected arch.
+
+Usage:
+  python -m repro.launch.serve --arch rwkv6-7b --reduced --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS
+    from repro.models import get_model
+    from repro.serve import Request, ServeEngine
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, batch_slots=args.slots,
+                      max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        eng.submit(Request(prompt=rng.integers(1, 200, size=8).tolist(),
+                           max_tokens=args.max_tokens,
+                           temperature=args.temperature, rid=i))
+    done = eng.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

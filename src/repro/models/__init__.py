@@ -1,0 +1,177 @@
+"""Model registry: a uniform functional API over the 10 architectures.
+
+For each family:
+  specs(cfg)                      -> ParamSpec pytree
+  loss_fn(params, batch, cfg)     -> scalar loss        (train shapes)
+  prefill_fn(params, batch, cfg)  -> (logits, cache)    (prefill shapes)
+  decode_fn(params, cache, batch, cfg) -> (logits, cache)  (decode shapes)
+  input_specs(cfg, shape)         -> batch of ShapeDtypeStruct + logical axes
+  cache_specs(cfg, shape)         -> decode-state ParamSpec pytree
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, mamba2, moe, rwkv6, transformer, zamba2
+from .module import ParamSpec, abstract_params, init_params, param_count
+
+
+def _tok_specs(B, T, with_labels=True):
+    out = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    return out
+
+
+def _tok_logical(with_labels=True):
+    out = {"tokens": ("batch", "seq")}
+    if with_labels:
+        out["labels"] = ("batch", "seq")
+    return out
+
+
+@dataclass
+class ModelApi:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def specs(self):
+        c = self.cfg
+        if c.family in ("dense", "vlm", "moe"):
+            return transformer.decoder_specs(c)
+        if c.family == "ssm":
+            return rwkv6.rwkv_specs(c)
+        if c.family == "hybrid":
+            return zamba2.zamba_specs(c)
+        if c.family == "encdec":
+            return encdec.encdec_specs(c)
+        raise ValueError(c.family)
+
+    def init(self, key):
+        return init_params(self.specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.specs())
+
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+    # -------------------------------------------------------------- train
+    def loss_fn(self, params, batch):
+        c = self.cfg
+        if c.family in ("dense", "vlm", "moe"):
+            return transformer.loss_fn(params, batch, c)
+        if c.family == "ssm":
+            return rwkv6.loss_fn(params, batch, c)
+        if c.family == "hybrid":
+            return zamba2.loss_fn(params, batch, c)
+        if c.family == "encdec":
+            return encdec.loss_fn(params, batch, c)
+        raise ValueError(c.family)
+
+    # ------------------------------------------------------------ serving
+    def prefill_fn(self, params, batch, cache_len: int = 0):
+        c = self.cfg
+        if c.family in ("dense", "moe"):
+            return transformer.prefill(params, batch["tokens"], c,
+                                       cache_len=cache_len)
+        if c.family == "vlm":
+            return transformer.prefill(params, batch["tokens"], c,
+                                       prefix_embeds=batch["prefix_embeds"],
+                                       cache_len=cache_len)
+        if c.family == "ssm":
+            return rwkv6.prefill(params, batch["tokens"], c)
+        if c.family == "hybrid":
+            return zamba2.prefill(params, batch["tokens"], c,
+                                  cache_len=cache_len)
+        if c.family == "encdec":
+            return encdec.prefill(params, batch["frame_embeds"],
+                                  batch["tokens"], c,
+                                  cache_len=cache_len or batch["tokens"].shape[1])
+        raise ValueError(c.family)
+
+    def decode_fn(self, params, cache, batch):
+        c = self.cfg
+        tokens, cur = batch["tokens"], batch["cur_index"]
+        if c.family in ("dense", "vlm", "moe"):
+            return transformer.decode_step(params, cache, tokens, cur, c)
+        if c.family == "ssm":
+            return rwkv6.decode_step(params, cache, tokens, cur, c)
+        if c.family == "hybrid":
+            return zamba2.decode_step(params, cache, tokens, cur, c)
+        if c.family == "encdec":
+            return encdec.decode_step(params, cache, tokens, cur, c)
+        raise ValueError(c.family)
+
+    # ------------------------------------------------------------- shapes
+    def enc_len(self, shape: ShapeConfig) -> int:
+        return min(shape.seq_len, self.cfg.enc_len_cap)
+
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct batch + logical-axes pytree for one shape cell."""
+        c = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(c.dtype)
+        if shape.kind == "train":
+            if c.family == "encdec":
+                Te = self.enc_len(shape)
+                specs = {"frame_embeds": jax.ShapeDtypeStruct((B, Te, c.d_model), dt),
+                         **_tok_specs(B, T)}
+                logical = {"frame_embeds": ("batch", "seq", None),
+                           **_tok_logical()}
+            elif c.family == "vlm":
+                P = c.n_patches
+                specs = {"prefix_embeds": jax.ShapeDtypeStruct((B, P, c.d_model), dt),
+                         **_tok_specs(B, T)}
+                logical = {"prefix_embeds": ("batch", "seq", None),
+                           **_tok_logical()}
+            else:
+                specs, logical = _tok_specs(B, T), _tok_logical()
+            return specs, logical
+        if shape.kind == "prefill":
+            if c.family == "encdec":
+                Te = self.enc_len(shape)
+                specs = {"frame_embeds": jax.ShapeDtypeStruct((B, Te, c.d_model), dt),
+                         **_tok_specs(B, T, with_labels=False)}
+                logical = {"frame_embeds": ("batch", "seq", None),
+                           **_tok_logical(False)}
+            elif c.family == "vlm":
+                specs = {"prefix_embeds": jax.ShapeDtypeStruct(
+                            (B, c.n_patches, c.d_model), dt),
+                         **_tok_specs(B, T, with_labels=False)}
+                logical = {"prefix_embeds": ("batch", "seq", None),
+                           **_tok_logical(False)}
+            else:
+                specs = _tok_specs(B, T, with_labels=False)
+                logical = _tok_logical(False)
+            return specs, logical
+        # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                 "cur_index": jax.ShapeDtypeStruct((), jnp.int32)}
+        logical = {"tokens": ("batch", None), "cur_index": ()}
+        return specs, logical
+
+    def cache_specs(self, shape: ShapeConfig):
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if c.family in ("dense", "vlm", "moe"):
+            return transformer.cache_specs(c, B, S)
+        if c.family == "ssm":
+            return rwkv6.state_specs(c, B, S)
+        if c.family == "hybrid":
+            return zamba2.state_specs(c, B, S)
+        if c.family == "encdec":
+            return encdec.cache_specs(c, B, S, self.enc_len(shape))
+        raise ValueError(c.family)
+
+    def rules_override(self) -> dict:
+        return moe.ep_rules(self.cfg) if self.cfg.n_experts else {}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg)

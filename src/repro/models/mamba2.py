@@ -1,0 +1,107 @@
+"""Mamba2 block (state space dual), used by the Zamba2 hybrid.
+
+Structure: gated (z) branch + causal depthwise conv + selective SSM with
+scalar-per-head decay exp(A*dt), grouped B/C (G groups), gated RMSNorm, out
+projection.  The SSD recurrence runs through ``kernels.ops.ssd`` (Pallas on
+TPU, chunked jnp reference on CPU).  Decode state: (conv tail, per-head P x N
+matrix state) — O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from .layers import rms_norm
+from .module import ParamSpec
+from ..kernels import ops as kops
+
+_CONV_K = 4
+_EXPAND = 2
+_GROUPS = 1
+
+
+def dims(cfg: ModelConfig):
+    d_in = _EXPAND * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state, _GROUPS
+
+
+def mamba_specs(cfg: ModelConfig, L: int) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N, G = dims(cfg)
+
+    def lay(shape, logical, **kw):
+        return ParamSpec((L,) + shape, ("layers",) + logical, **kw)
+
+    return {
+        "ln": lay((d,), ("embed",), init="ones"),
+        "Wz": lay((d, d_in), ("embed", "mlp")),
+        "Wx": lay((d, d_in), ("embed", "mlp")),
+        "WB": lay((d, G * N), ("embed", None)),
+        "WC": lay((d, G * N), ("embed", None)),
+        "Wdt": lay((d, H), ("embed", "heads")),
+        "dt_bias": lay((H,), ("heads",), init="zeros"),
+        "conv": lay((_CONV_K, d_in), ("conv", "mlp"), scale=0.5),
+        "A_log": lay((H,), ("heads",), init="zeros"),
+        "D": lay((H,), ("heads",), init="zeros"),
+        "norm": lay((d_in,), ("mlp",), init="ones"),
+        "Wo": lay((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, kernel, tail=None):
+    """Depthwise causal conv; x: (B,T,C), kernel: (K,C), tail: (B,K-1,C)."""
+    K = kernel.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+              for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def block_apply(h, wb, cfg: ModelConfig, state):
+    """h: (B,T,d); state: {'conv': (B,K-1,d_in), 'S': (B,H,P,N)}."""
+    B, T, d = h.shape
+    d_in, H, P, N, G = dims(cfg)
+    h = constrain(h, "batch", "seq_res", None)
+    x0 = rms_norm(h, wb["ln"])
+    z = x0 @ wb["Wz"].astype(x0.dtype)
+    xin = x0 @ wb["Wx"].astype(x0.dtype)
+    xin = constrain(xin, "batch", "seq", "mlp_act")
+    xc, conv_tail = _causal_conv(xin, wb["conv"], state["conv"])
+    xc = jax.nn.silu(xc)
+    Bm = (x0 @ wb["WB"].astype(x0.dtype)).reshape(B, T, G, N).transpose(0, 2, 1, 3)
+    Cm = (x0 @ wb["WC"].astype(x0.dtype)).reshape(B, T, G, N).transpose(0, 2, 1, 3)
+    dt = jax.nn.softplus(x0.astype(jnp.float32) @ wb["Wdt"] + wb["dt_bias"])
+    xh = xc.reshape(B, T, H, P).transpose(0, 2, 1, 3)    # (B,H,T,P)
+    A = -jnp.exp(wb["A_log"].astype(jnp.float32))
+    y, S = kops.ssd(xh.astype(jnp.float32), dt.transpose(0, 2, 1), A,
+                    Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                    wb["D"].astype(jnp.float32), state["S"],
+                    chunk=cfg.ssm_chunk, use_pallas=cfg.use_pallas)
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d_in).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z), wb["norm"])
+    out = y @ wb["Wo"].astype(y.dtype)
+    return h + out, {"conv": conv_tail, "S": S}
+
+
+def zero_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    d_in, H, P, N, G = dims(cfg)
+    return {"conv": jnp.zeros((B, _CONV_K - 1, d_in), dtype),
+            "S": jnp.zeros((B, H, P, N), jnp.float32)}
+
+
+def state_specs(cfg: ModelConfig, L: int, batch: int) -> dict:
+    d_in, H, P, N, G = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": ParamSpec((L, batch, _CONV_K - 1, d_in),
+                          ("layers", "batch", "conv", "mlp"),
+                          init="zeros", dtype=dt),
+        "S": ParamSpec((L, batch, H, P, N),
+                       ("layers", "batch", "heads", None, "state"),
+                       init="zeros", dtype=jnp.float32),
+    }

@@ -1,0 +1,73 @@
+"""Parameter-spec framework: declarative shapes + logical sharding axes.
+
+Every model declares its parameters as a pytree of ``ParamSpec`` (shape,
+logical axis names, init).  From that single declaration we derive:
+  * real initialized params (training),
+  * abstract ShapeDtypeStruct params (dry-run lowering, no allocation),
+  * PartitionSpec trees (via sharding/rules.py),
+matching the MaxText-style "logical axis" pattern.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]      # logical axis name per dim
+    init: str = "normal"                    # normal|zeros|ones|scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key):
+    """Materialize a pytree of ParamSpec into initialized arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree — the dry-run stand-in (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples parallel to the params."""
+    return jax.tree_util.tree_map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves))

@@ -1,0 +1,188 @@
+"""RWKV-6 (Finch): attention-free time mixing with data-dependent decay.
+
+Faithful structure: token-shift lerps, LoRA-parameterized decay
+w = exp(-exp(w0 + tanh(x@Aw)@Bw)), per-head bonus u, grouped head norm,
+squared-ReLU channel mix with receptance gate.  The WKV recurrence runs
+through ``kernels.ops.wkv6`` (Pallas on TPU, chunked jnp reference on CPU).
+O(1) decode state: (token-shift prevs, per-head K x V matrix state) — this is
+why rwkv6-7b is the natural long_500k architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from .layers import embed_lookup, cross_entropy, rms_norm
+from .module import ParamSpec
+from ..kernels import ops as kops
+
+_LORA = 64
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    L, d, ff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.hd
+    V = cfg.padded_vocab()
+
+    def lay(shape, logical, **kw):
+        return ParamSpec((L,) + shape, ("layers",) + logical, **kw)
+
+    blocks = {
+        "ln1": lay((d,), ("embed",), init="ones"),
+        "ln2": lay((d,), ("embed",), init="ones"),
+        "mu_r": lay((d,), ("embed",), init="zeros"),
+        "mu_k": lay((d,), ("embed",), init="zeros"),
+        "mu_v": lay((d,), ("embed",), init="zeros"),
+        "mu_g": lay((d,), ("embed",), init="zeros"),
+        "mu_w": lay((d,), ("embed",), init="zeros"),
+        "w0": lay((d,), ("embed",), init="zeros"),
+        "Aw": lay((d, _LORA), ("embed", "lora")),
+        "Bw": lay((_LORA, d), ("lora", "embed")),
+        "Wr": lay((d, H, hd), ("embed", "heads", "head_dim")),
+        "Wk": lay((d, H, hd), ("embed", "heads", "head_dim")),
+        "Wv": lay((d, H, hd), ("embed", "heads", "head_dim")),
+        "Wg": lay((d, H, hd), ("embed", "heads", "head_dim")),
+        "Wo": lay((H, hd, d), ("heads", "head_dim", "embed")),
+        "u": lay((H, hd), ("heads", "head_dim"), init="zeros"),
+        "ln_x": lay((H, hd), ("heads", "head_dim"), init="ones"),
+        "mu_ck": lay((d,), ("embed",), init="zeros"),
+        "mu_cr": lay((d,), ("embed",), init="zeros"),
+        "Wck": lay((d, ff), ("embed", "mlp")),
+        "Wcv": lay((ff, d), ("mlp", "embed")),
+        "Wcr": lay((d, d), ("embed", None)),
+    }
+    return {
+        "embed": ParamSpec((V, d), ("vocab", "embed")),
+        "blocks": blocks,
+        "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+    }
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _shift(x, prev):
+    """xprev_t = x_{t-1}; prev: (B,d) carried state (zeros at t=0)."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def time_mix(h, wb, cfg: ModelConfig, prev, S):
+    """h: (B,T,d); prev: (B,d); S: (B,H,hd,hd) -> (out, new_prev, new_S)."""
+    B, T, d = h.shape
+    H, hd = cfg.n_heads, cfg.hd
+    x = rms_norm(h, wb["ln1"])
+    xp = _shift(x, prev)
+    xr, xk, xv, xg, xw = (_lerp(x, xp, wb[m])
+                          for m in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+    wlog = wb["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw.astype(jnp.float32) @ wb["Aw"]) @ wb["Bw"]
+    w = jnp.exp(-jnp.exp(wlog))                          # (B,T,d) in (0,1)
+    r = jnp.einsum("btd,dhk->bhtk", xr, wb["Wr"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bhtk", xk, wb["Wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bhtk", xv, wb["Wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("btd,dhk->bthk", xg, wb["Wg"].astype(x.dtype)))
+    wh = w.reshape(B, T, H, hd).transpose(0, 2, 1, 3)    # (B,H,T,hd)
+    r = constrain(r, "batch", "heads_act", "seq", None)
+    y, S = kops.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), wh.astype(jnp.float32),
+                     wb["u"].astype(jnp.float32), S,
+                     chunk=cfg.ssm_chunk, use_pallas=cfg.use_pallas)
+    y = y.transpose(0, 2, 1, 3)                          # (B,T,H,hd)
+    y = rms_norm(y, jnp.ones((hd,), jnp.float32)) * wb["ln_x"].astype(y.dtype)
+    y = (y * g.astype(y.dtype)).reshape(B, T, H * hd)
+    out = jnp.einsum("bthk,hkd->btd",
+                     y.reshape(B, T, H, hd).astype(h.dtype),
+                     wb["Wo"].astype(h.dtype))
+    return out, x[:, -1, :], S
+
+
+def channel_mix(h, wb, cfg: ModelConfig, prev):
+    x = rms_norm(h, wb["ln2"])
+    xp = _shift(x, prev)
+    xk = _lerp(x, xp, wb["mu_ck"])
+    xr = _lerp(x, xp, wb["mu_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ wb["Wck"].astype(x.dtype)))
+    kk = constrain(kk, "batch", "seq", "mlp_act")
+    out = jax.nn.sigmoid(xr @ wb["Wcr"].astype(x.dtype)) * \
+        (kk @ wb["Wcv"].astype(x.dtype))
+    return out, x[:, -1, :]
+
+
+def block_apply(h, wb, cfg: ModelConfig, state):
+    h = constrain(h, "batch", "seq_res", None)
+    att, p1, S = time_mix(h, wb, cfg, state["prev_att"], state["S"])
+    h = h + att
+    ffn, p2 = channel_mix(h, wb, cfg, state["prev_ffn"])
+    h = h + ffn
+    return h, {"prev_att": p1, "prev_ffn": p2, "S": S}
+
+
+def _zero_state(cfg: ModelConfig, B: int, dtype=jnp.float32):
+    H, hd = cfg.n_heads, cfg.hd
+    return {"prev_att": jnp.zeros((B, cfg.d_model), dtype),
+            "prev_ffn": jnp.zeros((B, cfg.d_model), dtype),
+            "S": jnp.zeros((B, H, hd, hd), jnp.float32)}
+
+
+def forward(params, tokens, cfg: ModelConfig, state=None, return_state=False):
+    """tokens (B,T) -> logits (B,T,V).  ``state``: stacked per-layer decode
+    state (scan ys layout) or None for zeros."""
+    B, T = tokens.shape
+    h = constrain(embed_lookup(params["embed"], tokens, jnp.dtype(cfg.dtype)),
+                  "batch", "seq_res", None)
+
+    def body(carry, xs):
+        hh = carry
+        if state is None:
+            wb = xs
+            st = _zero_state(cfg, B, hh.dtype)
+        else:
+            wb, st = xs
+        hh, st = block_apply(hh, wb, cfg, st)
+        return hh, (st if (return_state or state is not None) else None)
+
+    xs = params["blocks"] if state is None else (params["blocks"], state)
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, new_state = jax.lax.scan(body, h, xs)
+    h = rms_norm(h, params["ln_f"])
+    logits = jnp.einsum("btd,dv->btv", h,
+                        params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    if return_state:
+        return logits, new_state
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], z_loss=1e-4,
+                         mask=batch.get("mask"))
+
+
+def state_specs(cfg: ModelConfig, batch: int, seq: int = 0) -> dict:
+    L, d, H, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "prev_att": ParamSpec((L, batch, d), ("layers", "batch", "embed"),
+                              init="zeros", dtype=dt),
+        "prev_ffn": ParamSpec((L, batch, d), ("layers", "batch", "embed"),
+                              init="zeros", dtype=dt),
+        "S": ParamSpec((L, batch, H, hd, hd),
+                       ("layers", "batch", "heads", "head_dim", None),
+                       init="zeros", dtype=jnp.float32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    logits, state = forward(params, tokens, cfg, return_state=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, state, tokens, cur_index, cfg: ModelConfig):
+    logits, state = forward(params, tokens, cfg, state=state,
+                            return_state=True)
+    return logits[:, 0], state

@@ -1,0 +1,242 @@
+"""Decoder-only transformer stack (dense + MoE FFN + VLM prefix), GQA + RoPE
++ SwiGLU, scan-over-layers with stacked weights, optional per-block remat.
+
+Covers: deepseek-67b, deepseek-coder-33b, qwen3-0.6b, phi3-mini-3.8b,
+internvl2-2b (patch-embedding prefix), mixtral-8x7b (SWA + MoE),
+granite-moe-1b-a400m (MoE).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from .layers import (attention_decode, attention_ref, cross_entropy,
+                     embed_lookup, rms_norm, rope, swiglu)
+from .module import ParamSpec
+from . import moe as moe_mod
+
+
+# ------------------------------------------------------------------- specs
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    L, d = cfg.n_layers, cfg.d_model
+    Hp, KV, hd, ff = cfg.padded_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    V = cfg.padded_vocab()
+
+    def lay(shape, logical, **kw):
+        return ParamSpec((L,) + shape, ("layers",) + logical, **kw)
+
+    blocks = {
+        "ln1": lay((d,), ("embed",), init="ones"),
+        "wq": lay((d, Hp, hd), ("embed", "heads", "head_dim")),
+        "wk": lay((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": lay((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": lay((Hp, hd, d), ("heads", "head_dim", "embed")),
+        "ln2": lay((d,), ("embed",), init="ones"),
+    }
+    if cfg.qk_norm:
+        blocks["qnorm"] = lay((hd,), ("head_dim",), init="ones")
+        blocks["knorm"] = lay((hd,), ("head_dim",), init="ones")
+    if cfg.n_experts:
+        blocks.update({
+            "router": lay((d, cfg.n_experts), ("embed", None)),
+            "wg": lay((cfg.n_experts, d, ff), ("expert", "embed", "mlp")),
+            "wu": lay((cfg.n_experts, d, ff), ("expert", "embed", "mlp")),
+            "wd": lay((cfg.n_experts, ff, d), ("expert", "mlp", "embed")),
+        })
+    else:
+        blocks.update({
+            "wg": lay((d, ff), ("embed", "mlp")),
+            "wu": lay((d, ff), ("embed", "mlp")),
+            "wd": lay((ff, d), ("mlp", "embed")),
+        })
+    return {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), scale=1.0),
+        "blocks": blocks,
+        "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+    }
+
+
+# ----------------------------------------------------------------- forward
+
+def _attn_proj(x, wb, cfg: ModelConfig, positions):
+    if cfg.pin_weight_shards:
+        # keep the sliced layer weights in their resident sharding; without
+        # this XLA's SPMD replicates whole attention matrices per decode
+        # step (EXPERIMENTS.md §Perf C2)
+        wb = dict(wb)
+        for k_, ax in (("wq", "heads"), ("wk", "kv_heads"), ("wv", "kv_heads")):
+            wb[k_] = constrain(wb[k_], "embed", ax, "head_dim")
+        wb["wo"] = constrain(wb["wo"], "heads", "head_dim", "embed")
+    q = jnp.einsum("btd,dhk->bthk", x, wb["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dgk->btgk", x, wb["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dgk->btgk", x, wb["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, wb["qnorm"])
+        k = rms_norm(k, wb["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads_act", None)
+    return q, k, v
+
+
+def block_apply(h, wb, cfg: ModelConfig, positions, causal_skip=False):
+    """One decoder block over a full sequence; h: (B,T,d)."""
+    x = rms_norm(h, wb["ln1"])
+    q, k, v = _attn_proj(x, wb, cfg, positions)
+    o = attention_ref(q, k, v, causal=True, window=cfg.sliding_window,
+                      chunk_kv=cfg.attn_chunk_kv, causal_skip=causal_skip)
+    o = jnp.einsum("bthk,hkd->btd", o, wb["wo"].astype(o.dtype))
+    h = h + constrain(o, "batch", "seq_res", None)
+    x = rms_norm(h, wb["ln2"])
+    if cfg.n_experts:
+        y, aux = moe_mod.moe_ffn(x, wb, cfg)
+    else:
+        y, aux = swiglu(x, wb["wg"].astype(x.dtype), wb["wu"].astype(x.dtype),
+                        wb["wd"].astype(x.dtype)), 0.0
+    h = h + constrain(y, "batch", "seq_res", None)
+    return h, (k, v), aux
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    e = embed_lookup(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    return constrain(e, "batch", "seq_res", None)
+
+
+def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None,
+            causal_skip: bool = False, return_cache: bool = False):
+    """Full-sequence forward.  tokens: (B,T); prefix_embeds: (B,P,d) for the
+    VLM patch prefix (replaces the first P token embeddings).
+    Returns logits (B,T,V) [f32], and the per-layer KV cache if asked."""
+    h = embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h[:, P:]], axis=1)
+    B, T, _ = h.shape
+    positions = jnp.arange(T)
+
+    def body(carry, wb):
+        hh = carry
+        hh, kv, aux = block_apply(hh, wb, cfg, positions,
+                                  causal_skip=causal_skip or
+                                  cfg.attn_causal_skip)
+        ys = kv if return_cache else None
+        return hh, (ys, aux)
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, (cache, aux) = jax.lax.scan(body, h, params["blocks"])
+    h = rms_norm(h, params["ln_f"])
+    logits = jnp.einsum("btd,dv->btv", h,
+                        params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    aux_loss = jnp.sum(aux) if cfg.n_experts else 0.0
+    if return_cache:
+        return logits, cache, aux_loss
+    return logits, aux_loss
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          prefix_embeds=batch.get("prefix_embeds"))
+    loss = cross_entropy(logits, batch["labels"], z_loss=1e-4,
+                         mask=batch.get("mask"))
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss
+
+
+# ------------------------------------------------------------------ decode
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract KV cache layout; 'kv_seq' is the context-parallel dim."""
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    S = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    dt = jnp.dtype(cfg.dtype)
+    sp = ParamSpec((L, batch, S, KV, hd),
+                   ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                   init="zeros", dtype=dt)
+    return {"k": sp, "v": sp}
+
+
+def prefill(params, tokens, cfg: ModelConfig, prefix_embeds=None,
+            cache_len: int = 0):
+    """Run the full prompt, return (last-token logits, stacked KV cache).
+
+    The cache is padded to ``cache_len`` (or W for SWA) so decode_step's
+    dynamic_update_slice writes in bounds; SWA caches are rotated so that
+    slot == position % W for any prompt length."""
+    logits, cache, _ = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                               return_cache=True, causal_skip=False)
+    k, v = cache            # (L, B, T, KV, hd) each
+    T = tokens.shape[1]
+    W = cfg.sliding_window
+    if W and W < T:
+        # keep last W positions, rotated so slot = pos % W
+        k = jnp.roll(k[:, :, -W:], T % W, axis=2)
+        v = jnp.roll(v[:, :, -W:], T % W, axis=2)
+    S = min(cache_len, W) if W else cache_len
+    if S and S > k.shape[2]:
+        pad = [(0, 0), (0, 0), (0, S - k.shape[2]), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    k = constrain(k, "layers", "batch", "kv_seq", "kv_heads", None)
+    v = constrain(v, "layers", "batch", "kv_seq", "kv_heads", None)
+    return logits[:, -1], {"k": k, "v": v}
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
+    """One decode step: tokens (B,1) at absolute position cur_index (scalar).
+    Returns (logits (B,V), new cache)."""
+    h = embed_tokens(params, tokens, cfg)
+    S = cache["k"].shape[2]
+    W = cfg.sliding_window
+    write_pos = (cur_index % W) if (W and W <= S) else cur_index
+    positions = jnp.full((1,), cur_index)
+    L = cfg.n_layers
+
+    # The stacked KV cache travels through the layer scan as *carry* with one
+    # in-place dynamic_update_slice per layer — passing it as scan xs/ys makes
+    # XLA double-buffer the whole cache (2.4x HBM at deepseek-67b decode_32k;
+    # EXPERIMENTS.md §Perf).
+    def body(carry, xs):
+        hh, ck_all, cv_all = carry
+        wb, li = xs
+        x = rms_norm(hh, wb["ln1"])
+        q, k, v = _attn_proj(x, wb, cfg, positions)
+        ck_all = jax.lax.dynamic_update_slice(
+            ck_all, k[None].astype(ck_all.dtype), (li, 0, write_pos, 0, 0))
+        cv_all = jax.lax.dynamic_update_slice(
+            cv_all, v[None].astype(cv_all.dtype), (li, 0, write_pos, 0, 0))
+        ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        # barrier: the CPU backend lowers bf16 dots as convert+f32 dot and
+        # hoists the convert through the DUS-select onto the WHOLE cache
+        # stack (2x HBM); the barrier pins the upcast to the layer slice.
+        # TPU reads bf16 natively, so this costs nothing on target hardware.
+        ck, cv = jax.lax.optimization_barrier((ck, cv))
+        # rolling (SWA) cache: slots <= cur are valid until the first wrap,
+        # then every slot is (prefill fills slots aligned since T % W == 0)
+        o = attention_decode(q, ck, cv, jnp.minimum(cur_index, S - 1))
+        o = jnp.einsum("bthk,hkd->btd", o, wb["wo"].astype(o.dtype))
+        hh = hh + o
+        x = rms_norm(hh, wb["ln2"])
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_ffn(x, wb, cfg)
+        else:
+            y = swiglu(x, wb["wg"].astype(x.dtype), wb["wu"].astype(x.dtype),
+                       wb["wd"].astype(x.dtype))
+        return (hh + y, ck_all, cv_all), None
+
+    (h, k_new, v_new), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(L)))
+    h = rms_norm(h, params["ln_f"])
+    logits = (h[:, 0] @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,219 @@
+"""Zamba2-7B hybrid: 81 Mamba2 blocks + one *shared* attention block applied
+every 6 blocks on concat(hidden, original embedding) (2d -> d).
+
+Layout: 13 scanned groups of 6 blocks + a tail of 3; the shared attention
+block (single weight set) fires before each group and before the tail — 14
+applications per forward.  Decode state: 81 Mamba2 states (O(1) in seq) + 14
+KV caches for the shared block — this is why zamba2 runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import constrain
+from .layers import (attention_decode, attention_ref, cross_entropy, embed_lookup,
+                     rms_norm, rope)
+from .module import ParamSpec
+from . import mamba2
+
+
+def _split(cfg: ModelConfig):
+    k = cfg.attn_every
+    n_full = cfg.n_layers // k
+    tail = cfg.n_layers - n_full * k
+    return k, n_full, tail
+
+
+def n_attn_applications(cfg: ModelConfig) -> int:
+    k, n_full, tail = _split(cfg)
+    return n_full + (1 if tail else 0)
+
+
+def _grouped(specs: dict, n: int) -> dict:
+    return {k: ParamSpec((n,) + s.shape, ("group",) + s.logical,
+                         init=s.init, scale=s.scale, dtype=s.dtype)
+            for k, s in specs.items()}
+
+
+def zamba_specs(cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    V = cfg.padded_vocab()
+    k, n_full, tail = _split(cfg)
+    shared = {
+        "ln": ParamSpec((2 * d,), ("embed",), init="ones"),
+        "wq": ParamSpec((2 * d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((2 * d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((2 * d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    out = {
+        "embed": ParamSpec((V, d), ("vocab", "embed")),
+        "shared_attn": shared,
+        "groups": _grouped(mamba2.mamba_specs(cfg, k), n_full),
+        "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+    }
+    if tail:
+        out["tail"] = mamba2.mamba_specs(cfg, tail)
+    return out
+
+
+def shared_attn(h, x0, w, cfg: ModelConfig, positions, cache=None, cur=None):
+    """Shared attention on concat(h, x0).  Returns (h+out, kv):
+    training/prefill -> kv = (k, v) for the whole sequence;
+    decode -> kv = updated (ck, cv) caches."""
+    x = jnp.concatenate([h, x0], axis=-1)
+    x = rms_norm(x, w["ln"])
+    q = jnp.einsum("btd,dhk->bthk", x, w["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dgk->btgk", x, w["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dgk->btgk", x, w["wv"].astype(x.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads_act", None)
+    if cache is None:
+        o = attention_ref(q, k, v, causal=True, chunk_kv=cfg.attn_chunk_kv)
+        kv = (k, v)
+    else:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cur, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cur, 0, 0))
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        o = attention_decode(q, ck, cv, cur)
+        kv = (ck, cv)
+    out = jnp.einsum("bthk,hkd->btd", o, w["wo"].astype(o.dtype))
+    return h + out, kv
+
+
+def forward(params, tokens, cfg: ModelConfig, state=None, kv_caches=None,
+            cur_index=None, return_state=False):
+    """tokens (B,T) -> logits.  Decode when ``state`` is given: kv_caches is
+    an (n_apps, B, S, KV, hd) pair, cur_index the write position."""
+    B, T = tokens.shape
+    k_grp, n_full, tail = _split(cfg)
+    h = constrain(embed_lookup(params["embed"], tokens, jnp.dtype(cfg.dtype)),
+                  "batch", "seq_res", None)
+    x0 = h
+    positions = (jnp.arange(T) if cur_index is None
+                 else jnp.full((T,), cur_index))
+    decode = state is not None
+    want_state = decode or return_state
+
+    def blk(c, b_xs):
+        if decode:
+            wb, bst = b_xs
+        else:
+            wb = b_xs
+            bst = mamba2.zero_state(cfg, B, c.dtype)
+        c, bst = mamba2.block_apply(c, wb, cfg, bst)
+        return c, (bst if want_state else None)
+    blk_f = jax.checkpoint(blk) if cfg.remat == "block" else blk
+
+    def group_body(hh, xs):
+        if decode:
+            wg, st, kvc = xs
+        else:
+            wg, st, kvc = xs, None, None
+        hh, kv = shared_attn(hh, x0, params["shared_attn"], cfg, positions,
+                             cache=kvc, cur=cur_index)
+        hh, new_st = jax.lax.scan(blk_f, hh, (wg, st) if decode else wg)
+        return hh, (kv if want_state else None, new_st)
+
+    grp_xs = ((params["groups"], state["groups"],
+               (kv_caches[0][:n_full], kv_caches[1][:n_full]))
+              if decode else params["groups"])
+    h, (kvs, g_state) = jax.lax.scan(group_body, h, grp_xs)
+
+    tail_kv, t_state = None, None
+    if tail:
+        kvc = (kv_caches[0][n_full], kv_caches[1][n_full]) if decode else None
+        h, tail_kv = shared_attn(h, x0, params["shared_attn"], cfg, positions,
+                                 cache=kvc, cur=cur_index)
+        h, t_state = jax.lax.scan(blk_f, h,
+                                  (params["tail"], state["tail"]) if decode
+                                  else params["tail"])
+        if not want_state:
+            tail_kv = None
+
+    h = rms_norm(h, params["ln_f"])
+    logits = jnp.einsum("btd,dv->btv", h,
+                        params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    if want_state and return_state:
+        return logits, {"groups": g_state, "tail": t_state}, (kvs, tail_kv)
+    if decode:
+        return logits, {"groups": g_state, "tail": t_state}, (kvs, tail_kv)
+    return logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], z_loss=1e-4,
+                         mask=batch.get("mask"))
+
+
+# ------------------------------------------------------------------ serving
+
+def state_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    k, n_full, tail = _split(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    napp = n_attn_applications(cfg)
+    dt = jnp.dtype(cfg.dtype)
+
+    def stack(specs, n):
+        return {kk: ParamSpec((n,) + s.shape, ("group",) + s.logical,
+                              init="zeros", dtype=s.dtype)
+                for kk, s in specs.items()}
+
+    out = {
+        "mamba": {
+            "groups": stack(mamba2.state_specs(cfg, k, batch), n_full),
+        },
+        "kv": {
+            "k": ParamSpec((napp, batch, seq, KV, hd),
+                           ("group", "batch", "kv_seq", "kv_heads", "head_dim"),
+                           init="zeros", dtype=dt),
+            "v": ParamSpec((napp, batch, seq, KV, hd),
+                           ("group", "batch", "kv_seq", "kv_heads", "head_dim"),
+                           init="zeros", dtype=dt),
+        },
+    }
+    if tail:
+        out["mamba"]["tail"] = mamba2.state_specs(cfg, tail, batch)
+    return out
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int = 0):
+    """Returns (last logits, decode state dict matching state_specs)."""
+    B, T = tokens.shape
+    S = cache_len or T
+    logits, mstate, (kvs, tail_kv) = forward(params, tokens, cfg,
+                                             return_state=True)
+    k, n_full, tail = _split(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    napp = n_attn_applications(cfg)
+    ck = jnp.zeros((napp, B, S, KV, hd), jnp.dtype(cfg.dtype))
+    cv = jnp.zeros_like(ck)
+    kk, vv = kvs
+    if tail:
+        kk = jnp.concatenate([kk, tail_kv[0][None]], axis=0)
+        vv = jnp.concatenate([vv, tail_kv[1][None]], axis=0)
+    ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype), (0, 0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype), (0, 0, 0, 0, 0))
+    return logits[:, -1], {"mamba": mstate, "kv": {"k": ck, "v": cv}}
+
+
+def decode_step(params, state, tokens, cur_index, cfg: ModelConfig):
+    logits, mstate, (kvs, tail_kv) = forward(
+        params, tokens, cfg, state=state["mamba"],
+        kv_caches=(state["kv"]["k"], state["kv"]["v"]), cur_index=cur_index)
+    k, n_full, tail = _split(cfg)
+    ck, cv = kvs
+    if tail:
+        ck = jnp.concatenate([ck, tail_kv[0][None]], axis=0)
+        cv = jnp.concatenate([cv, tail_kv[1][None]], axis=0)
+    new = {"mamba": mstate, "kv": {"k": ck, "v": cv}}
+    return logits[:, 0], new

@@ -1,0 +1,154 @@
+"""Batched serving engine: fixed-slot continuous batching over the model
+API's prefill/decode steps.
+
+B slots; incoming requests fill free slots (prompt padded to a bucket,
+prefilled), every engine tick decodes one token for all active slots,
+finished slots (EOS or max_tokens) are drained and refilled.  Greedy or
+temperature sampling.  The decode step is a single jitted program; slot
+state lives in the stacked KV caches the model family defines.
+
+This single-host engine is the unit that a multi-pod deployment replicates
+per data-parallel group; the decode_32k / long_500k dry-run cells lower
+exactly the ``_decode_all`` program at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import ModelApi
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, params, batch_slots: int = 4,
+                 max_seq: int = 128, eos_id: Optional[int] = None, seed: int = 0):
+        self.api = api
+        self.params = params
+        self.B = batch_slots
+        self.S = max_seq
+        self.eos = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.cur_len = np.zeros(batch_slots, np.int32)
+        self.cache = None
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, b: api.decode_fn(p, c, b))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request):
+        """Prefill a single request and merge its cache into the batch cache
+        at ``slot`` (batch dim per family layout).
+
+        Slots share one position counter, so requests are bucketed by prompt
+        length (the scheduler only co-batches equal-length prompts; a
+        production engine would add per-slot positions — see DESIGN.md)."""
+        active = [r for r in self.slots if r is not None and r is not req]
+        if active:
+            assert len(req.prompt) == len(active[0].prompt), \
+                "co-batched prompts must share a length bucket"
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": toks}
+        if self.api.cfg.family == "encdec":
+            batch["frame_embeds"] = jnp.zeros(
+                (1, min(len(req.prompt), self.api.cfg.enc_len_cap),
+                 self.api.cfg.d_model), jnp.float32)
+        if self.api.cfg.family == "vlm":
+            batch["prefix_embeds"] = jnp.zeros(
+                (1, self.api.cfg.n_patches, self.api.cfg.d_model), jnp.float32)
+        logits, cache1 = self.api.prefill_fn(self.params, batch,
+                                             cache_len=self.S)
+        if self.cache is None:
+            self.cache = jax.tree_util.tree_map(
+                lambda x: jnp.concatenate([x] * self.B, axis=self._bdim(x)),
+                cache1)
+        self.cache = jax.tree_util.tree_map(
+            lambda full, one: _place(full, one, slot, self._bdim(full)),
+            self.cache, cache1)
+        self.cur_len[slot] = len(req.prompt)
+        tok = self._sample(logits, req)
+        req.output.append(tok)
+
+    def _bdim(self, x) -> int:
+        # family cache layouts put batch at axis 1 (stacked layer/group dim
+        # first); encdec/zamba kv also axis 1.
+        return 1
+
+    def _sample(self, logits, req: Request) -> int:
+        logits = logits[0] if logits.ndim == 2 else logits[0, -1]
+        if req.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            tok = int(jax.random.categorical(k, logits / req.temperature))
+        else:
+            tok = int(jnp.argmax(logits))
+        return tok
+
+    # --------------------------------------------------------------- tick
+    def _fill_slots(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._prefill_one(i, req)
+
+    def step(self):
+        """One engine tick: decode one token for every active slot."""
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        last = np.zeros((self.B, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slots[i].output[-1]
+        cur = int(max(self.cur_len[i] for i in active))
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(last), "cur_index": jnp.int32(cur)})
+        for i in active:
+            req = self.slots[i]
+            tok = self._sample(logits[i:i + 1], req)
+            req.output.append(tok)
+            self.cur_len[i] += 1
+            if (self.eos is not None and tok == self.eos) or \
+                    len(req.output) >= req.max_tokens or \
+                    self.cur_len[i] >= self.S - 1:
+                req.done = True
+                self.slots[i] = None
+
+    def run_until_done(self, max_ticks: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            before = [r for r in self.slots if r]
+            self.step()
+            ticks += 1
+            for r in before:
+                if r.done and r not in finished:
+                    finished.append(r)
+        return finished
+
+
+def _place(full, one, slot: int, bdim: int):
+    idx = [slice(None)] * full.ndim
+    idx[bdim] = slice(slot, slot + 1)
+    return full.at[tuple(idx)].set(one.astype(full.dtype))

@@ -1,0 +1,7 @@
+from .rules import (DEFAULT_RULES, spec_for, param_partition_specs,
+                    constrain, sharding_ctx, current_mesh, named_sharding,
+                    batch_axes_for, decode_cache_rules)
+
+__all__ = ["DEFAULT_RULES", "spec_for", "param_partition_specs", "constrain",
+           "sharding_ctx", "current_mesh", "named_sharding",
+           "batch_axes_for", "decode_cache_rules"]

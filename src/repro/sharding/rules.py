@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules (MaxText-style) for all model families.
+
+Every parameter/activation dimension carries a *logical* name; this module
+maps logical names to mesh axes, checking divisibility (dims that don't
+divide are replicated — e.g. 8 KV heads on a 16-way model axis).  The rules
+are data for the perf hillclimb: changing a rule re-shards the whole model.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in priority order; filtered to the
+# axes present in the mesh and to divisible sizes)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                      # attention-internal seq dim: unsharded
+    "seq_res": ("model",),          # residual stream at block boundaries:
+                                    # sequence parallelism — the remat-saved
+                                    # activations shard over 'model', cutting
+                                    # per-device activation memory 16x
+    "act_embed": (),
+    "heads_act": ("model",),
+    "mlp_act": ("model",),
+    "kv_seq": ("model",),           # decode KV cache context parallelism
+    # params
+    "embed": ("data",),             # FSDP shard of the d_model dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": (),                   # "tp" MoE: experts replicated, ff TP'd;
+                                    # "ep" overrides this to ("model",)
+    "layers": (), "group": (), "head_dim": (), "state": (), "conv": (),
+    "lora": (), "enc_seq": (),
+}
+
+_tls = threading.local()
+
+
+@contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    """Install a mesh + rules for ``constrain`` calls inside model code."""
+    prev = getattr(_tls, "ctx", None)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _tls.ctx = (mesh, merged) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_tls, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _axes_for(logical: Optional[str], dim: int, mesh: Mesh, rules: Dict,
+              used: set) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    cand = rules.get(logical, ())
+    picked = []
+    size = 1
+    for ax in cand:
+        if ax not in mesh.axis_names or ax in used:
+            continue
+        nsz = size * mesh.shape[ax]
+        if dim % nsz != 0:
+            continue
+        picked.append(ax)
+        size = nsz
+    if not picked:
+        return None
+    used.update(picked)
+    return tuple(picked)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[Dict] = None) -> P:
+    """PartitionSpec for one array given its logical axes."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        axes = _axes_for(name, dim, mesh, rules, used)
+        if axes is None:
+            entries.append(None)
+        elif len(axes) == 1:
+            entries.append(axes[0])
+        else:
+            entries.append(axes)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_partition_specs(specs_tree, mesh: Mesh, rules: Optional[Dict] = None):
+    """Pytree of PartitionSpec parallel to a ParamSpec tree."""
+    from ..models.module import ParamSpec, is_spec
+    return jax.tree_util.tree_map(
+        lambda s: spec_for(s.shape, s.logical, mesh, rules), specs_tree,
+        is_leaf=is_spec)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint using the installed rules; no-op without a
+    mesh (CPU smoke tests)."""
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes_for(global_batch: int, mesh: Mesh) -> Tuple[str, ...]:
+    """Axes of ('pod','data') that evenly divide the global batch."""
+    picked = []
+    size = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names and global_batch % (size * mesh.shape[ax]) == 0:
+            picked.append(ax)
+            size *= mesh.shape[ax]
+    return tuple(picked)
+
+
+def decode_cache_rules(global_batch: int, seq_len: int, mesh: Mesh) -> Dict:
+    """Rules override for decode.
+
+    Batched decode: batch over (pod, data); the cache's KV-head dim (or
+    head_dim when KV heads don't divide) takes 'model'.  A cache update on a
+    head-sharded layout is a plain in-place dynamic_update_slice; updating a
+    *sequence*-sharded cache lowers to a full-buffer masked select (2-3x HBM
+    + an f32 upcast on the CPU backend — EXPERIMENTS.md §Perf).
+
+    Long-context decode (batch 1): capacity forces context parallelism —
+    the sequence dim absorbs every axis, and attention's softmax reductions
+    become all-reduces (flash-decoding)."""
+    baxes = batch_axes_for(global_batch, mesh)
+    rest = [ax for ax in ("pod", "data", "model")
+            if ax in mesh.axis_names and ax not in baxes]
+    if baxes:
+        # spec_for falls back per-dim on divisibility: KV heads first, then
+        # head_dim; kv_seq stays unsharded.
+        return {"batch": baxes, "kv_seq": (),
+                "kv_heads": tuple(rest), "head_dim": tuple(rest)}
+    kv_axes = []
+    size = 1
+    for ax in rest:
+        if seq_len % (size * mesh.shape[ax]) == 0:
+            kv_axes.append(ax)
+            size *= mesh.shape[ax]
+    return {"batch": baxes, "kv_seq": tuple(kv_axes)}

@@ -1,0 +1,133 @@
+"""Step-atomic sharded checkpointing with elastic re-shard on restore.
+
+Layout: <dir>/step_<n>/  with one .npy per pytree leaf (path-encoded name)
+plus meta.json.  Writes go to a tmp dir then rename (atomic on POSIX), so a
+preemption mid-write never corrupts the latest checkpoint.  ``restore`` can
+re-shard onto a different mesh/chip count (elastic scaling): arrays are
+loaded host-side and device_put with the new shardings.  Async saves run on
+a daemon thread (the training loop never blocks on I/O).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bf16/fp8 natively: store as a same-width uint view
+# and record the real dtype in meta.json
+_EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+           "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+           "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key or "root"] = leaf
+    return out, treedef
+
+
+def _sanitize(key: str) -> str:
+    return re.sub(r"[^\w/.\-]", "_", key).replace("/", "__")
+
+
+def save(tree, directory: str, step: int, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    flat, _ = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    dtypes = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        for dt_name, (store, real) in _EXOTIC.items():
+            if arr.dtype == real:
+                dtypes[key] = dt_name
+                arr = arr.view(store)
+                break
+        np.save(os.path.join(tmp, _sanitize(key) + ".npy"), arr)
+    meta = {"step": step, "keys": list(flat.keys()), "dtypes": dtypes}
+    if extra:
+        meta["extra"] = extra
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+_pending: list = []
+
+
+def save_async(tree, directory: str, step: int, extra: Optional[dict] = None,
+               keep: int = 3) -> threading.Thread:
+    """Non-blocking save; call wait_pending() before exit."""
+    tree = jax.tree_util.tree_map(jax.device_get, tree)   # snapshot now
+    t = threading.Thread(target=save, args=(tree, directory, step),
+                         kwargs=dict(extra=extra, keep=keep), daemon=True)
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    while _pending:
+        _pending.pop().join()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(template, directory: str, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``template`` (arrays or
+    ShapeDtypeStructs).  ``shardings``: optional pytree of NamedSharding for
+    elastic re-shard onto the current mesh."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat, treedef = _flatten(template)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat, _ = _flatten(shardings)
+    dtypes = meta.get("dtypes", {})
+    out = {}
+    for key in flat:
+        arr = np.load(os.path.join(path, _sanitize(key) + ".npy"))
+        if key in dtypes:
+            arr = arr.view(_EXOTIC[dtypes[key]][1])
+        if sh_flat is not None and key in sh_flat:
+            out[key] = jax.device_put(arr, sh_flat[key])
+        else:
+            out[key] = jax.numpy.asarray(arr)
+    leaves = [out[k] for k in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(int(m.group(1)) for d in os.listdir(directory)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

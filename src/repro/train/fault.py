@@ -1,0 +1,110 @@
+"""Fault tolerance harness: resume-from-latest, emergency save on SIGTERM,
+failure-injected retry loop, and a straggler watchdog.
+
+On a real cluster this wraps jax.distributed + hardware preemption notices;
+the control flow is identical at any scale because all state that matters
+(params, optimizer, data-pipeline cursor, RNG) lives in the checkpoint.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from . import checkpoint as ckpt
+
+
+@dataclass
+class StragglerStats:
+    """Step-time watchdog: flags steps slower than k*median as stragglers
+    (on multi-host: triggers data re-balance / hot-spare swap-in)."""
+    window: int = 50
+    k: float = 3.0
+    times: list = field(default_factory=list)
+    flagged: int = 0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = sorted(self.times)[len(self.times) // 2]
+        slow = len(self.times) >= 5 and dt > self.k * med
+        self.flagged += int(slow)
+        return slow
+
+
+class FaultTolerantLoop:
+    """Drives step_fn with checkpoint/restart semantics.
+
+    * restores the latest checkpoint on construction (elastic re-shard via
+      ``shardings``),
+    * periodic async checkpoints,
+    * emergency synchronous checkpoint on SIGTERM/SIGINT (preemption),
+    * on a step exception (injected or real): restore latest and replay.
+    """
+
+    def __init__(self, state, directory: str, save_every: int = 100,
+                 keep: int = 3, shardings=None,
+                 inject_failure: Optional[Callable[[int], bool]] = None):
+        self.directory = directory
+        self.save_every = save_every
+        self.keep = keep
+        self.shardings = shardings
+        self.inject_failure = inject_failure
+        self.straggler = StragglerStats()
+        self.restarts = 0
+        step = ckpt.latest_step(directory)
+        if step is not None:
+            state, meta = ckpt.restore(state, directory, shardings=shardings)
+            self.start_step = meta["step"]
+        else:
+            self.start_step = 0
+            # initial checkpoint: a failure before the first periodic save
+            # must still be recoverable
+            ckpt.save(state, directory, 0, keep=keep)
+        self.state = state
+        self._install_signal_handlers()
+
+    def _install_signal_handlers(self):
+        self._prev = {}
+        for sig in (signal.SIGTERM,):
+            try:
+                self._prev[sig] = signal.signal(sig, self._emergency)
+            except ValueError:
+                pass                      # non-main thread (tests)
+
+    def _emergency(self, signum, frame):
+        ckpt.save(self.state, self.directory, self._cur_step,
+                  extra={"emergency": True}, keep=self.keep)
+        if callable(self._prev.get(signum)):
+            self._prev[signum](signum, frame)
+
+    def run(self, step_fn: Callable, n_steps: int, log_every: int = 0):
+        """step_fn(state, step)->state.  Returns final state."""
+        s = self.start_step
+        self._cur_step = s
+        while s < n_steps:
+            t0 = time.time()
+            try:
+                if self.inject_failure and self.inject_failure(s):
+                    raise RuntimeError(f"injected failure at step {s}")
+                self.state = step_fn(self.state, s)
+            except Exception:
+                self.restarts += 1
+                ckpt.wait_pending()          # async saves land before restore
+                last = ckpt.latest_step(self.directory)
+                if last is None:
+                    raise
+                self.state, meta = ckpt.restore(
+                    self.state, self.directory, shardings=self.shardings)
+                s = meta["step"]
+                continue
+            s += 1
+            self._cur_step = s
+            self.straggler.record(time.time() - t0)
+            if self.save_every and s % self.save_every == 0:
+                ckpt.save_async(self.state, self.directory, s, keep=self.keep)
+        ckpt.wait_pending()
+        ckpt.save(self.state, self.directory, s, keep=self.keep)
+        return self.state

@@ -1,0 +1,72 @@
+"""AdamW + cosine schedule + global-norm clipping, in pure JAX pytrees.
+
+Optimizer moments are sharded exactly like their parameters (ZeRO): the
+same PartitionSpec tree applies leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamState:
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                               params)
+    z2 = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                                params)
+    return AdamState(mu=z, nu=z2, step=jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(tc: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    return tc.lr * warm * (0.5 * (1 + jnp.cos(math.pi * prog)))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, state: AdamState, tc: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if tc.grad_clip else 1.0
+    lr = cosine_lr(tc, step)
+    b1, b2, eps = tc.beta1, tc.beta2, 1e-8
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, AdamState(mu=new_m, nu=new_v, step=step), metrics

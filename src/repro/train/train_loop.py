@@ -1,0 +1,102 @@
+"""Train-step factory: value_and_grad + grad accumulation + AdamW, with
+sharding-aware jit wiring (in/out shardings from the logical rules).
+
+The returned step is a single pjit program: FSDP weight gathers, TP
+collectives, and the DP gradient reduction are all emitted by the SPMD
+partitioner from the shardings — EDAN's HLO frontend then reads them back
+out of the compiled module (that is the paper's analysis loop applied to
+ourselves).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import ModelApi
+from ..models.module import abstract_params, logical_axes
+from ..sharding import param_partition_specs, sharding_ctx, spec_for
+from ..sharding.rules import DEFAULT_RULES, batch_axes_for
+from .optimizer import AdamState, adamw_init, adamw_update
+
+
+def make_train_step(api: ModelApi, tc: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Grad accumulation: batch's leading dim is split into tc.microbatches
+    chunks scanned sequentially (compute/comm overlap comes from the XLA
+    latency-hiding scheduler across microbatches)."""
+    cfg = api.cfg
+
+    def loss_fn(p, b):
+        if tc.cast_params_bf16:
+            # bf16 compute copy once per step: FSDP gathers and per-layer
+            # weight reads move 2 bytes/param instead of 4; grads flow back
+            # to the f32 masters (EXPERIMENTS.md §Perf iter A2)
+            p = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 and x.ndim > 1 else x, p)
+        return api.loss_fn(p, b)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if tc.microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                mb = tc.microbatches
+                return x.reshape(mb, B // mb, *x.shape[1:])
+            mbatch = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), mbatch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tc.microbatches, grads)
+            loss = loss / tc.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, tc)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def shardings_for_train(api: ModelApi, mesh, rules: Optional[dict] = None):
+    """(param_specs, opt_specs, batch_spec_fn) PartitionSpec trees."""
+    merged = dict(DEFAULT_RULES)
+    merged.update(api.rules_override())
+    if rules:
+        merged.update(rules)
+    specs = api.specs()
+    pspecs = param_partition_specs(specs, mesh, merged)
+    opt_specs = AdamState(mu=pspecs, nu=pspecs, step=P())
+    return pspecs, opt_specs, merged
+
+
+def jit_train_step(api: ModelApi, tc: TrainConfig, mesh, rules=None,
+                   donate: bool = True):
+    """Fully-wired jitted train step + abstract input builder for AOT use."""
+    pspecs, opt_specs, merged = shardings_for_train(api, mesh, rules)
+    step = make_train_step(api, tc)
+
+    def wrapped(params, opt_state, batch):
+        with sharding_ctx(mesh, merged):
+            return step(params, opt_state, batch)
+
+    ns = lambda s: jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), s,
+        is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(opt_specs), None)
+    jf = jax.jit(wrapped, in_shardings=in_sh,
+                 out_shardings=(ns(pspecs), ns(opt_specs), None),
+                 donate_argnums=(0, 1) if donate else ())
+    return jf, pspecs, opt_specs, merged

@@ -1,0 +1,118 @@
+"""Paper applications: PolyBench scalar/JAX twins, HPCG, LULESH (§4-5)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps import hpcg, lulesh, polybench
+from repro.core import make_cache, report
+
+
+def test_all_kernels_trace():
+    for name in polybench.PAPER_15:
+        g = polybench.trace_kernel(name, 8)
+        assert g.n_vertices > 0
+        lay = g.mem_layers()
+        assert lay.W > 0 and lay.D >= 1
+
+
+def test_gemm_matches_numpy():
+    """The traced kernel computes the real result (values flow through)."""
+    rng = np.random.default_rng(0)
+    from repro.core.trace import Tracer
+    tr = Tracer()
+    N = 6
+    A0, B0, C0 = (rng.standard_normal((N, N)) for _ in range(3))
+    A, B = tr.array(A0, "A"), tr.array(B0, "B")
+    C = tr.array(C0, "C")
+    polybench.SCALAR_KERNELS  # gemm semantics: C = 1.5 A B + 1.2 C
+    for i in range(N):
+        for j in range(N):
+            acc = tr.alu('*', C.load(i, j), tr.const(1.2))
+            for k in range(N):
+                acc = tr.alu('+', acc, tr.alu(
+                    '*', tr.alu('*', tr.const(1.5), A.load(i, k)), B.load(k, j)))
+            C.store((i, j), acc)
+    assert np.allclose(C.arr, 1.5 * A0 @ B0 + 1.2 * C0)
+
+
+def test_data_oblivious_constant_depth():
+    """§5.1: data-oblivious kernels have constant memory depth in N."""
+    for name in ("gemm", "atax", "mvt", "gesummv"):
+        depths = [polybench.trace_kernel(name, N).mem_layers().D
+                  for N in (6, 10, 14)]
+        assert len(set(depths)) == 1, (name, depths)
+
+
+def test_sequential_kernels_linear_depth():
+    for name in ("lu", "trisolv", "cholesky"):
+        depths = [polybench.trace_kernel(name, N).mem_layers().D
+                  for N in (6, 10, 14)]
+        assert depths[0] < depths[1] < depths[2], (name, depths)
+
+
+def test_trmm_spill_linear_depth():
+    """§5.1/Fig 14: the spilled-accumulator trmm has linear memory depth
+    while the ideal (unlimited-register) trmm stays constant."""
+    ideal = [polybench.trace_kernel("trmm", N).mem_layers().D
+             for N in (6, 10, 14)]
+    spill = [polybench.trace_kernel("trmm_spill", N).mem_layers().D
+             for N in (6, 10, 14)]
+    assert len(set(ideal)) == 1
+    assert spill[0] < spill[1] < spill[2]
+
+
+def test_jax_twins_match_numpy():
+    rng = np.random.default_rng(1)
+    N = 8
+    A, B, C, D = (jnp.asarray(rng.standard_normal((N, N))) for _ in range(4))
+    x = jnp.asarray(rng.standard_normal(N))
+    out = polybench.JAX_KERNELS["2mm"](A, B, C, D)
+    ref = (1.5 * np.asarray(A) @ np.asarray(B)) @ np.asarray(C) + \
+        1.2 * np.asarray(D)
+    assert np.allclose(out, ref, atol=1e-5)
+    got = polybench.JAX_KERNELS["atax"](A, x)
+    assert np.allclose(got, np.asarray(A).T @ (np.asarray(A) @ np.asarray(x)),
+                       atol=1e-5)
+    L = jnp.asarray(np.tril(rng.standard_normal((N, N))) + N * np.eye(N))
+    b = jnp.asarray(rng.standard_normal(N))
+    xs = polybench.JAX_KERNELS["trisolv"](L, b)
+    assert np.allclose(np.asarray(L) @ np.asarray(xs), b, atol=1e-5)
+
+
+def test_hpcg_three_implementations_agree():
+    n, iters = 5, 4
+    _, ref = hpcg.reference_solution(n, iters)
+    _, res = hpcg.trace_cg(n=n, iters=iters)
+    assert np.allclose(res, ref, rtol=1e-8)
+    b = jnp.asarray(hpcg.build_problem(n))
+    _, hist = hpcg.cg_jax(b, n, iters)
+    assert np.allclose(np.asarray(hist), ref, rtol=1e-4)
+    assert ref[-1] < ref[0]                     # CG converges
+
+
+def test_hpcg_cache_reduces_w_and_lambda():
+    """Table 1 pattern: a cache cuts memory work W and lambda hard."""
+    g0, _ = hpcg.trace_cg(n=5, iters=2)
+    g1, _ = hpcg.trace_cg(n=5, iters=2, cache=make_cache(32 * 1024))
+    r0, r1 = report(g0), report(g1)
+    assert r1.W < 0.25 * r0.W
+    assert r1.lam < 0.25 * r0.lam
+    assert r1.Lam < r0.Lam
+
+
+def test_lulesh_trace_and_jax():
+    g = lulesh.trace_step(ne=3, iters=1)
+    lay = g.mem_layers()
+    assert lay.W > 0 and lay.D > 1       # scatter-add RMW chains create depth
+    state, hist = lulesh.run_jax(ne=3, iters=2)
+    assert np.isfinite(np.asarray(hist)).all()
+
+
+def test_lulesh_cache_pattern():
+    """Table 2 pattern: caching cuts both W and D (most memory vertices
+    leave the critical path)."""
+    g0 = lulesh.trace_step(ne=3, iters=2)
+    g1 = lulesh.trace_step(ne=3, iters=2, cache=make_cache(32 * 1024))
+    l0, l1 = g0.mem_layers(), g1.mem_layers()
+    assert l1.W < l0.W
+    assert l1.D < l0.D

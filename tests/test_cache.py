@@ -1,0 +1,63 @@
+"""Set-associative LRU cache model (§3.2)."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import NoCache, SetAssociativeCache, make_cache
+
+
+def test_no_cache_always_misses():
+    c = NoCache()
+    assert not c.access(0)
+    assert not c.access(0)
+
+
+def test_cold_then_hit():
+    c = SetAssociativeCache(1024, 64, 2)
+    assert not c.access(0)
+    assert c.access(0)
+    assert c.access(63)          # same line
+    assert not c.access(64)      # next line
+
+
+def test_lru_eviction_within_set():
+    # 1 set, 2 ways: line size 64, size = 128
+    c = SetAssociativeCache(128, 64, 2)
+    c.access(0)       # line A
+    c.access(128)     # line B (same set)
+    assert c.access(0)            # A still resident, now MRU
+    c.access(256)                 # evicts LRU = B
+    assert c.access(0)
+    assert not c.access(128)      # B was evicted
+
+
+def test_set_mapping():
+    c = SetAssociativeCache(4096, 64, 2)   # 32 sets
+    # addresses 64 apart land in consecutive sets — no conflict
+    for i in range(32):
+        assert not c.access(i * 64)
+    for i in range(32):
+        assert c.access(i * 64)
+
+
+def test_miss_rate():
+    c = SetAssociativeCache(1024, 64, 2)
+    for _ in range(2):
+        for a in range(0, 1024, 64):
+            c.access(a)
+    assert c.miss_rate == pytest.approx(0.5)
+
+
+def test_make_cache_zero_is_nocache():
+    assert isinstance(make_cache(0), NoCache)
+    assert isinstance(make_cache(None), NoCache)
+
+
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=300))
+def test_fully_warm_small_footprint_all_hits(addrs):
+    """Property: if the footprint fits (lines*ways >= unique lines per set),
+    a second pass over the same addresses hits everywhere."""
+    c = SetAssociativeCache(1 << 21, 64, 16)     # generously sized
+    for a in addrs:
+        c.access(a)
+    for a in addrs:
+        assert c.access(a)

@@ -1,0 +1,141 @@
+"""eDAG structure + §3.3 cost-model invariants (unit + hypothesis property)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (EDag, CostModelParams, lambda_abs, lambda_rel,
+                        memory_cost_bounds, total_cost_bounds,
+                        layered_upper_bound, non_memory_cost, simulate)
+
+
+def chain(n, mem=True):
+    g = EDag()
+    for i in range(n):
+        v = g.add_vertex(is_mem=mem, nbytes=8.0)
+        if i:
+            g.add_edge(v - 1, v)
+    return g
+
+
+def independent(n, mem=True):
+    g = EDag()
+    for _ in range(n):
+        g.add_vertex(is_mem=mem, nbytes=8.0)
+    return g
+
+
+def test_chain_depth_equals_work():
+    g = chain(10)
+    lay = g.mem_layers()
+    assert lay.W == 10 and lay.D == 10
+    assert list(lay.layer_sizes) == [1] * 10
+
+
+def test_independent_depth_one():
+    g = independent(16)
+    lay = g.mem_layers()
+    assert lay.W == 16 and lay.D == 1
+    assert list(lay.layer_sizes) == [16]
+
+
+def test_t1_tinf_parallelism():
+    g = EDag()
+    a = g.add_vertex(cost=2.0)
+    b = g.add_vertex(cost=3.0)
+    c = g.add_vertex(cost=4.0)
+    g.add_edge(a, c)
+    g.add_edge(b, c)
+    assert g.t1() == 9.0
+    assert g.t_inf() == 7.0          # 3 + 4
+    assert g.parallelism() == pytest.approx(9.0 / 7.0)
+
+
+def test_critical_path_is_longest():
+    g = EDag()
+    vs = [g.add_vertex(cost=1.0) for _ in range(5)]
+    g.add_edge(vs[0], vs[2])
+    g.add_edge(vs[2], vs[4])
+    g.add_edge(vs[1], vs[4])
+    path = g.critical_path()
+    assert len(path) == 3
+    assert path[-1] == 4
+
+
+def test_edge_order_enforced():
+    g = EDag()
+    g.add_vertex()
+    g.add_vertex()
+    with pytest.raises(ValueError):
+        g.add_edge(1, 0)
+
+
+# ------------------------------------------------------------ property tests
+
+@st.composite
+def random_dags(draw):
+    n = draw(st.integers(3, 60))
+    g = EDag()
+    n_mem = 0
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    p = draw(st.floats(0.05, 0.5))
+    for i in range(n):
+        is_mem = bool(rng.random() < 0.5)
+        n_mem += is_mem
+        g.add_vertex(is_mem=is_mem, nbytes=8.0 * is_mem)
+        for j in range(i):
+            if rng.random() < p / (i - j):
+                g.add_edge(j, i)
+    return g
+
+
+@given(random_dags(), st.integers(1, 8), st.floats(1.0, 300.0))
+def test_bounds_ordered_and_simulation_within(g, m, alpha):
+    """Work/span-law lower bound <= greedy simulation <= Brent-style upper
+    bound (Eq 2) — the paper's central inequality, on random eDAGs."""
+    lay = g.mem_layers()
+    C = non_memory_cost(g)
+    lo, hi = total_cost_bounds(lay.W, lay.D, m, alpha, C)
+    assert lo <= hi + 1e-9
+    t = simulate(g, m=m, alpha=alpha)
+    # C is total non-mem work (an upper bound on its serial contribution),
+    # so only the memory part of the lower bound is a true floor
+    mlo, mhi = memory_cost_bounds(lay.W, lay.D, m, alpha)
+    assert t >= mlo - 1e-6
+    assert t <= hi + 1e-6
+
+
+@given(random_dags(), st.integers(1, 8))
+def test_layered_bound_tighter(g, m):
+    """ceil-per-layer bound (paper's derivation) <= Eq 1 closed form."""
+    lay = g.mem_layers()
+    if lay.W == 0:
+        return
+    exact = layered_upper_bound(lay.layer_sizes, m, 1.0)
+    _, hi = memory_cost_bounds(lay.W, lay.D, m, 1.0)
+    assert exact <= hi + 1e-9
+    lo, _ = memory_cost_bounds(lay.W, lay.D, m, 1.0)
+    assert exact >= lo - 1e-9
+
+
+@given(random_dags())
+def test_layer_sizes_sum_to_work(g):
+    lay = g.mem_layers()
+    assert lay.layer_sizes.sum() == lay.W
+    assert (lay.layer_sizes > 0).all()
+
+
+@given(random_dags(), st.integers(1, 8))
+def test_lambda_rearrangement(g, m):
+    """lambda = W/m + (1-1/m) D (the §3.3.2 rearrangement)."""
+    lay = g.mem_layers()
+    lam = lambda_abs(lay.W, lay.D, m)
+    assert lam == pytest.approx(lay.W / m + (1 - 1 / m) * lay.D)
+
+
+@given(st.integers(0, 1000), st.integers(0, 100), st.integers(1, 16),
+       st.floats(1.0, 500.0), st.floats(0.0, 1e6))
+def test_lambda_rel_bounded(W, D, m, alpha0, C):
+    D = min(D, W)
+    lam = lambda_abs(W, D, m)
+    Lam = lambda_rel(lam, alpha0, C)
+    assert 0.0 <= Lam <= 1.0 or C == 0

@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba2_ssd import ssd_pallas
+from repro.kernels.rwkv6_wkv import wkv6_pallas
+from repro.models.layers import attention_ref
+
+
+def k(i):
+    return jax.random.PRNGKey(i)
+
+
+ATT_SHAPES = [
+    # B, T, S, H, KV, hd, bq, bkv
+    (1, 128, 128, 4, 4, 64, 64, 64),
+    (2, 256, 256, 4, 2, 64, 128, 128),
+    (1, 128, 128, 8, 1, 128, 64, 32),
+    (2, 64, 64, 2, 2, 32, 64, 64),
+]
+
+
+@pytest.mark.parametrize("B,T,S,H,KV,hd,bq,bkv", ATT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, T, S, H, KV, hd, bq, bkv, dtype, causal):
+    q = jax.random.normal(k(0), (B, T, H, hd), dtype)
+    kk = jax.random.normal(k(1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(k(2), (B, S, KV, hd), dtype)
+    got = flash_attention_pallas(q, kk, v, causal=causal, block_q=bq,
+                                 block_kv=bkv, interpret=True)
+    want = attention_ref(q, kk, v, causal=causal, chunk_kv=bkv)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_window():
+    B, T, H, hd = 1, 256, 2, 64
+    q = jax.random.normal(k(3), (B, T, H, hd))
+    kk = jax.random.normal(k(4), (B, T, H, hd))
+    v = jax.random.normal(k(5), (B, T, H, hd))
+    got = flash_attention_pallas(q, kk, v, causal=True, window=64,
+                                 block_q=64, block_kv=64, interpret=True)
+    want = attention_ref(q, kk, v, causal=True, window=64, chunk_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+WKV_SHAPES = [
+    # B, H, T, K, V, chunk
+    (1, 2, 64, 16, 16, 16),
+    (2, 1, 128, 32, 32, 32),
+    (1, 4, 96, 8, 24, 32),        # K != V, T % chunk == 0
+    (2, 2, 64, 64, 64, 64),       # single chunk
+]
+
+
+@pytest.mark.parametrize("B,H,T,K,V,chunk", WKV_SHAPES)
+def test_wkv6_sweep(B, H, T, K, V, chunk):
+    r = jax.random.normal(k(0), (B, H, T, K))
+    kk = 0.3 * jax.random.normal(k(1), (B, H, T, K))
+    v = jax.random.normal(k(2), (B, H, T, V))
+    w = jax.nn.sigmoid(jax.random.normal(k(3), (B, H, T, K))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(k(4), (H, K))
+    s0 = 0.1 * jax.random.normal(k(5), (B, H, K, V))
+    y0, S0 = ref.wkv6_ref(r, kk, v, w, u, s0)
+    y1, S1 = ref.wkv6_chunked_ref(r, kk, v, w, u, s0, chunk=chunk)
+    y2, S2 = wkv6_pallas(r, kk, v, w, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S0), atol=1e-4)
+
+
+SSD_SHAPES = [
+    # B, H, T, P, N, G, chunk
+    (1, 2, 64, 16, 8, 1, 16),
+    (2, 4, 128, 32, 16, 2, 32),
+    (1, 2, 96, 64, 64, 1, 32),
+    (1, 1, 64, 16, 16, 1, 64),
+]
+
+
+@pytest.mark.parametrize("B,H,T,P,N,G,chunk", SSD_SHAPES)
+def test_ssd_sweep(B, H, T, P, N, G, chunk):
+    x = jax.random.normal(k(0), (B, H, T, P))
+    dt = 0.2 * jax.nn.softplus(jax.random.normal(k(1), (B, H, T)))
+    A = -jnp.exp(0.3 * jax.random.normal(k(2), (H,)))
+    Bm = 0.4 * jax.random.normal(k(3), (B, G, T, N))
+    Cm = 0.4 * jax.random.normal(k(4), (B, G, T, N))
+    D = 0.1 * jax.random.normal(k(5), (H,))
+    s0 = 0.1 * jax.random.normal(k(6), (B, H, P, N))
+    y0, S0 = ref.ssd_ref(x, dt, A, Bm, Cm, D, s0)
+    y1, S1 = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D, s0, chunk=chunk)
+    y2, S2 = ssd_pallas(x, dt, A, Bm, Cm, D, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S0), atol=1e-4)
+
+
+def test_chunked_refs_state_streaming():
+    """Running two half-sequences through the chunked ref with carried state
+    equals one full pass (prefill/decode state handoff invariant)."""
+    B, H, T, K, V = 1, 2, 64, 16, 16
+    r = jax.random.normal(k(0), (B, H, T, K))
+    kk = 0.3 * jax.random.normal(k(1), (B, H, T, K))
+    v = jax.random.normal(k(2), (B, H, T, V))
+    w = jax.nn.sigmoid(jax.random.normal(k(3), (B, H, T, K))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(k(4), (H, K))
+    s0 = jnp.zeros((B, H, K, V))
+    y_full, S_full = ref.wkv6_chunked_ref(r, kk, v, w, u, s0, chunk=16)
+    half = T // 2
+    y1, S_mid = ref.wkv6_chunked_ref(r[:, :, :half], kk[:, :, :half],
+                                     v[:, :, :half], w[:, :, :half], u, s0,
+                                     chunk=16)
+    y2, S_end = ref.wkv6_chunked_ref(r[:, :, half:], kk[:, :, half:],
+                                     v[:, :, half:], w[:, :, half:], u,
+                                     S_mid, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_end), np.asarray(S_full),
+                               atol=1e-4)

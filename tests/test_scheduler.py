@@ -1,0 +1,65 @@
+"""Greedy list-scheduler simulator (the gem5 stand-in, §4)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import EDag, latency_sweep, simulate
+
+
+def test_chain_exact():
+    g = EDag()
+    prev = None
+    for _ in range(5):
+        v = g.add_vertex(is_mem=True)
+        if prev is not None:
+            g.add_edge(prev, v)
+        prev = v
+    assert simulate(g, m=4, alpha=100.0) == pytest.approx(500.0)
+
+
+def test_parallel_limited_by_slots():
+    g = EDag()
+    for _ in range(8):
+        g.add_vertex(is_mem=True)
+    # 8 accesses, 2 slots -> 4 rounds
+    assert simulate(g, m=2, alpha=100.0) == pytest.approx(400.0)
+    assert simulate(g, m=8, alpha=100.0) == pytest.approx(100.0)
+
+
+def test_compute_unbounded():
+    g = EDag()
+    for _ in range(100):
+        g.add_vertex(is_mem=False)
+    assert simulate(g, m=1, alpha=100.0) == pytest.approx(1.0)
+
+
+def test_mixed_pipeline():
+    """mem -> compute -> mem chain: alpha + 1 + alpha."""
+    g = EDag()
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex(is_mem=False)
+    c = g.add_vertex(is_mem=True)
+    g.add_edge(a, b)
+    g.add_edge(b, c)
+    assert simulate(g, m=4, alpha=50.0) == pytest.approx(101.0)
+
+
+def test_latency_sweep_monotone():
+    g = EDag()
+    prev = None
+    for i in range(20):
+        v = g.add_vertex(is_mem=(i % 2 == 0))
+        if prev is not None:
+            g.add_edge(prev, v)
+        prev = v
+    times = latency_sweep(g, alphas=[50, 100, 200], m=4)
+    assert times[0] < times[1] < times[2]
+
+
+@given(st.integers(1, 30), st.integers(1, 6), st.floats(1.0, 100.0))
+def test_width_vs_slots(width, m, alpha):
+    g = EDag()
+    for _ in range(width):
+        g.add_vertex(is_mem=True)
+    t = simulate(g, m=m, alpha=alpha)
+    assert t == pytest.approx(np.ceil(width / m) * alpha)

@@ -1,0 +1,73 @@
+"""Sharding rules: divisibility, axis allocation, decode-cache rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (DEFAULT_RULES, batch_axes_for,
+                                  decode_cache_rules, spec_for)
+
+
+class FakeMesh:
+    """Axis-name/shape stand-in (spec_for only reads names + sizes)."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_spec_basic():
+    # (d, H, hd) with heads divisible by model
+    s = spec_for((8192, 64, 128), ("embed", "heads", "head_dim"), POD)
+    assert s == P("data", "model")
+
+
+def test_kv_heads_replicated_when_indivisible():
+    s = spec_for((8192, 8, 128), ("embed", "kv_heads", "head_dim"), POD)
+    assert s == P("data")          # 8 kv heads % 16 -> replicated
+
+
+def test_no_axis_reuse_within_spec():
+    # batch and kv_seq both want axes; model goes to kv_seq, data to batch
+    s = spec_for((128, 32768), ("batch", "kv_seq"), POD)
+    assert s == P("data", "model")
+
+
+def test_vocab_padding_divisible():
+    s = spec_for((92560, 2048), ("vocab", "embed"), POD)
+    assert s == P("model", "data")
+
+
+def test_batch_axes_for():
+    assert batch_axes_for(256, MULTI) == ("pod", "data")
+    assert batch_axes_for(32, MULTI) == ("pod", "data")
+    assert batch_axes_for(8, MULTI) == ("pod",)    # 8 % (2*16) != 0
+    assert batch_axes_for(1, MULTI) == ()
+    assert batch_axes_for(128, POD) == ("data",)
+
+
+def test_decode_cache_rules_long_context():
+    """long_500k (batch 1): every axis goes to the KV sequence dim."""
+    r = decode_cache_rules(1, 524288, MULTI)
+    assert r["batch"] == ()
+    assert r["kv_seq"] == ("pod", "data", "model")
+    r2 = decode_cache_rules(128, 32768, POD)
+    assert r2["batch"] == ("data",)
+    # batched decode: heads (or head_dim) take 'model'; seq stays unsharded
+    # (a seq-sharded cache update lowers to a full-buffer masked select)
+    assert r2["kv_seq"] == ()
+    assert r2["kv_heads"] == ("model",)
+
+
+def test_multi_axis_batch_spec():
+    s = spec_for((256, 4096), ("batch", "seq"), MULTI)
+    assert s == P(("pod", "data"))
+
+
+def test_trailing_nones_trimmed():
+    s = spec_for((64, 128, 16), ("embed", None, None),
+                 FakeMesh({"data": 16, "model": 16}))
+    assert s == P("data")
