@@ -1,0 +1,138 @@
+"""Core-engine performance benchmark: the vectorized eDAG engine vs the
+retained seed scalar engine.
+
+Measures, at paper-size PolyBench traces (plus HPCG for tracing):
+
+* **tracing**     traced vertices/sec — bulk block emission vs the
+                  per-element reference tracer;
+* **accumulate**  longest-path edges/sec — level-synchronous segmented
+                  reductions vs the per-edge Python loop;
+* **sweep**       latency-sweep points/sec — one batched multi-cost level
+                  pass vs one scalar accumulate per point.
+
+Writes ``BENCH_core.json`` next to the repo root and prints one CSV row per
+measurement.  ``--smoke`` shrinks sizes for CI wall-clock.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_core [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.apps import hpcg, polybench, reference
+from repro.core import Tracer, cost_matrix
+
+
+def _best_of(fn, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_tracing(N: int, repeats: int) -> dict:
+    def run_block():
+        return polybench.trace_kernel("gemm", N)
+
+    def run_ref():
+        tr = Tracer()
+        reference.REF_POLYBENCH_KERNELS["gemm"](tr, N,
+                                                np.random.default_rng(0))
+        return tr.edag
+
+    nv = run_block().n_vertices
+    t_blk = _best_of(run_block, repeats)
+    t_ref = _best_of(run_ref, repeats)
+    return dict(name=f"trace_gemm_N{N}", n_vertices=nv,
+                block_vps=nv / t_blk, scalar_vps=nv / t_ref,
+                speedup=t_ref / t_blk)
+
+
+def bench_tracing_hpcg(n: int, iters: int, repeats: int) -> dict:
+    nv = hpcg.trace_cg(n=n, iters=iters)[0].n_vertices
+    t_blk = _best_of(lambda: hpcg.trace_cg(n=n, iters=iters), repeats)
+    t_ref = _best_of(lambda: reference.trace_cg_ref(n=n, iters=iters),
+                     repeats)
+    return dict(name=f"trace_hpcg_n{n}x{iters}", n_vertices=nv,
+                block_vps=nv / t_blk, scalar_vps=nv / t_ref,
+                speedup=t_ref / t_blk)
+
+
+def bench_accumulate(N: int, repeats: int) -> dict:
+    g = polybench.trace_kernel("gemm", N)
+    g._finalize()
+    ne = g.n_edges
+    g._accumulate(g.cost)                       # warm derived arrays
+    t_vec = _best_of(lambda: g._accumulate(g.cost), repeats)
+    t_ref = _best_of(lambda: g._accumulate_scalar(g.cost), repeats)
+    assert np.array_equal(g._accumulate(g.cost), g._accumulate_scalar(g.cost))
+    return dict(name=f"accumulate_gemm_N{N}", n_edges=ne,
+                vector_eps=ne / t_vec, scalar_eps=ne / t_ref,
+                speedup=t_ref / t_vec)
+
+
+def bench_sweep(N: int, n_points: int, repeats: int) -> dict:
+    g = polybench.trace_kernel("gemm", N)
+    g._finalize()
+    alphas = np.linspace(50, 300, n_points)
+    costs = cost_matrix(g, alphas)
+    g.t_inf_sweep_mem(alphas[:2])               # warm
+
+    def run_batch():
+        return g.t_inf_sweep_mem(alphas)
+
+    def run_scalar():                            # the seed per-point rebuild
+        return np.array([g._accumulate_scalar(c).max() for c in costs])
+
+    t_vec = _best_of(run_batch, repeats)
+    t_ref = _best_of(run_scalar, max(1, repeats - 1))
+    assert np.array_equal(run_batch(), run_scalar())
+    return dict(name=f"sweep_gemm_N{N}x{n_points}", n_points=n_points,
+                batch_pps=n_points / t_vec, scalar_pps=n_points / t_ref,
+                speedup=t_ref / t_vec)
+
+
+def run(smoke: bool = False) -> dict:
+    repeats = 2 if smoke else 5
+    N = 12 if smoke else 32
+    out = dict(
+        tracing=[bench_tracing(N, repeats),
+                 bench_tracing_hpcg(4 if smoke else 8, 2, repeats)],
+        accumulate=[bench_accumulate(N, repeats)],
+        sweep=[bench_sweep(N, 11 if smoke else 51, repeats)],
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI wall-clock")
+    ap.add_argument("--out", default="BENCH_core.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    print("name,metric,vectorized,scalar,speedup")
+    for group, key in (("tracing", "vps"), ("accumulate", "eps"),
+                       ("sweep", "pps")):
+        for row in res[group]:
+            vec = row.get(f"block_{key}", row.get(f"vector_{key}",
+                                                  row.get(f"batch_{key}")))
+            print(f"{row['name']},{group}/{key},{vec:.0f},"
+                  f"{row[f'scalar_{key}']:.0f},{row['speedup']:.1f}x")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.out}")
+    core = res["accumulate"][0]["speedup"]
+    swp = res["sweep"][0]["speedup"]
+    print(f"# accumulate speedup {core:.1f}x, sweep speedup {swp:.1f}x "
+          f"(acceptance floor: 10x)")
+
+
+if __name__ == "__main__":
+    main()

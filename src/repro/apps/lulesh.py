@@ -36,9 +36,15 @@ def mesh_connectivity(ne: int):
 
 
 # ------------------------------------------------------------------- scalar
+#
+# The three phase loops are emitted as one BlockBuilder nest each (uniform
+# 8-corner slots), in the exact per-element program order of the reference
+# implementation — ``reference.trace_step_ref`` — so the eDAG, including the
+# cache-model hit/miss classification and the scatter-add RMW chains through
+# F, is byte-for-byte identical (asserted by tests/test_vector_engine.py).
 
 def trace_step(ne: int = 6, iters: int = 2, cache=None, seed: int = 0):
-    """Scalar-traced leapfrog steps; returns the eDAG."""
+    """Block-traced leapfrog steps; returns the eDAG."""
     rng = np.random.default_rng(seed)
     conn = mesh_connectivity(ne)
     nnode = (ne + 1) ** 3
@@ -51,37 +57,56 @@ def trace_step(ne: int = 6, iters: int = 2, cache=None, seed: int = 0):
     M = tr.array(np.abs(rng.standard_normal(nnode)) + 1.0, "m")
     E = tr.array(np.abs(rng.standard_normal(nelem)) + 1.0, "e")   # energy
     Q = tr.zeros(nelem, "q")                                      # viscosity
-    dt = tr.const(1e-3)
 
+    elems = np.arange(nelem)
+    nodes = np.arange(nnode)
     for _ in range(iters):
         # 1. CalcForceForNodes: gather corners, element physics, scatter-add
-        for e in range(nelem):
-            corner_vals = [X.load(int(c)) for c in conn[e]]
-            vol = corner_vals[0]
-            for cv in corner_vals[1:]:
-                vol = tr.alu('+', vol, cv)
-            en = E.load(e)
-            press = tr.alu('*', en, vol)
-            qv = Q.load(e)
-            press = tr.alu('+', press, qv)
-            share = tr.alu('*', press, tr.const(0.125))
-            for c in conn[e]:
-                f = F.load(int(c))
-                F.store(int(c), tr.alu('+', f, share))   # RMW through memory
+        b = tr.block()
+        corners = [b.load(X.addr_block(conn[:, c]), label="ld x")
+                   for c in range(8)]
+        vol = corners[0]
+        for cv in corners[1:]:
+            vol = b.alu(vol, cv, label="+")
+        en = b.load(E.addr_block(elems), label="ld e")
+        press = b.alu(en, vol, label="*")
+        qv = b.load(Q.addr_block(elems), label="ld q")
+        press = b.alu(press, qv, label="+")
+        share = b.alu(press, label="*")                  # press * 0.125
+        for c in range(8):
+            f = b.load(F.addr_block(conn[:, c]), label="ld f")
+            b.store(F.addr_block(conn[:, c]),            # RMW through memory
+                    value=b.alu(f, share, label="+"), label="st f")
+        b.emit()
         # 2. nodal integration: a = F/m; v += a dt; x += v dt; F = 0
-        for nd in range(nnode):
-            a = tr.alu('/', F.load(nd), M.load(nd))
-            v = tr.alu('+', V.load(nd), tr.alu('*', a, dt))
-            V.store(nd, v)
-            X.store(nd, tr.alu('+', X.load(nd), tr.alu('*', v, dt)))
-            F.store(nd, tr.const(0.0))
+        b = tr.block()
+        lf = b.load(F.addr_block(nodes), label="ld f")
+        lm = b.load(M.addr_block(nodes), label="ld m")
+        a = b.alu(lf, lm, label="/")
+        lv = b.load(V.addr_block(nodes), label="ld v")
+        adt = b.alu(a, label="*")                        # a * dt
+        v = b.alu(lv, adt, label="+")
+        b.store(V.addr_block(nodes), value=v, label="st v")
+        lx = b.load(X.addr_block(nodes), label="ld x")
+        vdt = b.alu(v, label="*")                        # v * dt
+        b.store(X.addr_block(nodes),
+                value=b.alu(lx, vdt, label="+"), label="st x")
+        b.store(F.addr_block(nodes), label="st f")       # F = 0 (const)
+        b.emit()
         # 3. CalcQForElems: gather velocities, update element viscosity/energy
-        for e in range(nelem):
-            g = V.load(int(conn[e][0]))
-            for c in conn[e][1:]:
-                g = tr.alu('-', g, V.load(int(c)))
-            Q.store(e, tr.alu('*', g, g))
-            E.store(e, tr.alu('+', E.load(e), tr.alu('*', Q.load(e), dt)))
+        b = tr.block()
+        g = b.load(V.addr_block(conn[:, 0]), label="ld v")
+        for c in range(1, 8):
+            g = b.alu(g, b.load(V.addr_block(conn[:, c]), label="ld v"),
+                      label="-")
+        b.store(Q.addr_block(elems), value=b.alu(g, g, label="*"),
+                label="st q")
+        le = b.load(E.addr_block(elems), label="ld e")
+        lq = b.load(Q.addr_block(elems), label="ld q")
+        qdt = b.alu(lq, label="*")                       # q * dt
+        b.store(E.addr_block(elems),
+                value=b.alu(le, qdt, label="+"), label="st e")
+        b.emit()
     return tr.edag
 
 

@@ -23,39 +23,67 @@ def _rand(rng, *shape):
 
 
 # --------------------------------------------------------------------------
-# scalar (traced) kernels; each fn(tr, N, rng) builds arrays and runs kernel
+# scalar (traced) kernels over the bulk block-emission API.
+#
+# Each kernel keeps its outer loops in Python and emits the innermost loop
+# as one BlockBuilder nest (or one uniform block for whole map loops).  Slot
+# declaration order reproduces the original per-element program order
+# byte-for-byte — including the cache-model access stream — so the emitted
+# eDAG is *identical* to the retained scalar reference implementation
+# (tests/test_vector_engine.py asserts exact graph equality).  Numeric array
+# contents are maintained with the equivalent numpy expressions.
 # --------------------------------------------------------------------------
+
+def _ii(N, v):
+    """Constant index vector (an address that repeats every iteration)."""
+    return np.full(N, v, dtype=np.int64)
+
 
 def k_2mm(tr: Tracer, N: int, rng) -> None:
     A, B, C, D = (tr.array(_rand(rng, N, N), n) for n in "ABCD")
     tmp = tr.zeros((N, N), "tmp")
-    alpha, beta = tr.const(1.5), tr.const(1.2)
+    ks = np.arange(N)
     for i in range(N):
         for j in range(N):
-            acc = tr.const(0.0)
-            for k in range(N):
-                a = A.load(i, k); b = B.load(k, j)
-                acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', alpha, a), b))
-            tmp.store((i, j), acc)
+            b = tr.block()
+            a = b.load(A.addr_block(_ii(N, i), ks), label="ld A")
+            bb = b.load(B.addr_block(ks, _ii(N, j)), label="ld B")
+            m1 = b.alu(a, label="*")                   # alpha * a
+            m2 = b.alu(m1, bb, label="*")
+            acc = b.scan(m2, label="+")
+            r = b.emit()
+            val = 1.5 * float(A.arr[i] @ B.arr[:, j])
+            tmp.store((i, j), Value(val, r.last(acc)))
+    beta = tr.const(1.2)
     for i in range(N):
         for j in range(N):
+            val = 1.2 * float(D.arr[i, j]) + float(tmp.arr[i] @ C.arr[:, j])
             d = tr.alu('*', D.load(i, j), beta)
-            for k in range(N):
-                t = tmp.load(i, k); c = C.load(k, j)
-                d = tr.alu('+', d, tr.alu('*', t, c))
-            D.store((i, j), d)
+            b = tr.block()
+            t = b.load(tmp.addr_block(_ii(N, i), ks), label="ld tmp")
+            c = b.load(C.addr_block(ks, _ii(N, j)), label="ld C")
+            m = b.alu(t, c, label="*")
+            acc = b.scan(m, init=d.vid, label="+")
+            r = b.emit()
+            D.store((i, j), Value(val, r.last(acc)))
 
 
 def k_3mm(tr: Tracer, N: int, rng) -> None:
     A, B, C, D = (tr.array(_rand(rng, N, N), n) for n in "ABCD")
     E, F, G = tr.zeros((N, N), "E"), tr.zeros((N, N), "F"), tr.zeros((N, N), "G")
+    ks = np.arange(N)
+
     def mm(X, Y, Z):
         for i in range(N):
             for j in range(N):
-                acc = tr.const(0.0)
-                for k in range(N):
-                    acc = tr.alu('+', acc, tr.alu('*', X.load(i, k), Y.load(k, j)))
-                Z.store((i, j), acc)
+                b = tr.block()
+                x = b.load(X.addr_block(_ii(N, i), ks), label="ld")
+                y = b.load(Y.addr_block(ks, _ii(N, j)), label="ld")
+                m = b.alu(x, y, label="*")
+                acc = b.scan(m, label="+")
+                r = b.emit()
+                Z.store((i, j), Value(float(X.arr[i] @ Y.arr[:, j]),
+                                      r.last(acc)))
     mm(A, B, E); mm(C, D, F); mm(E, F, G)
 
 
@@ -63,32 +91,48 @@ def k_atax(tr: Tracer, N: int, rng) -> None:
     A = tr.array(_rand(rng, N, N), "A")
     x = tr.array(_rand(rng, N), "x")
     y, tmp = tr.zeros(N, "y"), tr.zeros(N, "tmp")
+    js = np.arange(N)
     for i in range(N):
-        acc = tr.const(0.0)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), x.load(j)))
-        tmp.store(i, acc)
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), js), label="ld A")
+        xv = b.load(x.addr_block(js), label="ld x")
+        m = b.alu(a, xv, label="*")
+        acc = b.scan(m, label="+")
+        r = b.emit()
+        tmp.store(i, Value(float(A.arr[i] @ x.arr), r.last(acc)))
     for j in range(N):
-        acc = y.load(j)
-        for i in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), tmp.load(i)))
-        y.store(j, acc)
+        acc0 = y.load(j)
+        b = tr.block()
+        a = b.load(A.addr_block(js, _ii(N, j)), label="ld A")
+        t = b.load(tmp.addr_block(js), label="ld tmp")
+        m = b.alu(a, t, label="*")
+        acc = b.scan(m, init=acc0.vid, label="+")
+        r = b.emit()
+        y.store(j, Value(float(acc0.val + A.arr[:, j] @ tmp.arr),
+                         r.last(acc)))
 
 
 def k_bicg(tr: Tracer, N: int, rng) -> None:
     A = tr.array(_rand(rng, N, N), "A")
-    p, r = tr.array(_rand(rng, N), "p"), tr.array(_rand(rng, N), "r")
+    p, rr = tr.array(_rand(rng, N), "p"), tr.array(_rand(rng, N), "r")
     q, s = tr.zeros(N, "q"), tr.zeros(N, "s")
+    idx = np.arange(N)
     for i in range(N):
-        acc = tr.const(0.0)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), p.load(j)))
-        q.store(i, acc)
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), idx), label="ld A")
+        pv = b.load(p.addr_block(idx), label="ld p")
+        m = b.alu(a, pv, label="*")
+        acc = b.scan(m, label="+")
+        r = b.emit()
+        q.store(i, Value(float(A.arr[i] @ p.arr), r.last(acc)))
     for j in range(N):
-        acc = tr.const(0.0)
-        for i in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), r.load(i)))
-        s.store(j, acc)
+        b = tr.block()
+        a = b.load(A.addr_block(idx, _ii(N, j)), label="ld A")
+        rv = b.load(rr.addr_block(idx), label="ld r")
+        m = b.alu(a, rv, label="*")
+        acc = b.scan(m, label="+")
+        r = b.emit()
+        s.store(j, Value(float(A.arr[:, j] @ rr.arr), r.last(acc)))
 
 
 def k_doitgen(tr: Tracer, N: int, rng) -> None:
@@ -96,43 +140,70 @@ def k_doitgen(tr: Tracer, N: int, rng) -> None:
     A = tr.array(_rand(rng, R, R, N), "A")
     C4 = tr.array(_rand(rng, N, N), "C4")
     s = tr.zeros(N, "sum")
-    for r in range(R):
-        for q in range(R):
-            for p in range(N):
-                acc = tr.const(0.0)
-                for k in range(N):
-                    acc = tr.alu('+', acc, tr.alu('*', A.load(r, q, k), C4.load(k, p)))
-                s.store(p, acc)
-            for p in range(N):
-                A.store((r, q, p), s.load(p))
+    ks = np.arange(N)
+    for r_ in range(R):
+        for q_ in range(R):
+            row = A.arr[r_, q_].copy()
+            for p_ in range(N):
+                b = tr.block()
+                a = b.load(A.addr_block(_ii(N, r_), _ii(N, q_), ks),
+                           label="ld A")
+                c = b.load(C4.addr_block(ks, _ii(N, p_)), label="ld C4")
+                m = b.alu(a, c, label="*")
+                acc = b.scan(m, label="+")
+                r = b.emit()
+                s.store(p_, Value(float(row @ C4.arr[:, p_]), r.last(acc)))
+            b = tr.block()
+            sv = b.load(s.addr_block(ks), label="ld sum")
+            b.store(A.addr_block(_ii(N, r_), _ii(N, q_), ks), value=sv,
+                    label="st A")
+            b.emit()
+            A.arr[r_, q_] = s.arr
 
 
 def k_mvt(tr: Tracer, N: int, rng) -> None:
     A = tr.array(_rand(rng, N, N), "A")
     x1, x2 = tr.array(_rand(rng, N), "x1"), tr.array(_rand(rng, N), "x2")
     y1, y2 = tr.array(_rand(rng, N), "y1"), tr.array(_rand(rng, N), "y2")
+    js = np.arange(N)
     for i in range(N):
-        acc = x1.load(i)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(i, j), y1.load(j)))
-        x1.store(i, acc)
+        acc0 = x1.load(i)
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), js), label="ld A")
+        y = b.load(y1.addr_block(js), label="ld y1")
+        m = b.alu(a, y, label="*")
+        acc = b.scan(m, init=acc0.vid, label="+")
+        r = b.emit()
+        x1.store(i, Value(float(acc0.val + A.arr[i] @ y1.arr), r.last(acc)))
     for i in range(N):
-        acc = x2.load(i)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', A.load(j, i), y2.load(j)))
-        x2.store(i, acc)
+        acc0 = x2.load(i)
+        b = tr.block()
+        a = b.load(A.addr_block(js, _ii(N, i)), label="ld A")
+        y = b.load(y2.addr_block(js), label="ld y2")
+        m = b.alu(a, y, label="*")
+        acc = b.scan(m, init=acc0.vid, label="+")
+        r = b.emit()
+        x2.store(i, Value(float(acc0.val + A.arr[:, i] @ y2.arr), r.last(acc)))
 
 
 def k_gemm(tr: Tracer, N: int, rng) -> None:
     A, B, C = (tr.array(_rand(rng, N, N), n) for n in "ABC")
-    alpha, beta = tr.const(1.5), tr.const(1.2)
-    for i in range(N):
-        for j in range(N):
-            acc = tr.alu('*', C.load(i, j), beta)
-            for k in range(N):
-                acc = tr.alu('+', acc,
-                             tr.alu('*', tr.alu('*', alpha, A.load(i, k)), B.load(k, j)))
-            C.store((i, j), acc)
+    # fully slot-unrolled nest: the iteration space is the (i, j) grid and
+    # the k loop is unrolled into slots, so the whole kernel is ONE block
+    # (still in exact (i, j, k)-major reference order)
+    ii, jj = np.divmod(np.arange(N * N), N)
+    b = tr.block()
+    ldc = b.load(C.addr_block(ii, jj), label="ld C")
+    acc = b.alu(ldc, label="*")                        # beta * c
+    for k in range(N):
+        a = b.load(A.addr_block(ii, _ii(N * N, k)), label="ld A")
+        m1 = b.alu(a, label="*")                       # alpha * a
+        bb = b.load(B.addr_block(_ii(N * N, k), jj), label="ld B")
+        m2 = b.alu(m1, bb, label="*")
+        acc = b.alu(acc, m2, label="+")
+    b.store(C.addr_block(ii, jj), value=acc, label="st C")
+    b.emit()
+    C.arr[:] = 1.2 * C.arr + 1.5 * (A.arr @ B.arr)
 
 
 def k_gemver(tr: Tracer, N: int, rng) -> None:
@@ -140,25 +211,52 @@ def k_gemver(tr: Tracer, N: int, rng) -> None:
     u1, v1, u2, v2, y, z = (tr.array(_rand(rng, N), n)
                             for n in ("u1", "v1", "u2", "v2", "y", "z"))
     x, w = tr.zeros(N, "x"), tr.zeros(N, "w")
-    alpha, beta = tr.const(1.5), tr.const(1.2)
+    js = np.arange(N)
     for i in range(N):
-        for j in range(N):
-            a = A.load(i, j)
-            a = tr.alu('+', a, tr.alu('*', u1.load(i), v1.load(j)))
-            a = tr.alu('+', a, tr.alu('*', u2.load(i), v2.load(j)))
-            A.store((i, j), a)
+        newrow = (A.arr[i] + u1.arr[i] * v1.arr + u2.arr[i] * v2.arr)
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), js), label="ld A")
+        l_u1 = b.load(u1.addr_block(_ii(N, i)), label="ld u1")
+        l_v1 = b.load(v1.addr_block(js), label="ld v1")
+        m1 = b.alu(l_u1, l_v1, label="*")
+        a1 = b.alu(a, m1, label="+")
+        l_u2 = b.load(u2.addr_block(_ii(N, i)), label="ld u2")
+        l_v2 = b.load(v2.addr_block(js), label="ld v2")
+        m2 = b.alu(l_u2, l_v2, label="*")
+        a2 = b.alu(a1, m2, label="+")
+        b.store(A.addr_block(_ii(N, i), js), value=a2, label="st A")
+        b.emit()
+        A.arr[i] = newrow
     for i in range(N):
-        acc = x.load(i)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', beta, A.load(j, i)), y.load(j)))
-        x.store(i, acc)
+        acc0 = x.load(i)
+        val = float(acc0.val + 1.2 * (A.arr[:, i] @ y.arr))
+        b = tr.block()
+        a = b.load(A.addr_block(js, _ii(N, i)), label="ld A")
+        m1 = b.alu(a, label="*")                       # beta * a
+        l_y = b.load(y.addr_block(js), label="ld y")
+        m2 = b.alu(m1, l_y, label="*")
+        acc = b.scan(m2, init=acc0.vid, label="+")
+        r = b.emit()
+        x.store(i, Value(val, r.last(acc)))
+    newx = x.arr + z.arr
+    b = tr.block()
+    l_x = b.load(x.addr_block(js), label="ld x")
+    l_z = b.load(z.addr_block(js), label="ld z")
+    a = b.alu(l_x, l_z, label="+")
+    b.store(x.addr_block(js), value=a, label="st x")
+    b.emit()
+    x.arr[:] = newx
     for i in range(N):
-        x.store(i, tr.alu('+', x.load(i), z.load(i)))
-    for i in range(N):
-        acc = w.load(i)
-        for j in range(N):
-            acc = tr.alu('+', acc, tr.alu('*', tr.alu('*', alpha, A.load(i, j)), x.load(j)))
-        w.store(i, acc)
+        acc0 = w.load(i)
+        val = float(acc0.val + 1.5 * (A.arr[i] @ x.arr))
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), js), label="ld A")
+        m1 = b.alu(a, label="*")                       # alpha * a
+        l_x = b.load(x.addr_block(js), label="ld x")
+        m2 = b.alu(m1, l_x, label="*")
+        acc = b.scan(m2, init=acc0.vid, label="+")
+        r = b.emit()
+        w.store(i, Value(val, r.last(acc)))
 
 
 def k_gesummv(tr: Tracer, N: int, rng) -> None:
@@ -166,12 +264,21 @@ def k_gesummv(tr: Tracer, N: int, rng) -> None:
     x = tr.array(_rand(rng, N), "x")
     y = tr.zeros(N, "y")
     alpha, beta = tr.const(1.5), tr.const(1.2)
+    js = np.arange(N)
     for i in range(N):
-        t = tr.const(0.0); yv = tr.const(0.0)
-        for j in range(N):
-            t = tr.alu('+', t, tr.alu('*', A.load(i, j), x.load(j)))
-            yv = tr.alu('+', yv, tr.alu('*', B.load(i, j), x.load(j)))
-        y.store(i, tr.alu('+', tr.alu('*', alpha, t), tr.alu('*', beta, yv)))
+        b = tr.block()
+        a = b.load(A.addr_block(_ii(N, i), js), label="ld A")
+        x1 = b.load(x.addr_block(js), label="ld x")
+        m1 = b.alu(a, x1, label="*")
+        t = b.scan(m1, label="+")
+        bb = b.load(B.addr_block(_ii(N, i), js), label="ld B")
+        x2 = b.load(x.addr_block(js), label="ld x")
+        m2 = b.alu(bb, x2, label="*")
+        yv = b.scan(m2, label="+")
+        r = b.emit()
+        tv = Value(float(A.arr[i] @ x.arr), r.last(t))
+        yvv = Value(float(B.arr[i] @ x.arr), r.last(yv))
+        y.store(i, tr.alu('+', tr.alu('*', alpha, tv), tr.alu('*', beta, yvv)))
 
 
 def k_symm(tr: Tracer, N: int, rng) -> None:
@@ -179,43 +286,92 @@ def k_symm(tr: Tracer, N: int, rng) -> None:
     alpha, beta = tr.const(1.5), tr.const(1.2)
     for i in range(N):
         for j in range(N):
-            temp2 = tr.const(0.0)
-            for k in range(i):
-                ck = C.load(k, j)
-                ck = tr.alu('+', ck, tr.alu('*', tr.alu('*', alpha, B.load(i, j)), A.load(i, k)))
-                C.store((k, j), ck)
-                temp2 = tr.alu('+', temp2, tr.alu('*', B.load(k, j), A.load(i, k)))
+            t2val = float(B.arr[:i, j] @ A.arr[i, :i])
+            t2vid = None
+            if i:
+                ks = np.arange(i)
+                newc = C.arr[:i, j] + 1.5 * B.arr[i, j] * A.arr[i, :i]
+                b = tr.block()
+                ck = b.load(C.addr_block(ks, _ii(i, j)), label="ld C")
+                bij = b.load(B.addr_block(_ii(i, i), _ii(i, j)), label="ld B")
+                m1 = b.alu(bij, label="*")             # alpha * B[i,j]
+                aik = b.load(A.addr_block(_ii(i, i), ks), label="ld A")
+                m2 = b.alu(m1, aik, label="*")
+                a1 = b.alu(ck, m2, label="+")
+                b.store(C.addr_block(ks, _ii(i, j)), value=a1, label="st C")
+                bkj = b.load(B.addr_block(ks, _ii(i, j)), label="ld B")
+                aik2 = b.load(A.addr_block(_ii(i, i), ks), label="ld A")
+                m3 = b.alu(bkj, aik2, label="*")
+                t2 = b.scan(m3, label="+")
+                r = b.emit()
+                t2vid = r.last(t2)
+                C.arr[:i, j] = newc
+            temp2 = Value(t2val, t2vid)
             cij = tr.alu('*', beta, C.load(i, j))
-            cij = tr.alu('+', cij, tr.alu('*', tr.alu('*', alpha, B.load(i, j)), A.load(i, i)))
+            cij = tr.alu('+', cij, tr.alu('*', tr.alu('*', alpha, B.load(i, j)),
+                                          A.load(i, i)))
             cij = tr.alu('+', cij, tr.alu('*', alpha, temp2))
             C.store((i, j), cij)
 
 
 def k_syr2k(tr: Tracer, N: int, rng) -> None:
     A, B, C = (tr.array(_rand(rng, N, N), n) for n in "ABC")
-    alpha, beta = tr.const(1.5), tr.const(1.2)
     for i in range(N):
-        for j in range(i + 1):
-            C.store((i, j), tr.alu('*', C.load(i, j), beta))
+        js = np.arange(i + 1)
+        newc = C.arr[i, :i + 1] * 1.2
+        b = tr.block()
+        c = b.load(C.addr_block(_ii(i + 1, i), js), label="ld C")
+        m = b.alu(c, label="*")                        # beta * c
+        b.store(C.addr_block(_ii(i + 1, i), js), value=m, label="st C")
+        b.emit()
+        C.arr[i, :i + 1] = newc
         for k in range(N):
-            for j in range(i + 1):
-                c = C.load(i, j)
-                c = tr.alu('+', c, tr.alu('*', tr.alu('*', A.load(j, k), alpha), B.load(i, k)))
-                c = tr.alu('+', c, tr.alu('*', tr.alu('*', B.load(j, k), alpha), A.load(i, k)))
-                C.store((i, j), c)
+            newc = (C.arr[i, :i + 1]
+                    + 1.5 * A.arr[:i + 1, k] * B.arr[i, k]
+                    + 1.5 * B.arr[:i + 1, k] * A.arr[i, k])
+            b = tr.block()
+            c = b.load(C.addr_block(_ii(i + 1, i), js), label="ld C")
+            ajk = b.load(A.addr_block(js, _ii(i + 1, k)), label="ld A")
+            m1 = b.alu(ajk, label="*")                 # a * alpha
+            bik = b.load(B.addr_block(_ii(i + 1, i), _ii(i + 1, k)),
+                         label="ld B")
+            m2 = b.alu(m1, bik, label="*")
+            c1 = b.alu(c, m2, label="+")
+            bjk = b.load(B.addr_block(js, _ii(i + 1, k)), label="ld B")
+            m3 = b.alu(bjk, label="*")                 # b * alpha
+            aik = b.load(A.addr_block(_ii(i + 1, i), _ii(i + 1, k)),
+                         label="ld A")
+            m4 = b.alu(m3, aik, label="*")
+            c2 = b.alu(c1, m4, label="+")
+            b.store(C.addr_block(_ii(i + 1, i), js), value=c2, label="st C")
+            b.emit()
+            C.arr[i, :i + 1] = newc
 
 
 def k_syrk(tr: Tracer, N: int, rng) -> None:
     A, C = tr.array(_rand(rng, N, N), "A"), tr.array(_rand(rng, N, N), "C")
-    alpha, beta = tr.const(1.5), tr.const(1.2)
     for i in range(N):
-        for j in range(i + 1):
-            C.store((i, j), tr.alu('*', C.load(i, j), beta))
+        js = np.arange(i + 1)
+        newc = C.arr[i, :i + 1] * 1.2
+        b = tr.block()
+        c = b.load(C.addr_block(_ii(i + 1, i), js), label="ld C")
+        m = b.alu(c, label="*")                        # beta * c
+        b.store(C.addr_block(_ii(i + 1, i), js), value=m, label="st C")
+        b.emit()
+        C.arr[i, :i + 1] = newc
         for k in range(N):
-            for j in range(i + 1):
-                c = C.load(i, j)
-                c = tr.alu('+', c, tr.alu('*', tr.alu('*', alpha, A.load(i, k)), A.load(j, k)))
-                C.store((i, j), c)
+            newc = C.arr[i, :i + 1] + 1.5 * A.arr[i, k] * A.arr[:i + 1, k]
+            b = tr.block()
+            c = b.load(C.addr_block(_ii(i + 1, i), js), label="ld C")
+            aik = b.load(A.addr_block(_ii(i + 1, i), _ii(i + 1, k)),
+                         label="ld A")
+            m1 = b.alu(aik, label="*")                 # alpha * a
+            ajk = b.load(A.addr_block(js, _ii(i + 1, k)), label="ld A")
+            m2 = b.alu(m1, ajk, label="*")
+            c1 = b.alu(c, m2, label="+")
+            b.store(C.addr_block(_ii(i + 1, i), js), value=c1, label="st C")
+            b.emit()
+            C.arr[i, :i + 1] = newc
 
 
 def k_trmm(tr: Tracer, N: int, rng) -> None:
@@ -224,10 +380,19 @@ def k_trmm(tr: Tracer, N: int, rng) -> None:
     alpha = tr.const(1.5)
     for i in range(N):
         for j in range(N):
-            b = B.load(i, j)
-            for k in range(i + 1, N):
-                b = tr.alu('+', b, tr.alu('*', A.load(k, i), B.load(k, j)))
-            B.store((i, j), tr.alu('*', alpha, b))
+            acc0 = B.load(i, j)
+            val = float(acc0.val + A.arr[i + 1:, i] @ B.arr[i + 1:, j])
+            vid = acc0.vid
+            if i + 1 < N:
+                ks = np.arange(i + 1, N)
+                b = tr.block()
+                a = b.load(A.addr_block(ks, _ii(len(ks), i)), label="ld A")
+                bb = b.load(B.addr_block(ks, _ii(len(ks), j)), label="ld B")
+                m = b.alu(a, bb, label="*")
+                acc = b.scan(m, init=vid, label="+")
+                r = b.emit()
+                vid = r.last(acc)
+            B.store((i, j), tr.alu('*', alpha, Value(val, vid)))
 
 
 def k_lu(tr: Tracer, N: int, rng) -> None:
@@ -236,27 +401,54 @@ def k_lu(tr: Tracer, N: int, rng) -> None:
     A = tr.array(M, "A")
     for i in range(N):
         for j in range(i):
-            a = A.load(i, j)
-            for k in range(j):
-                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(k, j)))
-            A.store((i, j), tr.alu('/', a, A.load(j, j)))
+            acc0 = A.load(i, j)
+            val = float(acc0.val - A.arr[i, :j] @ A.arr[:j, j])
+            vid = acc0.vid
+            if j:
+                ks = np.arange(j)
+                b = tr.block()
+                a1 = b.load(A.addr_block(_ii(j, i), ks), label="ld A")
+                a2 = b.load(A.addr_block(ks, _ii(j, j)), label="ld A")
+                m = b.alu(a1, a2, label="*")
+                acc = b.scan(m, init=vid, label="-")
+                r = b.emit()
+                vid = r.last(acc)
+            A.store((i, j), tr.alu('/', Value(val, vid), A.load(j, j)))
         for j in range(i, N):
-            a = A.load(i, j)
-            for k in range(i):
-                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(k, j)))
-            A.store((i, j), a)
+            acc0 = A.load(i, j)
+            val = float(acc0.val - A.arr[i, :i] @ A.arr[:i, j])
+            vid = acc0.vid
+            if i:
+                ks = np.arange(i)
+                b = tr.block()
+                a1 = b.load(A.addr_block(_ii(i, i), ks), label="ld A")
+                a2 = b.load(A.addr_block(ks, _ii(i, j)), label="ld A")
+                m = b.alu(a1, a2, label="*")
+                acc = b.scan(m, init=vid, label="-")
+                r = b.emit()
+                vid = r.last(acc)
+            A.store((i, j), Value(val, vid))
 
 
 def k_trisolv(tr: Tracer, N: int, rng) -> None:
     """Forward substitution — inherently sequential."""
     L = tr.array(np.tril(_rand(rng, N, N)) + N * np.eye(N), "L")
-    b = tr.array(_rand(rng, N), "b")
+    bvec = tr.array(_rand(rng, N), "b")
     x = tr.zeros(N, "x")
     for i in range(N):
-        acc = b.load(i)
-        for j in range(i):
-            acc = tr.alu('-', acc, tr.alu('*', L.load(i, j), x.load(j)))
-        x.store(i, tr.alu('/', acc, L.load(i, i)))
+        acc0 = bvec.load(i)
+        val = float(acc0.val - L.arr[i, :i] @ x.arr[:i])
+        vid = acc0.vid
+        if i:
+            js = np.arange(i)
+            b = tr.block()
+            l_ = b.load(L.addr_block(_ii(i, i), js), label="ld L")
+            xv = b.load(x.addr_block(js), label="ld x")
+            m = b.alu(l_, xv, label="*")
+            acc = b.scan(m, init=vid, label="-")
+            r = b.emit()
+            vid = r.last(acc)
+        x.store(i, tr.alu('/', Value(val, vid), L.load(i, i)))
 
 
 def k_cholesky(tr: Tracer, N: int, rng) -> None:
@@ -266,32 +458,68 @@ def k_cholesky(tr: Tracer, N: int, rng) -> None:
     import math
     for i in range(N):
         for j in range(i):
-            a = A.load(i, j)
-            for k in range(j):
-                a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(j, k)))
-            A.store((i, j), tr.alu('/', a, A.load(j, j)))
-        a = A.load(i, i)
-        for k in range(i):
-            a = tr.alu('-', a, tr.alu('*', A.load(i, k), A.load(i, k)))
-        A.store((i, i), tr.alu(lambda v: math.sqrt(abs(v)) + 1e-12, a, label="sqrt"))
+            acc0 = A.load(i, j)
+            val = float(acc0.val - A.arr[i, :j] @ A.arr[j, :j])
+            vid = acc0.vid
+            if j:
+                ks = np.arange(j)
+                b = tr.block()
+                a1 = b.load(A.addr_block(_ii(j, i), ks), label="ld A")
+                a2 = b.load(A.addr_block(_ii(j, j), ks), label="ld A")
+                m = b.alu(a1, a2, label="*")
+                acc = b.scan(m, init=vid, label="-")
+                r = b.emit()
+                vid = r.last(acc)
+            A.store((i, j), tr.alu('/', Value(val, vid), A.load(j, j)))
+        acc0 = A.load(i, i)
+        val = float(acc0.val - A.arr[i, :i] @ A.arr[i, :i])
+        vid = acc0.vid
+        if i:
+            ks = np.arange(i)
+            b = tr.block()
+            a1 = b.load(A.addr_block(_ii(i, i), ks), label="ld A")
+            a2 = b.load(A.addr_block(_ii(i, i), ks), label="ld A")
+            m = b.alu(a1, a2, label="*")
+            acc = b.scan(m, init=vid, label="-")
+            r = b.emit()
+            vid = r.last(acc)
+        A.store((i, i), tr.alu(lambda v: math.sqrt(abs(v)) + 1e-12,
+                               Value(val, vid), label="sqrt"))
 
 
 def k_durbin(tr: Tracer, N: int, rng) -> None:
-    r = tr.array(_rand(rng, N), "r")
+    r_ = tr.array(_rand(rng, N), "r")
     y, z = tr.zeros(N, "y"), tr.zeros(N, "z")
-    y.store(0, tr.alu(lambda v: -v, r.load(0), label="neg"))
-    beta, alpha = tr.const(1.0), tr.alu(lambda v: -v, r.load(0), label="neg")
+    y.store(0, tr.alu(lambda v: -v, r_.load(0), label="neg"))
+    beta, alpha = tr.const(1.0), tr.alu(lambda v: -v, r_.load(0), label="neg")
     for k in range(1, N):
-        beta = tr.alu('*', tr.alu(lambda a: 1 - a * a, alpha, label="1-a2"), beta)
-        acc = tr.const(0.0)
-        for i in range(k):
-            acc = tr.alu('+', acc, tr.alu('*', r.load(k - i - 1), y.load(i)))
-        alpha = tr.alu(lambda s, rk, b: -(rk + s) / (b if abs(b) > 1e-9 else 1e-9),
-                       acc, r.load(k), beta, label="alpha")
-        for i in range(k):
-            z.store(i, tr.alu('+', y.load(i), tr.alu('*', alpha, y.load(k - i - 1))))
-        for i in range(k):
-            y.store(i, z.load(i))
+        beta = tr.alu('*', tr.alu(lambda a: 1 - a * a, alpha, label="1-a2"),
+                      beta)
+        idx = np.arange(k)
+        b = tr.block()
+        lr = b.load(r_.addr_block(k - 1 - idx), label="ld r")
+        ly = b.load(y.addr_block(idx), label="ld y")
+        m = b.alu(lr, ly, label="*")
+        accs = b.scan(m, label="+")
+        res = b.emit()
+        acc = Value(float(r_.arr[:k][::-1] @ y.arr[:k]), res.last(accs))
+        alpha = tr.alu(lambda s, rk, bt: -(rk + s) / (bt if abs(bt) > 1e-9
+                                                      else 1e-9),
+                       acc, r_.load(k), beta, label="alpha")
+        newz = y.arr[:k] + alpha.val * y.arr[:k][::-1]
+        b = tr.block()
+        ly1 = b.load(y.addr_block(idx), label="ld y")
+        ly2 = b.load(y.addr_block(k - 1 - idx), label="ld y")
+        m = b.alu(alpha.vid, ly2, label="*")
+        a = b.alu(ly1, m, label="+")
+        b.store(z.addr_block(idx), value=a, label="st z")
+        b.emit()
+        z.arr[:k] = newz
+        b = tr.block()
+        lz = b.load(z.addr_block(idx), label="ld z")
+        b.store(y.addr_block(idx), value=lz, label="st y")
+        b.emit()
+        y.arr[:k] = z.arr[:k]
         y.store(k, alpha)
 
 
@@ -305,10 +533,20 @@ def k_trmm_spill(tr: Tracer, N: int, rng) -> None:
     alpha = tr.const(1.5)
     for i in range(N):
         for j in range(N):
-            for k in range(i + 1, N):
-                b = B.load(i, j)                     # spilled accumulator:
-                b = tr.alu('+', b, tr.alu('*', A.load(k, i), B.load(k, j)))
-                B.store((i, j), b)                   # ...store every iter
+            if i + 1 < N:
+                ks = np.arange(i + 1, N)
+                n_ = len(ks)
+                b = tr.block()
+                bij = b.load(B.addr_block(_ii(n_, i), _ii(n_, j)),
+                             label="ld B")                 # spilled accumulator
+                a = b.load(A.addr_block(ks, _ii(n_, i)), label="ld A")
+                bkj = b.load(B.addr_block(ks, _ii(n_, j)), label="ld B")
+                m = b.alu(a, bkj, label="*")
+                ad = b.alu(bij, m, label="+")
+                b.store(B.addr_block(_ii(n_, i), _ii(n_, j)), value=ad,
+                        label="st B")                      # ...store every iter
+                b.emit()
+                B.arr[i, j] += float(A.arr[i + 1:, i] @ B.arr[i + 1:, j])
             B.store((i, j), tr.alu('*', alpha, B.load(i, j)))
 
 
@@ -327,10 +565,18 @@ PAPER_15 = ["2mm", "3mm", "atax", "bicg", "doitgen", "mvt", "gemm", "gemver",
 
 def trace_kernel(name: str, N: int, cache=None, max_regs=None,
                  false_deps: bool = False, seed: int = 0):
-    """Run one kernel under the tracer; returns the finalized eDAG."""
+    """Run one kernel under the tracer; returns the finalized eDAG.
+
+    Uses the bulk block-emission kernels; tracer modes the bulk API does not
+    model (bounded register files, false-dependency tracking) run the
+    retained per-element reference implementations instead."""
     rng = np.random.default_rng(seed)
     tr = Tracer(cache=cache, max_regs=max_regs, false_deps=false_deps)
-    SCALAR_KERNELS[name](tr, N, rng)
+    if max_regs is not None or false_deps:
+        from .reference import REF_POLYBENCH_KERNELS
+        REF_POLYBENCH_KERNELS[name](tr, N, rng)
+    else:
+        SCALAR_KERNELS[name](tr, N, rng)
     return tr.edag
 
 

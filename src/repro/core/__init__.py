@@ -12,22 +12,26 @@ from .trace import Tracer, Value, build_edag_from_trace
 from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
                    layered_upper_bound, non_memory_cost, analyze)
 from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
-                      data_movement_over_time, cost_vector, report, Report)
+                      bandwidth_sweep, cost_matrix, data_movement_over_time,
+                      cost_vector, report, Report, sweep_report, t_inf_sweep)
 from .scheduler import simulate, latency_sweep
 from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
                   hlo_flops_estimate, hlo_hbm_bytes_estimate,
                   axis_signature_table)
 from .jaxpr import edag_from_fn, edag_from_jaxpr
-from .sensitivity import collective_sensitivity, AxisSensitivity
+from .sensitivity import (collective_sensitivity, AxisSensitivity,
+                          axis_latency_sweep)
 
 __all__ = [
     "EDag", "MemLayering", "NoCache", "SetAssociativeCache", "make_cache",
     "Tracer", "Value", "build_edag_from_trace", "CostModelParams",
     "memory_cost_bounds", "total_cost_bounds", "layered_upper_bound",
     "non_memory_cost", "analyze", "lambda_abs", "lambda_rel",
-    "bandwidth_utilization", "data_movement_over_time", "cost_vector",
-    "report", "Report", "simulate", "latency_sweep", "parse_hlo",
+    "bandwidth_utilization", "bandwidth_sweep", "cost_matrix",
+    "data_movement_over_time", "cost_vector", "report", "Report",
+    "sweep_report", "t_inf_sweep", "simulate", "latency_sweep", "parse_hlo",
     "analyze_collectives", "shape_bytes", "hlo_flops_estimate",
     "hlo_hbm_bytes_estimate", "axis_signature_table", "edag_from_fn",
     "edag_from_jaxpr", "collective_sensitivity", "AxisSensitivity",
+    "axis_latency_sweep",
 ]

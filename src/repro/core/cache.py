@@ -8,12 +8,18 @@ HPCG/LULESH case studies use a write-through 2-way set-associative L1 with
 """
 from __future__ import annotations
 
+import numpy as np
+
 
 class NoCache:
     """Every access goes to RAM (the paper's 'No Cache' baseline rows)."""
 
     def access(self, addr: int, is_write: bool = False) -> bool:
         return False  # never a hit
+
+    def access_block(self, addrs, is_write=None) -> np.ndarray:
+        """Batch lookup: every access misses."""
+        return np.zeros(len(addrs), dtype=bool)
 
     def reset(self) -> None:
         pass
@@ -60,6 +66,52 @@ class SetAssociativeCache:
                 s.pop(0)
             s.append(tag)
             return False
+
+    def access_block(self, addrs, is_write=None) -> np.ndarray:
+        """Vectorized batch lookup over an address array.
+
+        Returns the per-access hit mask and updates the cumulative
+        ``hits`` / ``misses`` counters exactly as the equivalent sequence
+        of scalar ``access`` calls would (sets are independent, so accesses
+        are replayed per set in their original relative order).
+
+        ``is_write`` is accepted for signature parity with ``access``; the
+        hit/miss outcome is read/write-agnostic under write-allocate LRU.
+        """
+        addrs = np.asarray(addrs, dtype=np.int64)
+        k = len(addrs)
+        hits = np.zeros(k, dtype=bool)
+        if k == 0:
+            return hits
+        lines = addrs // self.line_bytes
+        set_idx = lines % self.n_sets
+        tags = lines // self.n_sets
+        order = np.argsort(set_idx, kind="stable")
+        sets_sorted = set_idx[order]
+        tags_sorted = tags[order].tolist()
+        # run boundaries: one contiguous slice per referenced set
+        bounds = np.flatnonzero(np.diff(sets_sorted)) + 1
+        starts = np.concatenate(([0], bounds))
+        ends = np.concatenate((bounds, [k]))
+        n_hits = 0
+        hit_l = hits.tolist()
+        order_l = order.tolist()
+        for b, e in zip(starts.tolist(), ends.tolist()):
+            s = self._sets[sets_sorted[b]]
+            for i in range(b, e):
+                tag = tags_sorted[i]
+                try:
+                    s.remove(tag)        # hit: refresh LRU position
+                    s.append(tag)
+                    hit_l[order_l[i]] = True
+                    n_hits += 1
+                except ValueError:       # miss: allocate (write-allocate)
+                    if len(s) >= self.ways:
+                        s.pop(0)
+                    s.append(tag)
+        self.hits += n_hits
+        self.misses += k - n_hits
+        return np.asarray(hit_l, dtype=bool)
 
     @property
     def miss_rate(self) -> float:

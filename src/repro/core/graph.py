@@ -4,14 +4,28 @@ Vertices are executed operations (instructions in the scalar frontend, jaxpr
 equations or HLO ops in the JAX frontends); edges are *true* (RAW) data
 dependencies.  The structure is append-only and is finalized into flat numpy
 arrays; all analyses (T1, T-inf, memory layering, start/finish schedule) are
-single topological passes, exploiting the invariant that vertices are inserted
-in a topological order (every edge satisfies src < dst).
+level-synchronous vectorized passes, exploiting the invariant that vertices
+are inserted in a topological order (every edge satisfies src < dst).
+
+``_finalize`` computes every derived array once — predecessor CSR, successor
+CSR, in-degrees, topological levels and the edge partition by destination
+level — and caches them, so repeated analyses over the same eDAG touch no
+Python-level per-edge loop at all.  The longest-path recurrence
+``F[v] = base[v] + max_u F[u]`` runs as one ``np.maximum.at`` per level
+(``_accumulate``) and generalizes to a whole matrix of cost vectors processed
+in a single level sweep (``_accumulate_batch``) — the kernel behind one-pass
+latency sweeps.
 """
 from __future__ import annotations
 
 import numpy as np
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
+
+# Below this many edges per level on average the per-level numpy dispatch
+# overhead exceeds the Python loop cost (deep, skinny DAGs such as forward
+# substitution); fall back to the scalar kernel there.
+_VECTOR_MIN_EDGES_PER_LEVEL = 4.0
 
 
 @dataclass
@@ -64,12 +78,60 @@ class EDag:
         self._finalized = False
         return vid
 
+    def add_vertex_block(self, cost, is_mem, nbytes, label: str = "",
+                         n: Optional[int] = None) -> np.ndarray:
+        """Bulk-append ``n`` vertices; returns their contiguous id array.
+
+        ``cost`` / ``is_mem`` / ``nbytes`` may each be a scalar (broadcast) or
+        an array of length ``n``; ``label`` is one string shared by the whole
+        block or a length-``n`` sequence of per-vertex labels.
+        """
+        if n is None:
+            for arr in (cost, is_mem, nbytes):
+                if np.ndim(arr):
+                    n = len(arr)
+                    break
+            else:
+                raise ValueError("block size not inferable from scalars")
+        base = len(self._cost)
+        self._cost.extend(np.broadcast_to(
+            np.asarray(cost, dtype=np.float64), (n,)).tolist())
+        self._is_mem.extend(np.broadcast_to(
+            np.asarray(is_mem, dtype=bool), (n,)).tolist())
+        self._nbytes.extend(np.broadcast_to(
+            np.asarray(nbytes, dtype=np.float64), (n,)).tolist())
+        if isinstance(label, str):
+            self._label.extend([label] * n)
+        else:
+            if len(label) != n:
+                raise ValueError("label sequence length mismatch")
+            self._label.extend(label)
+        self._finalized = False
+        return np.arange(base, base + n, dtype=np.int64)
+
     def add_edge(self, u: int, v: int) -> None:
         """Add the true-dependency edge u -> v.  Requires u < v (topo insert)."""
         if not (0 <= u < v < len(self._cost)):
             raise ValueError(f"edge ({u},{v}) violates topological insertion order")
         self._src.append(u)
         self._dst.append(v)
+        self._finalized = False
+
+    def add_edge_block(self, src, dst) -> None:
+        """Bulk-append edges.  Every edge must satisfy 0 <= src < dst < n."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if src.shape != dst.shape:
+            raise ValueError("src/dst length mismatch")
+        if src.size == 0:
+            return
+        n = len(self._cost)
+        if not ((src >= 0).all() and (src < dst).all() and (dst < n).all()):
+            bad = np.nonzero(~((src >= 0) & (src < dst) & (dst < n)))[0][0]
+            raise ValueError(
+                f"edge ({src[bad]},{dst[bad]}) violates topological insertion order")
+        self._src.extend(src.tolist())
+        self._dst.extend(dst.tolist())
         self._finalized = False
 
     # --------------------------------------------------------------- finalize
@@ -90,7 +152,88 @@ class EDag:
         if len(dst):
             np.add.at(self._indptr, dst + 1, 1)
         np.cumsum(self._indptr, out=self._indptr)
+
+        # successor CSR (edges sorted by src) — hoisted here from the
+        # scheduler so repeated `simulate` calls share one build
+        order = np.argsort(src, kind="stable")
+        self.succ_dst = dst[order]
+        self.succ_indptr = np.zeros(n + 1, dtype=np.int64)
+        if len(src):
+            np.add.at(self.succ_indptr, src[order] + 1, 1)
+        np.cumsum(self.succ_indptr, out=self.succ_indptr)
+        self.indeg = np.diff(self._indptr)
+        self._sim_lists_cache = None
+
+        # topological levels via level-synchronous Kahn: level[v] = length of
+        # the longest edge path ending at v; all preds of a level-l vertex
+        # live in levels < l, which is what licenses the segmented updates.
+        level = np.zeros(n, dtype=np.int64)
+        indeg = self.indeg.copy()
+        frontier = np.nonzero(indeg == 0)[0]
+        lvl = 0
+        while frontier.size:
+            level[frontier] = lvl
+            starts = self.succ_indptr[frontier]
+            counts = self.succ_indptr[frontier + 1] - starts
+            total = int(counts.sum())
+            if total == 0:
+                break
+            # gather the concatenated out-edge ranges of the frontier
+            offs = np.repeat(np.cumsum(counts) - counts, counts)
+            idx = np.repeat(starts, counts) + np.arange(total) - offs
+            targets = self.succ_dst[idx]
+            cand, cnt = np.unique(targets, return_counts=True)
+            indeg[cand] -= cnt
+            frontier = cand[indeg[cand] == 0]
+            lvl += 1
+        self.level = level
+        self.n_levels = int(level.max()) + 1 if n else 0
+
+        # partition edges by destination level (ascending), sorted by dst
+        # within each level.  Every in-edge of a vertex lands in that
+        # vertex's own level slice, so one segmented max per run of equal
+        # dst (np.maximum.reduceat) fully resolves F[dst] for the level.
+        if len(dst):
+            elevel = level[dst]
+            self._eorder = np.lexsort((dst, elevel))
+            counts = np.bincount(elevel, minlength=self.n_levels)
+            self._elevel_ptr = np.concatenate(
+                ([0], np.cumsum(counts))).astype(np.int64)
+            self._esrc_lv = src[self._eorder]
+            self._edst_lv = dst[self._eorder]
+            run_mask = np.empty(len(dst), dtype=bool)
+            run_mask[0] = True
+            np.not_equal(self._edst_lv[1:], self._edst_lv[:-1],
+                         out=run_mask[1:])
+            self._run_starts = np.nonzero(run_mask)[0]
+            self._run_dst = self._edst_lv[self._run_starts]
+            self._run_lens = np.diff(np.append(self._run_starts, len(dst)))
+            rcounts = np.bincount(level[self._run_dst],
+                                  minlength=self.n_levels)
+            self._run_ptr = np.concatenate(
+                ([0], np.cumsum(rcounts))).astype(np.int64)
+        else:
+            self._eorder = np.zeros(0, dtype=np.int64)
+            self._elevel_ptr = np.zeros(max(self.n_levels, 0) + 1,
+                                        dtype=np.int64)
+            self._esrc_lv = src
+            self._edst_lv = dst
+            self._run_starts = np.zeros(0, dtype=np.int64)
+            self._run_dst = np.zeros(0, dtype=np.int64)
+            self._run_lens = np.zeros(0, dtype=np.int64)
+            self._run_ptr = np.zeros(max(self.n_levels, 0) + 1,
+                                     dtype=np.int64)
         self._finalized = True
+
+    def _sim_lists(self):
+        """Python-list views of the successor CSR + in-degrees, cached for
+        the discrete-event simulator's inner loop."""
+        self._finalize()
+        if self._sim_lists_cache is None:
+            self._sim_lists_cache = (self.succ_dst.tolist(),
+                                     self.succ_indptr.tolist(),
+                                     self.indeg.tolist())
+        return self._sim_lists_cache
 
     # ------------------------------------------------------------- properties
     @property
@@ -110,21 +253,97 @@ class EDag:
         return self.src[lo:hi]
 
     # -------------------------------------------------------------- analyses
-    def _accumulate(self, base: np.ndarray) -> np.ndarray:
-        """F[v] = base[v] + max(F[u] for u in preds(v), default 0).
+    def _accumulate_scalar(self, base: np.ndarray) -> np.ndarray:
+        """Reference scalar kernel for F[v] = base[v] + max(F[u], default 0).
 
-        One pass in topological (insertion) order.  This single kernel yields
-        finish times (base=cost), memory levels (base=is_mem) and other
-        longest-path style recurrences.
+        Retained as the ground truth the vectorized kernels are property-
+        tested against, and as the fast path for deep, skinny DAGs.
         """
         self._finalize()
-        F = base.astype(np.float64).tolist()
-        base_l = base.tolist()
+        F = np.asarray(base, dtype=np.float64).tolist()
+        base_l = np.asarray(base, dtype=np.float64).tolist()
         for s, d in zip(self._src, self._dst):
             nf = F[s] + base_l[d]
             if nf > F[d]:
                 F[d] = nf
         return np.asarray(F, dtype=np.float64)
+
+    def _accumulate(self, base: np.ndarray) -> np.ndarray:
+        """F[v] = base[v] + max(0, F[u] for u in preds(v)).
+
+        Level-synchronous vectorized form: one segmented maximum per
+        topological level.  This single kernel yields finish times
+        (base=cost), memory levels (base=is_mem) and other longest-path
+        style recurrences.  Predecessor maxima clamp at 0 (a vertex can
+        always start at time 0), matching ``_accumulate_scalar`` exactly
+        even for negative cost entries.
+        """
+        self._finalize()
+        n_edges = len(self._esrc_lv)
+        if n_edges == 0:
+            return np.asarray(base, dtype=np.float64).copy()
+        if n_edges / max(self.n_levels, 1) < _VECTOR_MIN_EDGES_PER_LEVEL:
+            return self._accumulate_scalar(base)
+        base = np.asarray(base, dtype=np.float64)
+        F = base.copy()
+        eptr, src = self._elevel_ptr, self._esrc_lv
+        rptr, rstart, rdst = self._run_ptr, self._run_starts, self._run_dst
+        for lv in range(1, self.n_levels):
+            e0, e1 = eptr[lv], eptr[lv + 1]
+            if e0 == e1:
+                continue
+            r0, r1 = rptr[lv], rptr[lv + 1]
+            d = rdst[r0:r1]
+            # max(F[u] + base[d]) = max(F[u]) + base[d]: base is constant
+            # within a run of equal dst, so reduce first, add after
+            segmax = np.maximum.reduceat(F[src[e0:e1]], rstart[r0:r1] - e0)
+            np.maximum(segmax, 0.0, out=segmax)
+            F[d] = segmax + base[d]
+        return F
+
+    def _accumulate_batch(self, base: np.ndarray) -> np.ndarray:
+        """Batched longest-path recurrence over a cost matrix.
+
+        ``base`` has shape (n_sweep, n): one cost vector per sweep point.
+        Returns F of the same shape, computed in a single level pass — the
+        engine behind one-pass latency sweeps.
+        """
+        self._finalize()
+        base = np.atleast_2d(np.asarray(base, dtype=np.float64))
+        if base.shape[1] != self.n_vertices:
+            raise ValueError(f"cost matrix must have {self.n_vertices} columns")
+        # work in (n, k) layout so gathers/reductions index rows
+        return self._accumulate_batch_nk(np.ascontiguousarray(base.T)).T
+
+    def _accumulate_batch_nk(self, F: np.ndarray) -> np.ndarray:
+        """In-place batched recurrence over an (n, n_sweep) cost matrix."""
+        self._finalize()
+        rptr, rdst = self._run_ptr, self._run_dst
+        rstart, rlens, src = self._run_starts, self._run_lens, self._esrc_lv
+        for lv in range(1, self.n_levels):
+            r0, r1 = rptr[lv], rptr[lv + 1]
+            if r0 == r1:
+                continue
+            d = rdst[r0:r1]
+            starts = rstart[r0:r1]
+            lens = rlens[r0:r1]
+            # segmented max by offset stepping: in-degrees in real traces
+            # are tiny, so one or two vectorized maximum passes finish
+            # every run (much faster than np.maximum.reduceat over 2D)
+            segmax = F[src[starts]]
+            for off in range(1, int(lens.max())):
+                live = lens > off
+                if not live.any():
+                    break
+                segmax[live] = np.maximum(segmax[live],
+                                          F[src[starts[live] + off]])
+            # clamp at 0 (scalar-path semantics for negative costs), then
+            # add base: F[d] still holds base[d], since each dst is
+            # written exactly once, at its own level
+            np.maximum(segmax, 0.0, out=segmax)
+            segmax += F[d]
+            F[d] = segmax
+        return F
 
     def t1(self) -> float:
         """Total work T1 = sum of vertex costs (§2.2)."""
@@ -135,10 +354,43 @@ class EDag:
         self._finalize()
         return self._accumulate(self.cost if cost is None else cost)
 
+    def finish_times_batch(self, costs: np.ndarray) -> np.ndarray:
+        """Finish times for a (n_sweep, n) matrix of cost vectors at once."""
+        return self._accumulate_batch(costs)
+
     def t_inf(self, cost: Optional[np.ndarray] = None) -> float:
         """Span / critical-path length T-inf (§2.2)."""
         F = self.finish_times(cost)
         return float(F.max()) if len(F) else 0.0
+
+    def t_inf_batch(self, costs: np.ndarray) -> np.ndarray:
+        """Span for each row of a (n_sweep, n) cost matrix, one level pass."""
+        self._finalize()
+        costs = np.atleast_2d(np.asarray(costs, dtype=np.float64))
+        if costs.shape[1] == 0:
+            return np.zeros(costs.shape[0])
+        F = self._accumulate_batch_nk(np.ascontiguousarray(costs.T))
+        return F.max(axis=0)
+
+    def t_inf_sweep_mem(self, alphas, unit: float = 1.0,
+                        chunk: int = 24) -> np.ndarray:
+        """Span at each alpha for the standard memory cost model
+        (alpha for RAM-access vertices, ``unit`` otherwise) — builds the
+        (n, n_sweep) cost matrix directly, skipping the transpose copy.
+
+        Points are processed ``chunk`` at a time to keep the (n, chunk)
+        working set cache-resident on large traces."""
+        self._finalize()
+        alphas = np.asarray(alphas, dtype=np.float64)
+        if self.n_vertices == 0 or len(alphas) == 0:
+            return np.zeros(len(alphas))
+        chunk = max(int(chunk), 1)
+        out = []
+        for i in range(0, len(alphas), chunk):
+            F = np.where(self.is_mem[:, None],
+                         alphas[None, i:i + chunk], float(unit))
+            out.append(self._accumulate_batch_nk(F).max(axis=0))
+        return np.concatenate(out)
 
     def start_finish(self, cost: Optional[np.ndarray] = None):
         """Eq 6-7: greedy unlimited-parallelism start/finish times S(v), F(v)."""
@@ -180,11 +432,10 @@ class EDag:
         while True:
             ps = self.preds(v)
             if not len(ps):
-                break
-            want = F[v] - c[v]
+                break                     # reached a source vertex
+            # the max-finish predecessor lies on the critical path:
+            # F[v] = c[v] + max_u F[u] by construction
             u = int(ps[np.argmax(F[ps])])
-            if abs(F[u] - want) > 1e-9 and F[u] < want - 1e-9:
-                break  # no predecessor on the critical path (shouldn't happen)
             v = u
             path.append(v)
         path.reverse()

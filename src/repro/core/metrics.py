@@ -33,6 +33,36 @@ def cost_vector(g: EDag, alpha: float, unit: float = 1.0) -> np.ndarray:
     return np.where(g.is_mem, float(alpha), float(unit))
 
 
+def cost_matrix(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
+    """(n_sweep, n) cost matrix: row i is ``cost_vector(g, alphas[i])``."""
+    g._finalize()
+    alphas = np.asarray(alphas, dtype=np.float64)
+    return np.where(g.is_mem[None, :], alphas[:, None], float(unit))
+
+
+def t_inf_sweep(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
+    """Span T-inf at every latency point in one level-synchronous pass.
+
+    The whole alpha sweep is a single batched longest-path evaluation over
+    the cost matrix — the vectorized replacement for re-running
+    ``g.t_inf(cost_vector(g, a))`` once per point."""
+    g._finalize()
+    if g.n_vertices == 0:
+        return np.zeros(len(np.atleast_1d(alphas)))
+    return g.t_inf_sweep_mem(alphas, unit)
+
+
+def bandwidth_sweep(g: EDag, alphas, unit: float = 1.0,
+                    cycles_per_second: float = 1e9) -> np.ndarray:
+    """Eq 5 bandwidth at every latency point, from one batched span pass."""
+    g._finalize()
+    t_inf = t_inf_sweep(g, alphas, unit)
+    moved = float(g.nbytes[g.is_mem].sum())
+    out = np.zeros_like(t_inf)
+    np.divide(moved * cycles_per_second, t_inf, out=out, where=t_inf > 0)
+    return out
+
+
 def bandwidth_utilization(g: EDag, alpha: float, unit: float = 1.0,
                           cycles_per_second: float = 1e9) -> float:
     """Eq 5: B = sum_v w(v) / T_inf, in bytes/second at the given clock.
@@ -94,6 +124,37 @@ class Report:
         return dict(W=self.W, D=self.D, C=self.C, lam=self.lam, Lam=self.Lam,
                     B_gbs=self.B_gbs, t1=self.t1, t_inf=self.t_inf,
                     parallelism=self.parallelism)
+
+
+def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
+                 simulate_points: bool = False,
+                 compute_slots: int = 0) -> dict:
+    """Full latency sweep in one pass (§3.3 metrics per alpha point).
+
+    The analytic quantities — T-inf, Eq-2 bounds, bandwidth, Lambda — come
+    from ONE batched level-synchronous evaluation; W, D, C, lambda are
+    alpha-independent and computed once.  With ``simulate_points=True`` the
+    §4 ground-truth simulator also runs per point, reusing the cached CSR.
+    """
+    from .cost import non_memory_cost, total_cost_bounds
+    from .scheduler import latency_sweep as _sim_sweep
+
+    g._finalize()
+    alphas = np.asarray(alphas, dtype=np.float64)
+    lay = g.mem_layers()
+    C = non_memory_cost(g, params.unit)
+    lam = lambda_abs(lay.W, lay.D, params.m)
+    t_inf = t_inf_sweep(g, alphas, params.unit)
+    B = bandwidth_sweep(g, alphas, params.unit)
+    lo, hi = total_cost_bounds(lay.W, lay.D, params.m, alphas, C)
+    Lam = np.array([lambda_rel(lam, a, C) for a in alphas])
+    out = dict(alphas=alphas, W=lay.W, D=lay.D, C=C, lam=lam, Lam=Lam,
+               t_inf=t_inf, t_lower=lo, t_upper=hi, B_gbs=B / 1e9)
+    if simulate_points:
+        out["simulated"] = _sim_sweep(g, alphas, m=params.m,
+                                      unit=params.unit,
+                                      compute_slots=compute_slots)
+    return out
 
 
 def report(g: EDag, params: CostModelParams = CostModelParams()) -> Report:

@@ -13,6 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Sequence, Tuple
 
+import numpy as np
+
 from .hlo import analyze_collectives
 from .metrics import lambda_abs, lambda_rel
 
@@ -57,6 +59,28 @@ def collective_sensitivity(hlo_text: str,
                                     bytes=st["bytes"], lam=lam,
                                     lam_seconds=lam * a)
     return dict(per_axis=out, raw=stats)
+
+
+def axis_latency_sweep(per_axis: Dict[str, AxisSensitivity],
+                       alphas: Sequence[float],
+                       step_seconds: float) -> dict:
+    """Vectorized per-axis fabric-latency sweep (Eq 3-4 over an alpha grid).
+
+    For each mesh axis, evaluates the projected step-time delta
+    ``lam * alpha`` and relative sensitivity across the whole latency grid
+    at once — one ``np.outer`` per quantity instead of a Python loop per
+    (axis, alpha) pair.  Returns ``{axis: {alphas, lam_seconds, Lam}}``.
+    """
+    alphas = np.asarray(alphas, dtype=np.float64)
+    out = {}
+    for axis, s in per_axis.items():
+        lam_seconds = s.lam * alphas
+        base = max(step_seconds - s.lam_seconds, 0.0)
+        denom = lam_seconds + base
+        Lam = np.divide(lam_seconds, denom,
+                        out=np.zeros_like(denom), where=denom > 0)
+        out[axis] = dict(alphas=alphas, lam_seconds=lam_seconds, Lam=Lam)
+    return out
 
 
 def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],

@@ -24,7 +24,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .cache import NoCache, make_cache
+from .cache import NoCache
 from .graph import EDag
 
 
@@ -47,8 +47,7 @@ def _parse_insn(text: str):
 
 
 def build_edag_from_trace(lines: Sequence[str], cache=None,
-                          false_deps: bool = False,
-                          line_bytes: int = 64) -> EDag:
+                          false_deps: bool = False) -> EDag:
     """Algorithm 1 of the paper, over Fig-5-format trace lines.
 
     dep_vals(v) are the registers read and (for loads) the memory address;
@@ -166,6 +165,13 @@ class TracedArray:
         flat = int(np.ravel_multi_index(tuple(int(i) for i in idx), self.arr.shape))
         return self.base + flat * self.itemsize
 
+    def addr_block(self, *idx_arrays) -> np.ndarray:
+        """Vectorized ``_addr``: byte addresses for arrays of indices."""
+        flat = np.ravel_multi_index(
+            tuple(np.asarray(ix, dtype=np.int64) for ix in idx_arrays),
+            self.arr.shape)
+        return self.base + flat * self.itemsize
+
     def load(self, *idx) -> Value:
         """Load element; idx components may be ints or Values (pointer chase)."""
         idx_vids = [i.vid for i in idx if isinstance(i, Value)]
@@ -275,7 +281,8 @@ class Tracer:
             hit = self.cache.access(addr, is_write=True)
             sv = self.g.add_vertex(cost=1.0, is_mem=not hit, nbytes=8.0,
                                    label="st spill")
-            self.g.add_edge(evict, sv) if evict < sv else None
+            if evict < sv:
+                self.g.add_edge(evict, sv)
             self._curr_vs[addr] = sv
         self._live[vid] = None
 
@@ -342,7 +349,337 @@ class Tracer:
     def const(self, v) -> Value:
         return Value(v, None)
 
+    # ------------------------------------------------------- bulk emission
+    # Vertex kinds for emit_block op arrays.
+    LOAD, STORE, ALU = 0, 1, 2
+
+    def _check_bulk_ok(self) -> None:
+        if self.max_regs is not None:
+            raise NotImplementedError(
+                "bulk emission bypasses the bounded-register-file model; "
+                "use the scalar API when max_regs is set")
+        if self.false_deps:
+            raise NotImplementedError(
+                "bulk emission tracks RAW dependencies only; use the scalar "
+                "API for false_deps tracing")
+
+    def emit_block(self, kind, addr=None, nbytes=0.0, deps=None,
+                   label="") -> np.ndarray:
+        """Append a block of vertices (and their edges) in one batch.
+
+        ``kind``    int array: Tracer.LOAD / STORE / ALU, in *program order* —
+                    the cache model replays the block's memory accesses in
+                    exactly this order, so a block is semantically identical
+                    to the equivalent sequence of scalar ``_load`` /
+                    ``_store`` / ``alu`` calls.
+        ``addr``    int64 byte addresses for memory ops (ignored for ALU).
+        ``nbytes``  scalar or per-op array of access widths.
+        ``deps``    (k, d) int64 matrix of *absolute* producer vertex ids,
+                    -1 for none.  In-block references to earlier positions
+                    are allowed.  RAW dependencies through memory (load after
+                    the most recent store to the same address) are derived
+                    internally and need not be listed.
+        ``label``   one label for the block, or a length-k sequence.
+
+        Returns the new vertex ids (contiguous, in program order).
+        """
+        self._check_bulk_ok()
+        kind = np.asarray(kind, dtype=np.int64)
+        k = len(kind)
+        if k == 0:
+            return np.zeros(0, dtype=np.int64)
+        addr = (np.full(k, -1, dtype=np.int64) if addr is None
+                else np.asarray(addr, dtype=np.int64))
+
+        # 1. cache lookups in program order (misses become memory vertices)
+        mem_pos = np.flatnonzero(kind != self.ALU)
+        is_mem = np.zeros(k, dtype=bool)
+        if len(mem_pos):
+            hits = self.cache.access_block(addr[mem_pos],
+                                           is_write=kind[mem_pos] == self.STORE)
+            is_mem[mem_pos] = ~hits
+
+        # 2. vertices
+        nb = np.where(kind == self.ALU, 0.0,
+                      np.broadcast_to(np.asarray(nbytes, dtype=np.float64),
+                                      (k,)))
+        vids = self.g.add_vertex_block(cost=1.0, is_mem=is_mem, nbytes=nb,
+                                       label=label, n=k)
+        base = int(vids[0])
+
+        # 3. RAW-through-memory edges for loads: the most recent in-block
+        # store to the same address, else the tracer-wide last writer.
+        raw_src: list = []
+        raw_dst: list = []
+        if len(mem_pos):
+            m_addr = addr[mem_pos]
+            m_write = kind[mem_pos] == self.STORE
+            M = len(mem_pos)
+            order = np.lexsort((np.arange(M), m_addr))
+            a_s = m_addr[order]
+            w_s = m_write[order]
+            grp_start = np.empty(M, dtype=bool)
+            grp_start[0] = True
+            np.not_equal(a_s[1:], a_s[:-1], out=grp_start[1:])
+            gid = np.cumsum(grp_start) - 1
+            # segmented running "latest write position": tag write positions
+            # with gid*M+pos so the cummax never crosses an address group
+            t = np.where(w_s, gid * M + np.arange(M), np.int64(-1))
+            c = np.maximum.accumulate(t)
+            has_w = c >= gid * M
+            last_w = np.where(has_w, c - gid * M, -1)
+            load_s = ~w_s
+            # in-block RAW: map sorted positions back to program positions
+            lw = last_w[load_s]
+            lpos = mem_pos[order[load_s]]            # program pos of each load
+            in_blk = lw >= 0
+            raw_src.append(vids[mem_pos[order[lw[in_blk]]]])
+            raw_dst.append(vids[lpos[in_blk]])
+            # external RAW: last writer before this block, via the dict
+            ext_addrs = a_s[load_s][~in_blk]
+            ext_dst = vids[lpos[~in_blk]]
+            if len(ext_addrs):
+                get = self._curr_vs.get
+                ext_src = np.fromiter(
+                    (get(int(a), -1) for a in ext_addrs),
+                    dtype=np.int64, count=len(ext_addrs))
+                ok = ext_src >= 0
+                raw_src.append(ext_src[ok])
+                raw_dst.append(ext_dst[ok])
+
+        # 4. explicit dependency edges
+        dep_src: list = []
+        dep_dst: list = []
+        if deps is not None:
+            deps = np.asarray(deps, dtype=np.int64)
+            if deps.ndim == 1:
+                deps = deps[:, None]
+            for j in range(deps.shape[1]):
+                col = deps[:, j]
+                ok = col >= 0
+                dep_src.append(col[ok])
+                dep_dst.append(vids[ok])
+        src = np.concatenate(raw_src + dep_src) if raw_src or dep_src \
+            else np.zeros(0, dtype=np.int64)
+        dst = np.concatenate(raw_dst + dep_dst) if raw_dst or dep_dst \
+            else np.zeros(0, dtype=np.int64)
+        if len(src):
+            keep = src != dst
+            src, dst = src[keep], dst[keep]
+            # dedup (u, v) pairs — the scalar path's per-vertex dep set
+            uniq = np.unique(src * np.int64(base + k) + dst)
+            src, dst = uniq // (base + k), uniq % (base + k)
+            self.g.add_edge_block(src, dst)
+
+        # 5. advance the last-writer map: dict(zip) keeps the latest store
+        st_pos = np.flatnonzero(kind == self.STORE)
+        if len(st_pos):
+            self._curr_vs.update(
+                zip(addr[st_pos].tolist(), vids[st_pos].tolist()))
+        return vids
+
+    def load_block(self, addrs, nbytes: float = 8.0, deps=None,
+                   label: str = "ld") -> np.ndarray:
+        """Emit one load vertex per address; returns their vertex ids.
+
+        ``deps`` may carry extra (k,) or (k, d) producer vids (e.g. pointer-
+        chase index values); RAW edges from the last writer of each address
+        are added automatically."""
+        addrs = np.asarray(addrs, dtype=np.int64)
+        kind = np.full(len(addrs), self.LOAD, dtype=np.int64)
+        return self.emit_block(kind, addrs, nbytes, deps, label)
+
+    def store_block(self, addrs, value_vids=None, nbytes: float = 8.0,
+                    label: str = "st") -> np.ndarray:
+        """Emit one store vertex per address, depending on ``value_vids``."""
+        addrs = np.asarray(addrs, dtype=np.int64)
+        kind = np.full(len(addrs), self.STORE, dtype=np.int64)
+        return self.emit_block(kind, addrs, nbytes, value_vids, label)
+
+    def alu_block(self, *dep_arrays, n: Optional[int] = None,
+                  label: str = "alu") -> np.ndarray:
+        """Emit a block of ALU vertices; ``dep_arrays`` are producer vids."""
+        if n is None:
+            n = len(dep_arrays[0])
+        kind = np.full(n, self.ALU, dtype=np.int64)
+        deps = (np.column_stack([np.broadcast_to(
+            np.asarray(d, dtype=np.int64), (n,)) for d in dep_arrays])
+            if dep_arrays else None)
+        return self.emit_block(kind, None, 0.0, deps, label)
+
+    def block(self) -> "BlockBuilder":
+        """Start an affine loop-nest block (see BlockBuilder)."""
+        self._check_bulk_ok()
+        return BlockBuilder(self)
+
     # ---------------------------------------------------------------- output
     @property
     def edag(self) -> EDag:
         return self.g
+
+
+class SlotRef:
+    """Handle to one slot (one op per loop iteration) of a BlockBuilder."""
+
+    __slots__ = ("pos",)
+
+    def __init__(self, pos: int):
+        self.pos = pos
+
+
+class BlockBuilder:
+    """Affine loop-nest emitter: appends numpy blocks of vertices/edges.
+
+    Describes the *body* of a counted loop as a sequence of slots — one op
+    per iteration each — then emits every iteration at once.  Slot
+    declaration order is within-iteration program order, and iterations are
+    laid out iteration-major, so the emitted vertex/cache-access stream is
+    byte-for-byte the order the equivalent scalar loop would produce:
+
+        b = tr.block()
+        a   = b.load(A.addr_block(i_idx, k_idx))      # A[i,k] per iteration
+        c   = b.load(B.addr_block(k_idx, j_idx))      # B[k,j]
+        m   = b.alu(a, c, label="*")
+        acc = b.scan(m, init=acc0.vid, label="+")     # loop-carried chain
+        out = b.emit()
+        final = Value(value, out.last(acc))
+
+    Dependency operands may be SlotRefs (same iteration), absolute vid
+    arrays (one producer per iteration), a scalar vid (loop-invariant
+    producer), or None (constants).  ``scan`` adds the loop-carried edge
+    from the previous iteration's slot vertex (``init`` feeds iteration 0).
+    RAW edges through memory are derived by ``emit_block``.
+    """
+
+    def __init__(self, tr: Tracer):
+        self.tr = tr
+        self._slots: list = []
+        self._n: Optional[int] = None
+
+    # ------------------------------------------------------------- slots
+    def _check_n(self, n: int) -> None:
+        if self._n is None:
+            self._n = int(n)
+        elif self._n != n:
+            raise ValueError(f"slot length {n} != block length {self._n}")
+
+    def _dep_array(self, dep) -> Optional[np.ndarray]:
+        """Normalize one dependency operand to a (n,) int64 vid array."""
+        if dep is None:
+            return None
+        if isinstance(dep, SlotRef):
+            return None  # resolved at emit time (needs base vid)
+        if np.ndim(dep) == 0:
+            v = -1 if dep is None else int(dep)
+            return np.full(self._n, v, dtype=np.int64)
+        arr = np.asarray(
+            [(-1 if d is None else int(d)) for d in dep]
+            if not isinstance(dep, np.ndarray) else dep, dtype=np.int64)
+        self._check_n(len(arr))
+        return arr
+
+    def _add(self, kind, addr, nbytes, deps, label, scan_init=None):
+        ref = SlotRef(len(self._slots))
+        self._slots.append(dict(kind=kind, addr=addr, nbytes=nbytes,
+                                deps=deps, label=label, scan_init=scan_init))
+        return ref
+
+    def load(self, addrs, nbytes: float = 8.0, deps=(),
+             label: str = "ld") -> SlotRef:
+        addrs = np.asarray(addrs, dtype=np.int64).ravel()
+        self._check_n(len(addrs))
+        return self._add(Tracer.LOAD, addrs, nbytes, list(deps), label)
+
+    def store(self, addrs, value=None, nbytes: float = 8.0,
+              label: str = "st") -> SlotRef:
+        addrs = np.asarray(addrs, dtype=np.int64).ravel()
+        self._check_n(len(addrs))
+        deps = [] if value is None else [value]
+        return self._add(Tracer.STORE, addrs, nbytes, deps, label)
+
+    def alu(self, *deps, label: str = "alu") -> SlotRef:
+        if self._n is None:
+            for d in deps:
+                if d is not None and not isinstance(d, SlotRef) \
+                        and np.ndim(d):
+                    self._check_n(len(d))
+                    break
+        if self._n is None:
+            raise ValueError("block length unknown; add a load/store first "
+                             "or pass an array operand")
+        return self._add(Tracer.ALU, None, 0.0, list(deps), label)
+
+    def scan(self, *deps, init=None, label: str = "alu") -> SlotRef:
+        """ALU slot with a loop-carried dependency on its own previous
+        iteration (accumulator chains); ``init`` is the vid feeding
+        iteration 0 (None for a constant seed)."""
+        ref = self.alu(*deps, label=label)
+        self._slots[ref.pos]["scan_init"] = -1 if init is None else int(init)
+        return ref
+
+    # -------------------------------------------------------------- emit
+    def emit(self) -> "BlockResult":
+        n, S = self._n, len(self._slots)
+        tr = self.tr
+        if not S or not n:
+            return BlockResult(np.zeros(0, dtype=np.int64), 0, 0)
+        base = tr.g.n_vertices
+        k = n * S
+        kind = np.empty(k, dtype=np.int64)
+        addr = np.full(k, -1, dtype=np.int64)
+        nbytes = np.zeros(k, dtype=np.float64)
+        labels: list = [""] * S
+        it = np.arange(n, dtype=np.int64)
+        dep_cols: list = []
+        for s, slot in enumerate(self._slots):
+            kind[s::S] = slot["kind"]
+            if slot["addr"] is not None:
+                addr[s::S] = slot["addr"]
+            nbytes[s::S] = slot["nbytes"]
+            labels[s] = slot["label"]
+            cols = []
+            for dep in slot["deps"]:
+                if dep is None:
+                    continue
+                if isinstance(dep, SlotRef):
+                    if dep.pos >= s:
+                        raise ValueError("slot dependency must reference an "
+                                         "earlier slot")
+                    cols.append(base + it * S + dep.pos)
+                else:
+                    cols.append(self._dep_array(dep))
+            if slot["scan_init"] is not None:
+                prev = base + (it - 1) * S + s
+                prev[0] = slot["scan_init"]
+                cols.append(prev)
+            for c in cols:
+                dep_cols.append((s, c))
+        d_max = max((sum(1 for p, _ in dep_cols if p == s)
+                     for s in range(S)), default=0)
+        deps = np.full((k, d_max), -1, dtype=np.int64)
+        col_fill = [0] * S
+        for s, c in dep_cols:
+            deps[s::S, col_fill[s]] = c
+            col_fill[s] += 1
+        vids = tr.emit_block(kind, addr, nbytes, deps, labels * n)
+        self._slots = []
+        self._n = None
+        return BlockResult(vids, n, S)
+
+
+class BlockResult:
+    """Vertex ids of an emitted BlockBuilder nest, addressable by slot."""
+
+    def __init__(self, vids: np.ndarray, n: int, n_slots: int):
+        self.all_vids = vids
+        self.n = n
+        self.n_slots = n_slots
+
+    def vids(self, ref: SlotRef) -> np.ndarray:
+        """Vertex ids of one slot across all iterations."""
+        return self.all_vids[ref.pos::self.n_slots]
+
+    def last(self, ref: SlotRef) -> Optional[int]:
+        """Vertex id of the slot in the final iteration (scan results)."""
+        v = self.vids(ref)
+        return int(v[-1]) if len(v) else None

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import auto_axis_types_kwargs
 from repro.train.compression import (compressed_psum_local, dequantize_int8,
                                      init_error_state, make_dp_train_step,
                                      quantize_int8)
@@ -36,7 +37,7 @@ def test_error_feedback_accumulates():
 
 def _mesh():
     return jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+                         **auto_axis_types_kwargs(1))
 
 
 def test_dp_train_step_compressed_matches_uncompressed():

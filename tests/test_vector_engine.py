@@ -1,0 +1,214 @@
+"""Vectorized eDAG engine vs the retained scalar references.
+
+Property tests assert that the level-synchronous ``_accumulate``, the
+batched multi-cost pass, ``mem_layers`` and the sweep APIs match the scalar
+reference kernel *exactly* on random topological DAGs; that the bulk tracing
+ports of PolyBench / HPCG / LULESH produce eDAGs byte-for-byte identical to
+the per-element reference tracers (including cache classification); and
+that the batched cache lookup keeps the cumulative hit/miss counters
+consistent with the scalar path.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.apps import hpcg, lulesh, polybench, reference
+from repro.core import (EDag, SetAssociativeCache, Tracer, cost_matrix,
+                        make_cache, latency_sweep, non_memory_cost, simulate,
+                        t_inf_sweep, total_cost_bounds)
+
+
+@st.composite
+def random_dags(draw):
+    n = draw(st.integers(3, 80))
+    g = EDag()
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    p = draw(st.floats(0.05, 0.6))
+    for i in range(n):
+        is_mem = bool(rng.random() < 0.5)
+        g.add_vertex(cost=float(rng.integers(1, 5)), is_mem=is_mem,
+                     nbytes=8.0 * is_mem)
+        for j in range(i):
+            if rng.random() < p / (i - j):
+                g.add_edge(j, i)
+    return g
+
+
+# ------------------------------------------------- engine vs scalar reference
+
+@given(random_dags())
+def test_accumulate_matches_scalar(g):
+    g._finalize()
+    rng = np.random.default_rng(g.n_vertices)
+    for base in (g.cost, g.is_mem.astype(np.float64), np.ones(g.n_vertices),
+                 rng.standard_normal(g.n_vertices)):   # incl. negative costs
+        assert np.array_equal(g._accumulate(base), g._accumulate_scalar(base))
+
+
+@given(random_dags())
+def test_batch_accumulate_matches_scalar(g):
+    g._finalize()
+    alphas = np.array([1.0, 50.0, 200.0, 333.0])
+    costs = cost_matrix(g, alphas)
+    rng = np.random.default_rng(g.n_edges)
+    costs = np.vstack([costs,                      # incl. negative costs
+                       rng.standard_normal((2, g.n_vertices))])
+    F = g.finish_times_batch(costs)
+    for row, c in zip(F, costs):
+        assert np.array_equal(row, g._accumulate_scalar(c))
+
+
+@given(random_dags())
+def test_mem_layers_matches_scalar(g):
+    lay = g.mem_layers()
+    level_ref = g._accumulate_scalar(
+        g.is_mem.astype(np.float64)).astype(np.int64)
+    assert np.array_equal(lay.level, level_ref)
+    mem_levels = level_ref[g.is_mem]
+    assert lay.D == (int(mem_levels.max()) if mem_levels.size else 0)
+    assert lay.W == int(g.is_mem.sum())
+    assert lay.layer_sizes.sum() == lay.W
+
+
+@given(random_dags())
+def test_t_inf_sweep_matches_pointwise(g):
+    alphas = [10.0, 100.0, 250.0]
+    sweep = t_inf_sweep(g, alphas)
+    for a, t in zip(alphas, sweep):
+        c = np.where(g.is_mem, a, 1.0)
+        assert t == pytest.approx(float(g._accumulate_scalar(c).max()))
+
+
+@given(random_dags(), st.integers(1, 8), st.floats(1.0, 300.0))
+def test_simulate_within_eq2_bounds(g, m, alpha):
+    """The reusable-CSR simulator still falls inside the Eq-2 bounds."""
+    g._finalize()
+    g2 = EDag()
+    for i in range(g.n_vertices):
+        g2.add_vertex(is_mem=bool(g.is_mem[i]), nbytes=float(g.nbytes[i]))
+    g2.add_edge_block(g.src, g.dst)
+    lay = g2.mem_layers()
+    C = non_memory_cost(g2)
+    _, hi = total_cost_bounds(lay.W, lay.D, m, alpha, C)
+    t = simulate(g2, m=m, alpha=alpha)
+    assert t <= hi + 1e-6
+    # and the sweep is just the pointwise simulator
+    sweep = latency_sweep(g2, [alpha], m=m)
+    assert sweep[0] == pytest.approx(t)
+
+
+def test_levels_topological_invariant():
+    g = EDag()
+    for i in range(6):
+        g.add_vertex()
+    for u, v in [(0, 2), (1, 2), (2, 3), (1, 4), (3, 5), (4, 5)]:
+        g.add_edge(u, v)
+    g._finalize()
+    assert (g.level[g.src] < g.level[g.dst]).all()
+
+
+# -------------------------------------------------- critical-path regression
+
+def test_critical_path_diamond():
+    """Diamond DAG: the path must follow the heavy branch and terminate
+    cleanly at the source (regression for the dead break guard)."""
+    g = EDag()
+    a = g.add_vertex(cost=1.0)
+    b = g.add_vertex(cost=5.0)   # heavy branch
+    c = g.add_vertex(cost=2.0)
+    d = g.add_vertex(cost=1.0)
+    g.add_edge(a, b)
+    g.add_edge(a, c)
+    g.add_edge(b, d)
+    g.add_edge(c, d)
+    path = g.critical_path()
+    assert path == [a, b, d]
+    costs = np.asarray([1.0, 5.0, 1.0, 1.0])
+    assert sum(costs[v] for v in path) == pytest.approx(g.t_inf())
+
+
+@given(random_dags())
+def test_critical_path_cost_equals_t_inf(g):
+    path = g.critical_path()
+    g._finalize()
+    assert sum(g.cost[v] for v in path) == pytest.approx(g.t_inf())
+    # consecutive path vertices are actual edges
+    edges = set(zip(g.src.tolist(), g.dst.tolist()))
+    for u, v in zip(path, path[1:]):
+        assert (u, v) in edges
+
+
+# ------------------------------------------------------- batched cache model
+
+@given(st.lists(st.integers(0, 1 << 16), min_size=1, max_size=400))
+def test_cache_batch_matches_scalar(addrs):
+    c_scalar = SetAssociativeCache(1024, 64, 2)
+    c_batch = SetAssociativeCache(1024, 64, 2)
+    got_scalar = [c_scalar.access(a) for a in addrs]
+    got_batch = c_batch.access_block(np.asarray(addrs))
+    assert got_batch.tolist() == got_scalar
+    assert (c_batch.hits, c_batch.misses) == (c_scalar.hits, c_scalar.misses)
+
+
+def test_cache_batch_interleaves_with_scalar():
+    """Counters stay consistent when scalar and batch calls alternate on a
+    shared address stream."""
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 1 << 14, size=300)
+    c_ref = SetAssociativeCache(2048, 64, 2)
+    c_mix = SetAssociativeCache(2048, 64, 2)
+    ref = [c_ref.access(int(a)) for a in addrs]
+    got = []
+    i = 0
+    for chunk in (50, 1, 120, 29):
+        got.extend(c_mix.access_block(addrs[i:i + chunk]).tolist())
+        i += chunk
+        if i < len(addrs):
+            got.append(c_mix.access(int(addrs[i])))
+            i += 1
+    got.extend(c_mix.access_block(addrs[i:]).tolist())
+    assert got == ref
+    assert (c_mix.hits, c_mix.misses) == (c_ref.hits, c_ref.misses)
+
+
+# ------------------------------------- bulk tracing ports vs reference paths
+
+def _graph_sig(g):
+    g._finalize()
+    return (g.n_vertices, g.is_mem.tobytes(), g.nbytes.tobytes(),
+            sorted(zip(g.src.tolist(), g.dst.tolist())))
+
+
+@pytest.mark.parametrize("name", sorted(polybench.SCALAR_KERNELS))
+def test_polybench_block_port_exact(name):
+    for cache_size in (0, 1024):
+        g_blk = polybench.trace_kernel(name, 6, cache=make_cache(cache_size))
+        tr = Tracer(cache=make_cache(cache_size))
+        reference.REF_POLYBENCH_KERNELS[name](tr, 6, np.random.default_rng(0))
+        assert _graph_sig(g_blk) == _graph_sig(tr.edag), name
+
+
+def test_hpcg_block_port_exact():
+    for cache_size in (0, 32 * 1024):
+        g_blk, res_blk = hpcg.trace_cg(n=4, iters=3,
+                                       cache=make_cache(cache_size))
+        g_ref, res_ref = reference.trace_cg_ref(n=4, iters=3,
+                                               cache=make_cache(cache_size))
+        assert _graph_sig(g_blk) == _graph_sig(g_ref)
+        assert np.allclose(res_blk, res_ref, rtol=1e-8)
+
+
+def test_lulesh_block_port_exact():
+    for cache_size in (0, 32 * 1024):
+        g_blk = lulesh.trace_step(ne=3, iters=2, cache=make_cache(cache_size))
+        g_ref = reference.trace_step_ref(ne=3, iters=2,
+                                        cache=make_cache(cache_size))
+        assert _graph_sig(g_blk) == _graph_sig(g_ref)
+
+
+def test_trace_kernel_reference_fallback_modes():
+    """max_regs / false_deps route through the reference scalar path."""
+    g = polybench.trace_kernel("trmm", 6, max_regs=4)
+    assert g.n_vertices > 0
+    g2 = polybench.trace_kernel("gemm", 5, false_deps=True)
+    assert g2.n_vertices > 0
