@@ -13,23 +13,25 @@ from .common import spearman
 from repro.apps import polybench
 from repro.configs.paper_suite import (ANALYSIS, POLYBENCH_N,
                                         SIM_COMPUTE_SLOTS)
-from repro.core import (lambda_abs, lambda_rel, latency_sweep,
-                        non_memory_cost)
+from repro.core import CostModelParams, lambda_rel, sweep_report
 
 
 def run(N: int = POLYBENCH_N, full_sweep: bool = False, m: int = 4):
     alphas = np.asarray(ANALYSIS.alpha_sweep_full if full_sweep
                         else ANALYSIS.alpha_sweep, float)
     names = polybench.PAPER_15
+    params = CostModelParams(m=m)
     rel_slow, Lam, wc = {}, {}, {}
     for name in names:
         g = polybench.trace_kernel(name, N)
-        lay = g.mem_layers()
-        C = non_memory_cost(g)
-        lam = lambda_abs(lay.W, lay.D, m)
-        Lam[name] = lambda_rel(lam, ANALYSIS.alpha0, C)
-        wc[name] = lay.W / max(C, 1)
-        times = latency_sweep(g, alphas, m=m, compute_slots=SIM_COMPUTE_SLOTS)
+        # one batched sweep_report pass per kernel: the analytic metrics
+        # and the simulated ground-truth sweep share the cached CSR
+        rep = sweep_report(g, alphas, params=params, simulate_points=True,
+                           compute_slots=SIM_COMPUTE_SLOTS)
+        C = rep["C"]
+        Lam[name] = lambda_rel(rep["lam"], ANALYSIS.alpha0, C)
+        wc[name] = rep["W"] / max(C, 1)
+        times = rep["simulated"]
         base = times[0]
         rel_slow[name] = float(np.mean(times / base - 1.0))
     truth = sorted(names, key=lambda n: -rel_slow[n])

@@ -4,13 +4,23 @@ The paper's insight: data-oblivious kernels have constant D under idealized
 (unbounded-register) tracing; spill-afflicted kernels (their trmm) grow
 linearly.  Our tracer has unlimited virtual registers (the paper's §7 wish),
 so data-oblivious kernels all show constant depth; the spilled-accumulator
-trmm variant reproduces the paper's linear-growth case explicitly.
+trmm variant reproduces the paper's linear-growth case explicitly, and the
+``trmm@regsK`` rows re-run the same block-emission kernel under a K-entry
+bounded register file (§5.1), where spill round-trips re-grow the depth the
+compiler's register pressure would cause.
 """
 from __future__ import annotations
 
 from repro.apps import polybench
 
 KERNELS = polybench.PAPER_15 + ["trmm_spill", "cholesky", "durbin"]
+# §5.1 register-pressure study: kernel traced through the *vectorized*
+# tracer with a bounded register file (FIFO/Chaitin-style spilling).  Three
+# registers cannot hold trmm's 4-value loop body, so the accumulator
+# round-trips through memory exactly like the paper's compiler-spilled
+# binary (depth matches trmm_spill); eight registers fit it and recover
+# the idealized constant depth.
+REG_PRESSURE = (("trmm", 3), ("trmm", 8))
 SIZES = (6, 10, 14, 18)
 
 
@@ -19,6 +29,10 @@ def run(sizes=SIZES):
     for name in KERNELS:
         out[name] = [polybench.trace_kernel(name, N).mem_layers().D
                      for N in sizes]
+    for name, regs in REG_PRESSURE:
+        out[f"{name}@regs{regs}"] = [
+            polybench.trace_kernel(name, N, max_regs=regs).mem_layers().D
+            for N in sizes]
     return out
 
 

@@ -8,10 +8,16 @@ Measures, at paper-size PolyBench traces (plus HPCG for tracing):
 * **accumulate**  longest-path edges/sec — level-synchronous segmented
                   reductions vs the per-edge Python loop;
 * **sweep**       latency-sweep points/sec — one batched multi-cost level
-                  pass vs one scalar accumulate per point.
+                  pass vs one scalar accumulate per point;
+* **chunks**      the cache-chunk crossover behind the trace-size-aware
+                  ``t_inf_sweep_mem`` default;
+* **sim**         §4 simulator sweeps — the batched schedule-replay engine
+                  vs the retained per-point heapq reference (written to
+                  ``BENCH_sim.json``; acceptance floor 10x at paper sizes).
 
-Writes ``BENCH_core.json`` next to the repo root and prints one CSV row per
-measurement.  ``--smoke`` shrinks sizes for CI wall-clock.
+Writes ``BENCH_core.json`` / ``BENCH_sim.json`` next to the repo root and
+prints one CSV row per measurement.  ``--smoke`` shrinks sizes for CI
+wall-clock.
 
 Usage: PYTHONPATH=src python -m benchmarks.perf_core [--smoke]
 """
@@ -24,7 +30,8 @@ import time
 import numpy as np
 
 from repro.apps import hpcg, polybench, reference
-from repro.core import Tracer, cost_matrix
+from repro.configs.paper_suite import SIM_COMPUTE_SLOTS
+from repro.core import Tracer, cost_matrix, latency_sweep
 
 
 def _best_of(fn, repeats: int = 5) -> float:
@@ -34,6 +41,16 @@ def _best_of(fn, repeats: int = 5) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _timed_best(fn, repeats: int):
+    """(best wall-clock, last result) over ``repeats`` runs."""
+    best, res = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, res
 
 
 def bench_tracing(N: int, repeats: int) -> dict:
@@ -98,6 +115,54 @@ def bench_sweep(N: int, n_points: int, repeats: int) -> dict:
                 speedup=t_ref / t_vec)
 
 
+def bench_sweep_chunks(N: int, n_points: int, repeats: int) -> list:
+    """Crossover study for the trace-size-aware sweep chunking: times the
+    batched span sweep at fixed chunk sizes vs the auto default."""
+    g = polybench.trace_kernel("gemm", N)
+    g._finalize()
+    alphas = np.linspace(50, 300, n_points)
+    g.t_inf_sweep_mem(alphas[:2])               # warm
+    want = g.t_inf_sweep_mem(alphas, chunk=1)
+    rows = []
+    for chunk in (6, 12, 24, 48, None):
+        t = _best_of(lambda: g.t_inf_sweep_mem(alphas, chunk=chunk), repeats)
+        assert np.array_equal(g.t_inf_sweep_mem(alphas, chunk=chunk), want)
+        rows.append(dict(name=f"sweep_chunk_gemm_N{N}x{n_points}",
+                         chunk="auto" if chunk is None else chunk,
+                         pps=n_points / t, seconds=t))
+    return rows
+
+
+def bench_sim(names, N: int, n_points: int, repeats: int,
+              m: int = 4, compute_slots: int = SIM_COMPUTE_SLOTS) -> dict:
+    """§4 simulator sweep: batched schedule replay vs the retained heapq
+    reference, per kernel, with bit-identical makespans asserted."""
+    alphas = np.linspace(50.0, 300.0, n_points)
+    rows = []
+    tot_b = tot_r = 0.0
+    for name in names:
+        g = polybench.trace_kernel(name, N)
+        g._finalize()
+        g._sim_lists()
+        latency_sweep(g, alphas[:3], m=m, compute_slots=compute_slots)  # warm
+
+        t_b, got = _timed_best(lambda: latency_sweep(
+            g, alphas, m=m, compute_slots=compute_slots), repeats)
+        t_r, want = _timed_best(lambda: latency_sweep(
+            g, alphas, m=m, compute_slots=compute_slots, batch=False),
+            repeats)
+        assert np.array_equal(got, want), f"batched sim diverged on {name}"
+        tot_b += t_b
+        tot_r += t_r
+        rows.append(dict(name=f"sim_{name}_N{N}x{n_points}",
+                         n_vertices=g.n_vertices, n_points=n_points,
+                         batch_s=t_b, ref_s=t_r, speedup=t_r / t_b))
+    return dict(kernels=rows, total_batch_s=tot_b, total_ref_s=tot_r,
+                total_speedup=tot_r / tot_b,
+                config=dict(N=N, n_points=n_points, m=m,
+                            compute_slots=compute_slots))
+
+
 def run(smoke: bool = False) -> dict:
     repeats = 2 if smoke else 5
     N = 12 if smoke else 32
@@ -106,8 +171,18 @@ def run(smoke: bool = False) -> dict:
                  bench_tracing_hpcg(4 if smoke else 8, 2, repeats)],
         accumulate=[bench_accumulate(N, repeats)],
         sweep=[bench_sweep(N, 11 if smoke else 51, repeats)],
+        sweep_chunks=bench_sweep_chunks(N, 11 if smoke else 51, repeats),
     )
     return out
+
+
+def run_sim(smoke: bool = False) -> dict:
+    if smoke:
+        # big enough that the one recording run amortizes (the gate floor
+        # is loose, but a return to per-point simulation must still trip it)
+        return bench_sim(("gemm", "mvt", "lu"), N=14, n_points=21,
+                         repeats=2)
+    return bench_sim(polybench.PAPER_15, N=20, n_points=51, repeats=2)
 
 
 def main() -> None:
@@ -115,6 +190,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI wall-clock")
     ap.add_argument("--out", default="BENCH_core.json")
+    ap.add_argument("--out-sim", default="BENCH_sim.json")
     args = ap.parse_args()
     res = run(smoke=args.smoke)
     print("name,metric,vectorized,scalar,speedup")
@@ -125,6 +201,8 @@ def main() -> None:
                                                   row.get(f"batch_{key}")))
             print(f"{row['name']},{group}/{key},{vec:.0f},"
                   f"{row[f'scalar_{key}']:.0f},{row['speedup']:.1f}x")
+    for row in res["sweep_chunks"]:
+        print(f"{row['name']},chunk={row['chunk']},{row['pps']:.0f},,")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"# wrote {args.out}")
@@ -132,6 +210,17 @@ def main() -> None:
     swp = res["sweep"][0]["speedup"]
     print(f"# accumulate speedup {core:.1f}x, sweep speedup {swp:.1f}x "
           f"(acceptance floor: 10x)")
+
+    sim = run_sim(smoke=args.smoke)
+    for row in sim["kernels"]:
+        print(f"{row['name']},sim/sweep,{row['batch_s']:.3f}s,"
+              f"{row['ref_s']:.3f}s,{row['speedup']:.1f}x")
+    with open(args.out_sim, "w") as f:
+        json.dump(sim, f, indent=2)
+    print(f"# wrote {args.out_sim}")
+    print(f"# simulator sweep speedup {sim['total_speedup']:.1f}x over "
+          f"{len(sim['kernels'])} kernels "
+          "(acceptance floor: 10x at paper sizes)")
 
 
 if __name__ == "__main__":

@@ -567,16 +567,15 @@ def trace_kernel(name: str, N: int, cache=None, max_regs=None,
                  false_deps: bool = False, seed: int = 0):
     """Run one kernel under the tracer; returns the finalized eDAG.
 
-    Uses the bulk block-emission kernels; tracer modes the bulk API does not
-    model (bounded register files, false-dependency tracking) run the
-    retained per-element reference implementations instead."""
+    Always uses the bulk block-emission kernels: under ``max_regs`` /
+    ``false_deps`` the blocks replay through the scalar emitters with the
+    §3.2.1 bounded-register-file spill model applied op by op, so the §5.1
+    register-pressure studies produce eDAGs byte-identical to the retained
+    per-element reference implementations (tested in
+    tests/test_vector_engine.py)."""
     rng = np.random.default_rng(seed)
     tr = Tracer(cache=cache, max_regs=max_regs, false_deps=false_deps)
-    if max_regs is not None or false_deps:
-        from .reference import REF_POLYBENCH_KERNELS
-        REF_POLYBENCH_KERNELS[name](tr, N, rng)
-    else:
-        SCALAR_KERNELS[name](tr, N, rng)
+    SCALAR_KERNELS[name](tr, N, rng)
     return tr.edag
 
 

@@ -14,7 +14,9 @@ from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
 from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
                       bandwidth_sweep, cost_matrix, data_movement_over_time,
                       cost_vector, report, Report, sweep_report, t_inf_sweep)
-from .scheduler import simulate, latency_sweep
+from .backend import LevelCSR, level_accumulate, select_backend
+from .scheduler import (simulate, simulate_reference, simulate_batch,
+                        latency_sweep)
 from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
                   hlo_flops_estimate, hlo_hbm_bytes_estimate,
                   axis_signature_table)
@@ -29,7 +31,9 @@ __all__ = [
     "non_memory_cost", "analyze", "lambda_abs", "lambda_rel",
     "bandwidth_utilization", "bandwidth_sweep", "cost_matrix",
     "data_movement_over_time", "cost_vector", "report", "Report",
-    "sweep_report", "t_inf_sweep", "simulate", "latency_sweep", "parse_hlo",
+    "sweep_report", "t_inf_sweep", "simulate", "simulate_reference",
+    "simulate_batch", "latency_sweep", "LevelCSR", "level_accumulate",
+    "select_backend", "parse_hlo",
     "analyze_collectives", "shape_bytes", "hlo_flops_estimate",
     "hlo_hbm_bytes_estimate", "axis_signature_table", "edag_from_fn",
     "edag_from_jaxpr", "collective_sensitivity", "AxisSensitivity",

@@ -1,0 +1,353 @@
+"""Numeric backends for the level-synchronous (max,+) kernels.
+
+One kernel powers both halves of the engine: the batched longest-path
+recurrence ``F[v] = base[v] + max(F[u] for u in preds(v))`` evaluated one
+topological level at a time over a whole matrix of cost vectors.  The
+analytic sweeps call it through ``EDag._accumulate_batch_nk``; the batched
+§4 simulator (``scheduler.simulate_batch``) calls it over the
+*order-augmented* eDAG, where each vertex may carry one extra "queue
+predecessor" (the vertex issued ``m`` slots earlier on the same resource)
+— the slot-update half of the discrete-event recurrence
+``F(v) = max(R(v), F(qpred)) + service``.
+
+Two implementations are provided:
+
+* ``numpy`` — segmented maxima via offset stepping / ``maximum.reduceat``;
+  always available, the default on CPU hosts.
+* ``jax``   — a ``jax.jit``-compiled level loop whose per-level
+  segmented-max/slot-update step is a pallas kernel (interpreted on CPU,
+  compiled on TPU/GPU).  Auto-selected when jax sees an accelerator;
+  opt in/out explicitly with ``EDAN_BACKEND=numpy|jax``.
+
+Both backends implement the same (max, +) recurrence.  max is exact and
+every ``+ service`` is a single IEEE addition, so results are reproducible
+bit-for-bit for a given dtype on either backend.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+_BACKENDS = ("numpy", "jax")
+_AUTO_BACKEND: Optional[str] = None
+
+
+def select_backend(override: Optional[str] = None) -> str:
+    """Pick the kernel backend: explicit arg > $EDAN_BACKEND > auto.
+
+    Auto-selection returns ``jax`` only when jax is importable *and* sees a
+    non-CPU device (the numpy kernels win on CPU hosts, where per-level
+    dispatch, not FLOPs, dominates).  The device probe is memoized — jax
+    enumerates its backends lazily and the first call is not cheap."""
+    global _AUTO_BACKEND
+    choice = override or os.environ.get("EDAN_BACKEND", "").strip().lower()
+    if choice:
+        if choice not in _BACKENDS:
+            raise ValueError(f"unknown backend {choice!r}; pick from "
+                             f"{_BACKENDS}")
+        return choice
+    if _AUTO_BACKEND is None:
+        _AUTO_BACKEND = "numpy"
+        try:
+            import jax
+            if any(d.platform != "cpu" for d in jax.devices()):
+                _AUTO_BACKEND = "jax"
+        except Exception:
+            pass
+    return _AUTO_BACKEND
+
+
+@dataclass
+class LevelCSR:
+    """Edge partition of a DAG by destination topological level.
+
+    ``esrc`` holds edge sources sorted by (level(dst), dst); ``run_dst`` /
+    ``run_starts`` / ``run_lens`` describe the runs of equal dst inside that
+    order; ``run_ptr`` / ``elevel_ptr`` bound the runs / edges per level;
+    ``run_maxlen`` is the largest run length per level (bounds the offset-
+    stepping segmented max).  ``qpred[v]`` is an optional extra predecessor
+    (slot chain) given as a row index into the cost matrix; vertices
+    without one point at the zero sentinel row ``n`` (callers using qpred
+    pass an (n+1, k) matrix whose last row stays 0).  ``qonly_ptr`` /
+    ``qonly_dst`` partition by level the vertices whose only predecessor
+    is their queue predecessor.
+    """
+
+    n: int
+    n_levels: int
+    esrc: np.ndarray
+    run_dst: np.ndarray
+    run_starts: np.ndarray
+    run_lens: np.ndarray
+    run_ptr: np.ndarray
+    elevel_ptr: np.ndarray
+    run_maxlen: Optional[list] = None
+    qpred: Optional[np.ndarray] = None
+    qonly_ptr: Optional[np.ndarray] = None
+    qonly_dst: Optional[np.ndarray] = None
+    jax_padded: Optional[tuple] = None      # memoized (gather, dsts) tensors
+
+    def level_maxlens(self) -> list:
+        if self.run_maxlen is None:
+            if len(self.run_lens) and self.n_levels:
+                idx = np.minimum(self.run_ptr[:-1], len(self.run_lens) - 1)
+                mx = np.maximum.reduceat(self.run_lens, idx)
+                mx[np.diff(self.run_ptr) == 0] = 0
+                self.run_maxlen = mx.tolist()
+            else:
+                self.run_maxlen = [0] * self.n_levels
+        return self.run_maxlen
+
+
+def build_level_partition(src: np.ndarray, dst: np.ndarray,
+                          level: np.ndarray, n: int) -> LevelCSR:
+    """Partition edges by destination level (the _finalize invariant)."""
+    n_levels = int(level.max()) + 1 if n else 0
+    if len(dst):
+        elevel = level[dst]
+        order = np.lexsort((dst, elevel))
+        esrc = src[order]
+        edst = dst[order]
+        counts = np.bincount(elevel, minlength=n_levels)
+        elevel_ptr = np.concatenate(([0], np.cumsum(counts))).astype(np.int64)
+        run_mask = np.empty(len(dst), dtype=bool)
+        run_mask[0] = True
+        np.not_equal(edst[1:], edst[:-1], out=run_mask[1:])
+        run_starts = np.nonzero(run_mask)[0]
+        run_dst = edst[run_starts]
+        run_lens = np.diff(np.append(run_starts, len(dst)))
+        rcounts = np.bincount(level[run_dst], minlength=n_levels)
+        run_ptr = np.concatenate(([0], np.cumsum(rcounts))).astype(np.int64)
+    else:
+        esrc = np.zeros(0, dtype=np.int64)
+        edst = esrc
+        elevel_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int64)
+        run_starts = np.zeros(0, dtype=np.int64)
+        run_dst = np.zeros(0, dtype=np.int64)
+        run_lens = np.zeros(0, dtype=np.int64)
+        run_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int64)
+    return LevelCSR(n=n, n_levels=n_levels, esrc=esrc, run_dst=run_dst,
+                    run_starts=run_starts, run_lens=run_lens, run_ptr=run_ptr,
+                    elevel_ptr=elevel_ptr)
+
+
+def levelize(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Topological levels of a DAG whose edges satisfy src < dst.
+
+    Runs the per-edge scalar recurrence over edges sorted by destination —
+    a strict left-fold that is O(E) regardless of depth, which beats the
+    level-synchronous Kahn sweep on the deep, skinny graphs the simulator
+    replay builds (slot chains make depth ~ W/m)."""
+    level = [0] * n
+    if len(dst):
+        order = np.argsort(dst, kind="stable")
+        for s, d in zip(src[order].tolist(), dst[order].tolist()):
+            v = level[s] + 1
+            if v > level[d]:
+                level[d] = v
+    return np.asarray(level, dtype=np.int64)
+
+
+# --------------------------------------------------------------------- numpy
+
+def _accumulate_numpy(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
+                      R_out: Optional[np.ndarray] = None) -> np.ndarray:
+    """In-place level loop over an (n, k) matrix (F holds base on entry).
+
+    With ``lv.qpred`` set, each destination additionally maxes with its
+    queue predecessor's finish (the slot-update; missing predecessors
+    point at the zero sentinel row, so no masking is needed).  ``R_out``,
+    if given, receives the predecessor-only maxima (the simulator's ready
+    times).  Loop bookkeeping stays in plain Python ints/lists — with the
+    slot chains of the batched simulator the level count approaches W/m,
+    so per-level dispatch is the cost that matters.
+    """
+    rptr = lv.run_ptr.tolist()
+    rdst, rstart, rlens, src = lv.run_dst, lv.run_starts, lv.run_lens, \
+        lv.esrc
+    maxlens = lv.level_maxlens()
+    qp = lv.qpred
+    qptr = lv.qonly_ptr.tolist() if lv.qonly_ptr is not None else None
+    for lvl in range(1, lv.n_levels):
+        r0, r1 = rptr[lvl], rptr[lvl + 1]
+        if r0 != r1:
+            d = rdst[r0:r1]
+            starts = rstart[r0:r1]
+            # segmented max by offset stepping: in-degrees in real traces
+            # are tiny, so a couple of vectorized maximum passes finish
+            # every run (faster than np.maximum.reduceat over 2D)
+            segmax = F[src[starts]]
+            for off in range(1, maxlens[lvl]):
+                lens = rlens[r0:r1]
+                live = lens > off
+                if not live.any():
+                    break
+                segmax[live] = np.maximum(segmax[live],
+                                          F[src[starts[live] + off]])
+            if R_out is not None:
+                R_out[d] = segmax
+            if qp is not None:
+                segmax = np.maximum(segmax, F[qp[d]])
+            if clamp:
+                np.maximum(segmax, 0.0, out=segmax)
+            segmax += F[d]
+            F[d] = segmax
+        if qptr is not None:
+            q0, q1 = qptr[lvl], qptr[lvl + 1]
+            if q0 != q1:
+                d = lv.qonly_dst[q0:q1]
+                Fq = F[qp[d]]
+                if clamp:
+                    np.maximum(Fq, 0.0, out=Fq)
+                F[d] += Fq
+    return F
+
+
+# ----------------------------------------------------------------------- jax
+
+_JAX_CACHE: dict = {}
+
+
+def _jax_padded(lv: LevelCSR):
+    """Pad the per-level runs to rectangles for the jitted level loop.
+
+    Queue-only vertices (no DAG predecessor, just a slot chain) become
+    zero-width runs — their reduce sees only the folded-in qpred entry.
+    The padded tensors depend only on the partition, so they are memoized
+    on the LevelCSR (chunked sweeps call the kernel several times)."""
+    if lv.jax_padded is not None:
+        return lv.jax_padded
+    L = lv.n_levels
+    rcounts = np.diff(lv.run_ptr)
+    qcounts = (np.diff(lv.qonly_ptr) if lv.qonly_ptr is not None
+               else np.zeros(max(L, 1), dtype=np.int64))
+    Rmax = int((rcounts + qcounts[:len(rcounts)]).max()) if len(rcounts) \
+        else 0
+    Dmax = int(lv.run_lens.max()) if len(lv.run_lens) else 1
+    gather = np.full((L, Rmax, Dmax), -1, dtype=np.int32)
+    dsts = np.full((L, Rmax), -1, dtype=np.int32)
+    for lvl in range(1, L):
+        r0, r1 = lv.run_ptr[lvl], lv.run_ptr[lvl + 1]
+        for j in range(r1 - r0):
+            s = lv.run_starts[r0 + j]
+            ln = lv.run_lens[r0 + j]
+            gather[lvl, j, :ln] = lv.esrc[s:s + ln]
+            dsts[lvl, j] = lv.run_dst[r0 + j]
+        if lv.qonly_ptr is not None:
+            q0, q1 = lv.qonly_ptr[lvl], lv.qonly_ptr[lvl + 1]
+            dsts[lvl, r1 - r0:r1 - r0 + (q1 - q0)] = lv.qonly_dst[q0:q1]
+    lv.jax_padded = (gather, dsts)
+    return lv.jax_padded
+
+
+def _pallas_level_step(seg, mask, base, clamp: bool):
+    """Segmented-max/slot-update inner step as a pallas kernel.
+
+    ``seg``  (R, D, k) gathered predecessor finish rows (masked invalid),
+    ``mask`` (R, D) validity, ``base`` (R, k) the dst base costs (already
+    maxed with the queue predecessor where one exists).  Returns (R, k)
+    new finish rows.  Interpreted on CPU; compiled on accelerators.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(seg_ref, mask_ref, base_ref, out_ref):
+        s = seg_ref[:]                          # (R, D, k)
+        valid = mask_ref[:][:, :, None]
+        neg = jnp.full_like(s, -jnp.inf)
+        red = jnp.max(jnp.where(valid, s, neg), axis=1)
+        red = jnp.where(jnp.any(valid, axis=1), red, 0.0)
+        if clamp:
+            red = jnp.maximum(red, 0.0)
+        out_ref[:] = red + base_ref[:]
+
+    interpret = jax.default_backend() == "cpu"
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        interpret=interpret,
+    )(seg, mask, base)
+
+
+def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
+                    R_out: Optional[np.ndarray] = None) -> np.ndarray:
+    """jax backend: jit-compiled level loop + pallas inner step.
+
+    Computes the same (max,+) recurrence as the numpy kernel in the input
+    dtype.  Queue predecessors are folded into the per-level base before
+    the pallas step (the slot-update).  ``R_out`` is not supported here —
+    the simulator verification path always runs on the numpy backend.
+    """
+    if R_out is not None:
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    import jax
+    import jax.numpy as jnp
+
+    if F.dtype == np.float64 and not jax.config.jax_enable_x64:
+        # without the x64 flag jax would silently truncate to float32 and
+        # hand back drifted values in a float64 array; exactness beats
+        # device execution, so keep such inputs on the numpy kernel
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+
+    gather, dsts = _jax_padded(lv)
+    has_q = lv.qpred is not None
+    qp = (lv.qpred if has_q else np.zeros(1, dtype=np.int64)).astype(np.int32)
+    # the traced function depends only on these flags — the graph arrays are
+    # arguments, so jax.jit re-specializes per shape on its own
+    key = (has_q, clamp)
+
+    def run(Fin, gat, dst_pad, qpred):
+        L = gat.shape[0]
+
+        def body(lvl, Fcur):
+            g = gat[lvl]                        # (R, D)
+            d = dst_pad[lvl]                    # (R,)
+            seg = Fcur[jnp.maximum(g, 0)]       # (R, D, k)
+            mask = g >= 0
+            dc = jnp.maximum(d, 0)
+            if has_q:
+                # fold the queue predecessor (slot chain) in as one more
+                # segment entry; missing predecessors hit the zero
+                # sentinel row, i.e. a slot that is free at t=0
+                fq = Fcur[qpred[dc]]
+                seg = jnp.concatenate([seg, fq[:, None, :]], axis=1)
+                mask = jnp.concatenate(
+                    [mask, jnp.ones((mask.shape[0], 1), bool)], axis=1)
+            new = _pallas_level_step(seg, mask, Fcur[dc], clamp)
+            keep = (d >= 0)[:, None]
+            return Fcur.at[dc].set(jnp.where(keep, new, Fcur[dc]))
+
+        return jax.lax.fori_loop(1, L, body, Fin)
+
+    fn = _JAX_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(run)
+        _JAX_CACHE[key] = fn
+    out = fn(jnp.asarray(F), jnp.asarray(gather), jnp.asarray(dsts),
+             jnp.asarray(qp))
+    F[:] = np.asarray(out)
+    return F
+
+
+# ------------------------------------------------------------------ dispatch
+
+def level_accumulate(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
+                     R_out: Optional[np.ndarray] = None,
+                     backend: Optional[str] = None) -> np.ndarray:
+    """Run the batched (max,+) level recurrence in-place on ``F``.
+
+    ``F`` enters holding the per-vertex base costs ((n,) or (n, k)) and
+    leaves holding the finish times."""
+    b = select_backend(backend)
+    if b == "jax":
+        try:
+            return _accumulate_jax(lv, F, clamp=clamp, R_out=R_out)
+        except Exception:
+            # accelerator path is best-effort: never fail an analysis over
+            # a backend issue, fall back to the reference numpy kernel
+            return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)

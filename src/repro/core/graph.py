@@ -27,6 +27,25 @@ from typing import Optional, Sequence
 # substitution); fall back to the scalar kernel there.
 _VECTOR_MIN_EDGES_PER_LEVEL = 4.0
 
+# Cache budget for the (n_vertices, chunk) working set of batched latency
+# sweeps; the auto chunk keeps roughly this many bytes live per pass.  The
+# crossover bench (benchmarks/perf_core.py::bench_sweep_chunks, gemm N=32 /
+# 139k vertices) peaks at chunks of 12-24 (~13-26 MB working set) and falls
+# off both at 6 and at 48, so the budget targets the middle of that basin.
+_SWEEP_CACHE_BUDGET = 16 * 1024 * 1024
+_SWEEP_CHUNK_MIN = 4
+_SWEEP_CHUNK_MAX = 24
+
+
+def _auto_sweep_chunk(n_vertices: int) -> int:
+    """Trace-size-aware chunk for multi-point sweeps: small traces take the
+    whole sweep in one pass, large traces are chunked so the (n, chunk)
+    cost matrix stays cache-resident."""
+    if n_vertices <= 0:
+        return _SWEEP_CHUNK_MAX
+    chunk = _SWEEP_CACHE_BUDGET // (8 * n_vertices)
+    return int(max(_SWEEP_CHUNK_MIN, min(_SWEEP_CHUNK_MAX, chunk)))
+
 
 @dataclass
 class MemLayering:
@@ -192,38 +211,24 @@ class EDag:
         # partition edges by destination level (ascending), sorted by dst
         # within each level.  Every in-edge of a vertex lands in that
         # vertex's own level slice, so one segmented max per run of equal
-        # dst (np.maximum.reduceat) fully resolves F[dst] for the level.
-        if len(dst):
-            elevel = level[dst]
-            self._eorder = np.lexsort((dst, elevel))
-            counts = np.bincount(elevel, minlength=self.n_levels)
-            self._elevel_ptr = np.concatenate(
-                ([0], np.cumsum(counts))).astype(np.int64)
-            self._esrc_lv = src[self._eorder]
-            self._edst_lv = dst[self._eorder]
-            run_mask = np.empty(len(dst), dtype=bool)
-            run_mask[0] = True
-            np.not_equal(self._edst_lv[1:], self._edst_lv[:-1],
-                         out=run_mask[1:])
-            self._run_starts = np.nonzero(run_mask)[0]
-            self._run_dst = self._edst_lv[self._run_starts]
-            self._run_lens = np.diff(np.append(self._run_starts, len(dst)))
-            rcounts = np.bincount(level[self._run_dst],
-                                  minlength=self.n_levels)
-            self._run_ptr = np.concatenate(
-                ([0], np.cumsum(rcounts))).astype(np.int64)
-        else:
-            self._eorder = np.zeros(0, dtype=np.int64)
-            self._elevel_ptr = np.zeros(max(self.n_levels, 0) + 1,
-                                        dtype=np.int64)
-            self._esrc_lv = src
-            self._edst_lv = dst
-            self._run_starts = np.zeros(0, dtype=np.int64)
-            self._run_dst = np.zeros(0, dtype=np.int64)
-            self._run_lens = np.zeros(0, dtype=np.int64)
-            self._run_ptr = np.zeros(max(self.n_levels, 0) + 1,
-                                     dtype=np.int64)
+        # dst fully resolves F[dst] for the level.  The same partition
+        # builder serves the simulator's order-augmented replay graphs.
+        from .backend import build_level_partition
+        lv = build_level_partition(src, dst, level, n)
+        self._level_csr_cache = lv
+        self._esrc_lv = lv.esrc
+        self._elevel_ptr = lv.elevel_ptr
+        self._run_starts = lv.run_starts
+        self._run_dst = lv.run_dst
+        self._run_lens = lv.run_lens
+        self._run_ptr = lv.run_ptr
         self._finalized = True
+
+    def _level_csr(self):
+        """The finalize-time edge partition as a ``backend.LevelCSR`` view
+        (the structure the shared numpy/jax accumulate kernel consumes)."""
+        self._finalize()
+        return self._level_csr_cache
 
     def _sim_lists(self):
         """Python-list views of the successor CSR + in-degrees, cached for
@@ -315,35 +320,18 @@ class EDag:
         # work in (n, k) layout so gathers/reductions index rows
         return self._accumulate_batch_nk(np.ascontiguousarray(base.T)).T
 
-    def _accumulate_batch_nk(self, F: np.ndarray) -> np.ndarray:
-        """In-place batched recurrence over an (n, n_sweep) cost matrix."""
+    def _accumulate_batch_nk(self, F: np.ndarray,
+                             backend: Optional[str] = None) -> np.ndarray:
+        """In-place batched recurrence over an (n, n_sweep) cost matrix.
+
+        Dispatches to the shared level-synchronous kernel in ``backend``
+        (numpy on CPU hosts; the jit/pallas path when jax sees an
+        accelerator) — the same kernel the batched §4 simulator replays
+        schedules through."""
         self._finalize()
-        rptr, rdst = self._run_ptr, self._run_dst
-        rstart, rlens, src = self._run_starts, self._run_lens, self._esrc_lv
-        for lv in range(1, self.n_levels):
-            r0, r1 = rptr[lv], rptr[lv + 1]
-            if r0 == r1:
-                continue
-            d = rdst[r0:r1]
-            starts = rstart[r0:r1]
-            lens = rlens[r0:r1]
-            # segmented max by offset stepping: in-degrees in real traces
-            # are tiny, so one or two vectorized maximum passes finish
-            # every run (much faster than np.maximum.reduceat over 2D)
-            segmax = F[src[starts]]
-            for off in range(1, int(lens.max())):
-                live = lens > off
-                if not live.any():
-                    break
-                segmax[live] = np.maximum(segmax[live],
-                                          F[src[starts[live] + off]])
-            # clamp at 0 (scalar-path semantics for negative costs), then
-            # add base: F[d] still holds base[d], since each dst is
-            # written exactly once, at its own level
-            np.maximum(segmax, 0.0, out=segmax)
-            segmax += F[d]
-            F[d] = segmax
-        return F
+        from .backend import level_accumulate
+        return level_accumulate(self._level_csr(), F, clamp=True,
+                                backend=backend)
 
     def t1(self) -> float:
         """Total work T1 = sum of vertex costs (§2.2)."""
@@ -373,23 +361,28 @@ class EDag:
         return F.max(axis=0)
 
     def t_inf_sweep_mem(self, alphas, unit: float = 1.0,
-                        chunk: int = 24) -> np.ndarray:
+                        chunk: Optional[int] = None,
+                        backend: Optional[str] = None) -> np.ndarray:
         """Span at each alpha for the standard memory cost model
         (alpha for RAM-access vertices, ``unit`` otherwise) — builds the
         (n, n_sweep) cost matrix directly, skipping the transpose copy.
 
         Points are processed ``chunk`` at a time to keep the (n, chunk)
-        working set cache-resident on large traces."""
+        working set cache-resident on large traces; by default the chunk
+        is picked from the trace size (``_auto_sweep_chunk``), so small
+        traces run the whole sweep in one pass."""
         self._finalize()
         alphas = np.asarray(alphas, dtype=np.float64)
         if self.n_vertices == 0 or len(alphas) == 0:
             return np.zeros(len(alphas))
-        chunk = max(int(chunk), 1)
+        chunk = (_auto_sweep_chunk(self.n_vertices) if chunk is None
+                 else max(int(chunk), 1))
         out = []
         for i in range(0, len(alphas), chunk):
             F = np.where(self.is_mem[:, None],
                          alphas[None, i:i + chunk], float(unit))
-            out.append(self._accumulate_batch_nk(F).max(axis=0))
+            out.append(self._accumulate_batch_nk(F, backend=backend)
+                       .max(axis=0))
         return np.concatenate(out)
 
     def start_finish(self, cost: Optional[np.ndarray] = None):

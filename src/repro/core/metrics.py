@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -40,7 +41,8 @@ def cost_matrix(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
     return np.where(g.is_mem[None, :], alphas[:, None], float(unit))
 
 
-def t_inf_sweep(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
+def t_inf_sweep(g: EDag, alphas, unit: float = 1.0,
+                backend: Optional[str] = None) -> np.ndarray:
     """Span T-inf at every latency point in one level-synchronous pass.
 
     The whole alpha sweep is a single batched longest-path evaluation over
@@ -49,14 +51,15 @@ def t_inf_sweep(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
     g._finalize()
     if g.n_vertices == 0:
         return np.zeros(len(np.atleast_1d(alphas)))
-    return g.t_inf_sweep_mem(alphas, unit)
+    return g.t_inf_sweep_mem(alphas, unit, backend=backend)
 
 
 def bandwidth_sweep(g: EDag, alphas, unit: float = 1.0,
-                    cycles_per_second: float = 1e9) -> np.ndarray:
+                    cycles_per_second: float = 1e9,
+                    backend: Optional[str] = None) -> np.ndarray:
     """Eq 5 bandwidth at every latency point, from one batched span pass."""
     g._finalize()
-    t_inf = t_inf_sweep(g, alphas, unit)
+    t_inf = t_inf_sweep(g, alphas, unit, backend=backend)
     moved = float(g.nbytes[g.is_mem].sum())
     out = np.zeros_like(t_inf)
     np.divide(moved * cycles_per_second, t_inf, out=out, where=t_inf > 0)
@@ -128,13 +131,18 @@ class Report:
 
 def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
                  simulate_points: bool = False,
-                 compute_slots: int = 0) -> dict:
+                 compute_slots: int = 0,
+                 backend: Optional[str] = None) -> dict:
     """Full latency sweep in one pass (§3.3 metrics per alpha point).
 
     The analytic quantities — T-inf, Eq-2 bounds, bandwidth, Lambda — come
     from ONE batched level-synchronous evaluation; W, D, C, lambda are
     alpha-independent and computed once.  With ``simulate_points=True`` the
-    §4 ground-truth simulator also runs per point, reusing the cached CSR.
+    §4 ground-truth simulator runs as one batched schedule replay over the
+    same cached CSR (bit-identical to the per-point reference engine).
+    ``backend`` selects the kernel backend (numpy / jax) for the analytic
+    span/bandwidth passes and is forwarded to the simulator, whose
+    order-verification pass currently pins the numpy kernel.
     """
     from .cost import non_memory_cost, total_cost_bounds
     from .scheduler import latency_sweep as _sim_sweep
@@ -144,16 +152,18 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
     lay = g.mem_layers()
     C = non_memory_cost(g, params.unit)
     lam = lambda_abs(lay.W, lay.D, params.m)
-    t_inf = t_inf_sweep(g, alphas, params.unit)
-    B = bandwidth_sweep(g, alphas, params.unit)
+    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend)
+    B = bandwidth_sweep(g, alphas, params.unit, backend=backend)
     lo, hi = total_cost_bounds(lay.W, lay.D, params.m, alphas, C)
-    Lam = np.array([lambda_rel(lam, a, C) for a in alphas])
+    denom = lam * alphas + C
+    Lam = np.divide(lam, denom, out=np.zeros_like(denom), where=denom > 0)
     out = dict(alphas=alphas, W=lay.W, D=lay.D, C=C, lam=lam, Lam=Lam,
                t_inf=t_inf, t_lower=lo, t_upper=hi, B_gbs=B / 1e9)
     if simulate_points:
         out["simulated"] = _sim_sweep(g, alphas, m=params.m,
                                       unit=params.unit,
-                                      compute_slots=compute_slots)
+                                      compute_slots=compute_slots,
+                                      backend=backend)
     return out
 
 

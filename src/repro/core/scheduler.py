@@ -1,43 +1,75 @@
-"""Greedy list scheduler — the discrete-event simulator standing in for gem5.
+"""Discrete-event simulator standing in for gem5 (§4) — batched across sweeps.
 
-The paper validates lambda/Lambda by sweeping DRAM latency in gem5 and ranking
-benchmarks by measured runtime (§4).  We reproduce that harness with a
-discrete-event greedy scheduler over the *same* eDAG: memory-access vertices
-occupy one of ``m`` memory issue slots for ``alpha`` cycles; all other
-vertices execute with unit cost and unbounded compute slots (matching the
-cost-model assumptions of §3.3.1).  The simulated makespan provably lies
-within the Eq-2 bounds (tested by property tests).
+The paper validates lambda/Lambda by sweeping DRAM latency in gem5 and
+ranking benchmarks by measured runtime (§4).  We reproduce that harness
+over the *same* eDAG: memory-access vertices occupy one of ``m`` memory
+issue slots for ``alpha`` cycles; other vertices execute with ``unit`` cost
+on unbounded (or ``compute_slots``-bounded) ALU slots.
 
-The successor CSR and in-degree arrays are computed once at ``EDag._finalize``
-and shared across calls, so a latency sweep pays the graph build exactly once
-and each sweep point is a pure event-loop run.
+Two engines implement the identical machine model:
+
+* ``simulate_reference`` — the retained per-event heapq loop (the seed
+  engine), kept as the exact-equality oracle for property tests and as the
+  per-point fallback.
+
+* ``simulate_batch`` — the sweep-batched engine behind ``latency_sweep``.
+  It exploits two exact structural facts of the model:
+
+  1. **Slot heaps decompose.**  All jobs of a resource class share one
+     service time, so finish times are nondecreasing in issue order and the
+     greedy heap always pops the finish of the job issued ``m`` slots
+     earlier: ``S_j = max(R_j, F_{j-m})``.  Given the per-class issue
+     orders, the whole simulation collapses to a (max, +) longest path over
+     the *order-augmented* eDAG (original RAW edges plus slot-chain edges
+     ``O[j-m] -> O[j]``).  max is exact in floats and every ``+ service``
+     is a single IEEE addition, so any evaluation order is bit-identical
+     to the event loop.
+
+  2. **Issue order is a static sort key.**  Jobs enter service at their
+     ready instants; the event loop resolves same-instant ties by popping
+     events in vid order and draining after each pop.  The resulting order
+     is exactly the lexicographic sort by ``(R(v), E(v), v)`` where R is
+     the ready time and E the largest-vid predecessor achieving it.
+
+  One instrumented reference run records the issue orders (the *schedule*);
+  one level-synchronous batched pass (``backend.level_accumulate``, shared
+  with the analytic sweeps and their jax/pallas backend) then evaluates
+  every sweep point at once, and a vectorized check that the recorded order
+  still sorts by ``(R, E, v)`` certifies each point.  Points whose order
+  differs (it almost never does across a latency sweep) are re-recorded
+  from a fresh master, so the result is always bit-identical to running
+  the reference engine per point.
+
+The successor CSR and in-degree arrays are computed once at
+``EDag._finalize`` and shared by every engine, so a latency sweep pays
+graph finalization exactly once.
 """
 from __future__ import annotations
 
 import heapq
+from typing import Optional
 
 import numpy as np
 
+from . import backend as _bk
 from .graph import EDag
 
+# Point-chunk memory budget for the batched replay: the per-master pass
+# holds ~3 (n_vertices, chunk) float64 matrices (base/finish, ready times,
+# scratch), so chunk ~ budget / (24 * n).
+_REPLAY_MEM_BUDGET = 512 * 1024 * 1024
+# Below this many sweep points the recording run cannot amortize.
+_MIN_BATCH_POINTS = 2
 
-def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
-             unit: float = 1.0, compute_slots: int = 0) -> float:
-    """Simulated makespan of the eDAG under the §3.3.1 machine model.
 
-    ``compute_slots``>0 bounds ALU issue width — a realism knob the cost
-    model deliberately ignores (its C is latency-independent), standing in
-    for gem5's microarchitectural detail in the §4 validation."""
-    g._finalize()
-    n = g.n_vertices
-    if n == 0:
-        return 0.0
-    alpha = float(alpha)
-    unit = float(unit)
-    is_mem = g.is_mem
+# --------------------------------------------------------------- event loop
 
-    # successor CSR + in-degrees: cached on the graph at finalize
-    sdst_l, sptr_l, indeg0 = g._sim_lists()
+def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
+                compute_slots: int, record: bool = False):
+    """The §3.3.1 greedy event loop (the seed engine), optionally recording
+    the schedule: per-vertex finish times and the per-class issue orders."""
+    sdst_l, sptr_l, indeg0 = sim_lists
+    n = len(indeg0)
     indeg_l = list(indeg0)
 
     events: list = []       # (finish_time, vid)
@@ -47,6 +79,10 @@ def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
     alu: list = [0.0] * compute_slots if compute_slots else None
     if alu:
         heapq.heapify(alu)
+    if record:
+        pops: list = []
+        O_mem: list = []
+        O_alu: list = []
 
     def start(v: int, t: float) -> None:
         if is_mem[v]:
@@ -55,44 +91,268 @@ def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
             st = max(t, alu[0])
             heapq.heapreplace(alu, st + unit)
             heapq.heappush(events, (st + unit, v))
+            if record:
+                O_alu.append(v)
         else:
             heapq.heappush(events, (t + unit, v))
 
-    for v in np.nonzero(g.indeg == 0)[0]:
-        start(int(v), 0.0)
+    for v in range(n):
+        if not indeg_l[v]:
+            start(v, 0.0)
 
     def drain_mem(now: float) -> None:
-        # issue every waiting memory access whose slot is free
+        # issue every waiting memory access onto the earliest-free slot
         while mem_wait:
             rt, v = mem_wait[0]
-            free = slots[0]
-            st = max(rt, free)
+            st = max(rt, slots[0])
             heapq.heappop(mem_wait)
             heapq.heapreplace(slots, st + alpha)
             heapq.heappush(events, (st + alpha, v))
+            if record:
+                O_mem.append(v)
 
     drain_mem(0.0)
     makespan = 0.0
     while events:
         t, v = heapq.heappop(events)
         makespan = max(makespan, t)
+        if record:
+            pops.append(v)
         for ei in range(sptr_l[v], sptr_l[v + 1]):
             d = sdst_l[ei]
             indeg_l[d] -= 1
             if indeg_l[d] == 0:
                 start(d, t)
         drain_mem(t)
+    if record:
+        return makespan, np.asarray(pops, dtype=np.int64), \
+            np.asarray(O_mem, dtype=np.int64), \
+            np.asarray(O_alu, dtype=np.int64)
     return makespan
 
 
+def simulate_reference(g: EDag, m: int = 4, alpha: float = 200.0,
+                       unit: float = 1.0, compute_slots: int = 0) -> float:
+    """Simulated makespan via the retained per-event heapq engine.
+
+    This is the seed engine, kept verbatim as the ground truth the batched
+    engine is property-tested against (exact float equality)."""
+    g._finalize()
+    if g.n_vertices == 0:
+        return 0.0
+    return _event_loop(g.is_mem, g._sim_lists(), m, float(alpha),
+                       float(unit), compute_slots)
+
+
+def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
+             unit: float = 1.0, compute_slots: int = 0) -> float:
+    """Simulated makespan of the eDAG under the §3.3.1 machine model.
+
+    ``compute_slots``>0 bounds ALU issue width — a realism knob the cost
+    model deliberately ignores (its C is latency-independent), standing in
+    for gem5's microarchitectural detail in the §4 validation."""
+    return simulate_reference(g, m=m, alpha=alpha, unit=unit,
+                              compute_slots=compute_slots)
+
+
+# -------------------------------------------------------------- replay plan
+
+class _ReplayPlan:
+    """Recorded schedule of one master run, ready for batched replay.
+
+    Holds the order-augmented eDAG in pop-order relabeling (a topological
+    order of the augmented graph) as a ``backend.LevelCSR``, plus the issue
+    orders and the arrays the per-point order verification needs."""
+
+    __slots__ = ("n", "m", "cs", "topo", "rank", "lv", "is_mem_topo",
+                 "O_mem", "O_alu", "Om_rel", "Oa_rel")
+
+    def __init__(self, g: EDag, topo: np.ndarray, O_mem: np.ndarray,
+                 O_alu: np.ndarray, m: int, cs: int):
+        n = g.n_vertices
+        self.n, self.m, self.cs = n, m, cs
+        # the recorded pop order (finish time, vid) is a linear extension
+        # of the augmented DAG: slot chains strictly increase finish times
+        rank = np.empty(n, dtype=np.int64)
+        rank[topo] = np.arange(n)
+        self.topo, self.rank = topo, rank
+        self.O_mem, self.O_alu = O_mem, O_alu
+        self.Om_rel = rank[O_mem]
+        self.Oa_rel = rank[O_alu] if cs else np.zeros(0, dtype=np.int64)
+        self.is_mem_topo = g.is_mem[topo]
+
+        # queue predecessors point at the zero sentinel row n when absent
+        # (a slot that is free at t=0)
+        qpred = np.full(n, n, dtype=np.int64)
+        if len(O_mem) > m:
+            qpred[rank[O_mem[m:]]] = rank[O_mem[:-m]]
+        if cs and len(O_alu) > cs:
+            qpred[rank[O_alu[cs:]]] = rank[O_alu[:-cs]]
+        src_r, dst_r = rank[g.src], rank[g.dst]
+
+        qdst = np.nonzero(qpred < n)[0]
+        level = _bk.levelize(np.concatenate([src_r, qpred[qdst]]),
+                             np.concatenate([dst_r, qdst]), n)
+        lv = _bk.build_level_partition(src_r, dst_r, level, n)
+        lv.qpred = qpred
+        # vertices whose only predecessor is the slot chain
+        qonly = qdst[np.bincount(dst_r, minlength=n)[qdst] == 0]
+        if len(qonly):
+            qonly = qonly[np.argsort(level[qonly], kind="stable")]
+            counts = np.bincount(level[qonly], minlength=lv.n_levels)
+            lv.qonly_ptr = np.concatenate(
+                ([0], np.cumsum(counts))).astype(np.int64)
+            lv.qonly_dst = qonly
+        self.lv = lv
+
+    def replay(self, alphas: np.ndarray, unit: float,
+               backend: Optional[str] = None):
+        """Evaluate all points at once: returns finish times F and ready
+        times R, both (n+1, k) in pop-order (topo) vertex space (the last
+        row is the zero sentinel the slot chains bottom out on)."""
+        k = len(alphas)
+        F = np.empty((self.n + 1, k))
+        F[:-1] = np.where(self.is_mem_topo[:, None], alphas[None, :], unit)
+        F[-1] = 0.0
+        R = np.zeros_like(F)
+        _bk.level_accumulate(self.lv, F, clamp=False, R_out=R,
+                             backend=backend)
+        return F, R
+
+
+def _enabler_pass(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
+                  T: np.ndarray) -> np.ndarray:
+    """E(v) = max vid among predecessors u with F(u) == R(v), for the
+    vertex subset ``T`` (original ids, sorted).  Returns (|T|, k); -1 rows
+    for vertices with no predecessors (sources are enabled at t=0)."""
+    out = np.full((len(T), F.shape[1]), -1, dtype=np.int64)
+    indptr = g._indptr
+    counts = (indptr[T + 1] - indptr[T])
+    has = counts > 0
+    Th = T[has]
+    ch = counts[has]
+    if not len(Th):
+        return out
+    tot = int(ch.sum())
+    eidx = np.repeat(indptr[Th], ch) + np.arange(tot) - \
+        np.repeat(np.cumsum(ch) - ch, ch)
+    esrc = g.src[eidx]
+    Fs = F[rank[esrc]]
+    Rrep = np.repeat(R[rank[Th]], ch, axis=0)
+    vals = np.where(Fs == Rrep, esrc[:, None], -1)
+    starts = np.cumsum(ch) - ch
+    out[has] = np.maximum.reduceat(vals, starts, axis=0)
+    return out
+
+
+def _verify_class(g: EDag, plan: _ReplayPlan, F: np.ndarray, R: np.ndarray,
+                  O: np.ndarray, O_rel: np.ndarray) -> np.ndarray:
+    """Check per point that ``O`` is the (R, E, vid)-sorted issue order.
+
+    R must be nondecreasing along O; at R ties the enabler vid E (computed
+    lazily, only for the tied positions) and then the vid break the tie."""
+    k = F.shape[1]
+    if len(O) < 2:
+        return np.ones(k, dtype=bool)
+    RO = R[O_rel]
+    lo, hi = RO[:-1], RO[1:]
+    less = lo < hi
+    eq = lo == hi
+    pair_ok = less
+    tie = np.nonzero(eq.any(axis=1))[0]
+    if len(tie):
+        T = np.unique(np.concatenate([O[tie], O[tie + 1]]))
+        E_T = _enabler_pass(g, plan.rank, F, R, T)
+        e_lo = E_T[np.searchsorted(T, O[tie])]
+        e_hi = E_T[np.searchsorted(T, O[tie + 1])]
+        v_lo = O[tie][:, None]
+        v_hi = O[tie + 1][:, None]
+        tie_ok = (e_lo < e_hi) | ((e_lo == e_hi) & (v_lo < v_hi))
+        pair_ok = less.copy()
+        pair_ok[tie] = np.where(eq[tie], tie_ok, less[tie])
+    return pair_ok.all(axis=0)
+
+
+def _points_chunk(n: int, k: int) -> int:
+    """Balanced point chunk under the replay memory budget: the level loop
+    pays per-level dispatch once per chunk, so fewer, equal-sized chunks
+    beat one full chunk plus a sliver."""
+    cap = max(4, int(_REPLAY_MEM_BUDGET // max(24 * n, 1)))
+    n_chunks = -(-k // cap)
+    return -(-k // n_chunks)
+
+
+def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
+                   compute_slots: int = 0,
+                   backend: Optional[str] = None) -> np.ndarray:
+    """Simulated makespans for a whole latency sweep in one batched pass.
+
+    Bit-identical to ``[simulate_reference(g, m, a, unit, compute_slots)
+    for a in alphas]`` — the schedule-replay engine re-verifies its
+    recorded issue order for every point and falls back to fresh recordings
+    (at worst, the reference engine per point) whenever the order shifts.
+    """
+    g._finalize()
+    alphas = np.asarray(alphas, dtype=np.float64)
+    P = len(alphas)
+    out = np.zeros(P)
+    n = g.n_vertices
+    if n == 0 or P == 0:
+        return out
+    unit = float(unit)
+    cs = int(compute_slots)
+    m = int(m)
+    sim_lists = g._sim_lists()
+    if m < 1 or unit <= 0 or not np.isfinite(unit) or \
+            (alphas <= 0).any() or not np.isfinite(alphas).all():
+        # degenerate machine models keep the reference semantics exactly
+        for i, a in enumerate(alphas):
+            out[i] = _event_loop(g.is_mem, sim_lists, m, float(a), unit, cs)
+        return out
+
+    remaining = np.arange(P)
+    while remaining.size:
+        a0 = float(alphas[remaining[0]])
+        mk0, topo, O_mem, O_alu = _event_loop(
+            g.is_mem, sim_lists, m, a0, unit, cs, record=True)
+        plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs)
+        ok = np.zeros(remaining.size, dtype=bool)
+        chunk = _points_chunk(n, remaining.size)
+        for c0 in range(0, remaining.size, chunk):
+            sel = remaining[c0:c0 + chunk]
+            F, R = plan.replay(alphas[sel], unit, backend=backend)
+            okc = _verify_class(g, plan, F, R, plan.O_mem, plan.Om_rel)
+            if cs:
+                okc &= _verify_class(g, plan, F, R, plan.O_alu, plan.Oa_rel)
+            mk = F.max(axis=0)
+            out[sel[okc]] = mk[okc]
+            ok[c0:c0 + chunk] = okc
+        if not ok[0]:
+            # the master's own schedule always certifies; if the check ever
+            # disagrees, trust its recorded makespan and keep making progress
+            out[remaining[0]] = mk0
+            ok[0] = True
+        remaining = remaining[~ok]
+    return out
+
+
 def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
-                  compute_slots: int = 0) -> np.ndarray:
+                  compute_slots: int = 0, batch: Optional[bool] = None,
+                  backend: Optional[str] = None) -> np.ndarray:
     """Simulated makespan across a latency sweep (the §4 gem5 protocol).
 
-    One finalize builds the shared CSR; each sweep point then reuses it —
-    no per-point graph rebuild."""
+    One finalize builds the shared CSR; the batched schedule-replay engine
+    then evaluates the whole sweep in one level-synchronous pass
+    (``batch=False`` forces the retained per-point reference loop — the
+    results are bit-identical either way)."""
     g._finalize()
-    g._sim_lists()
-    return np.array([simulate(g, m=m, alpha=float(a), unit=unit,
-                              compute_slots=compute_slots)
+    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
+    use_batch = (len(alphas) >= _MIN_BATCH_POINTS if batch is None
+                 else bool(batch))
+    if use_batch:
+        return simulate_batch(g, alphas, m=m, unit=unit,
+                              compute_slots=compute_slots, backend=backend)
+    sim_lists = g._sim_lists()   # shared: the sweep pays finalization once
+    return np.array([_event_loop(g.is_mem, sim_lists, int(m), float(a),
+                                 float(unit), int(compute_slots))
                      for a in alphas])

@@ -64,23 +64,27 @@ def collective_sensitivity(hlo_text: str,
 def axis_latency_sweep(per_axis: Dict[str, AxisSensitivity],
                        alphas: Sequence[float],
                        step_seconds: float) -> dict:
-    """Vectorized per-axis fabric-latency sweep (Eq 3-4 over an alpha grid).
+    """Batched per-axis fabric-latency sweep (Eq 3-4 over an alpha grid).
 
-    For each mesh axis, evaluates the projected step-time delta
-    ``lam * alpha`` and relative sensitivity across the whole latency grid
-    at once — one ``np.outer`` per quantity instead of a Python loop per
-    (axis, alpha) pair.  Returns ``{axis: {alphas, lam_seconds, Lam}}``.
+    Evaluates every (axis, alpha) pair in one stacked pass: the projected
+    step-time deltas are a single ``np.outer`` over the axis lambda vector
+    and the alpha grid, and the relative sensitivities one vectorized
+    divide over the whole (n_axes, n_alphas) matrix — no Python loop over
+    axes or points.  Returns ``{axis: {alphas, lam_seconds, Lam}}``.
     """
     alphas = np.asarray(alphas, dtype=np.float64)
-    out = {}
-    for axis, s in per_axis.items():
-        lam_seconds = s.lam * alphas
-        base = max(step_seconds - s.lam_seconds, 0.0)
-        denom = lam_seconds + base
-        Lam = np.divide(lam_seconds, denom,
-                        out=np.zeros_like(denom), where=denom > 0)
-        out[axis] = dict(alphas=alphas, lam_seconds=lam_seconds, Lam=Lam)
-    return out
+    axes = list(per_axis)
+    if not axes:
+        return {}
+    lam = np.array([per_axis[a].lam for a in axes])
+    base = np.maximum(step_seconds -
+                      np.array([per_axis[a].lam_seconds for a in axes]), 0.0)
+    lam_seconds = np.outer(lam, alphas)                 # (n_axes, n_alphas)
+    denom = lam_seconds + base[:, None]
+    Lam = np.divide(lam_seconds, denom,
+                    out=np.zeros_like(denom), where=denom > 0)
+    return {axis: dict(alphas=alphas, lam_seconds=lam_seconds[i],
+                       Lam=Lam[i]) for i, axis in enumerate(axes)}
 
 
 def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],

@@ -287,10 +287,12 @@ class Tracer:
         self._live[vid] = None
 
     # ----------------------------------------------------------- vertex emit
-    def _load(self, addr: int, pyval, itemsize: int, idx_vids, label="ld") -> Value:
+    def _load_vid(self, addr: int, itemsize: float, dep_vids, label="ld") -> int:
+        """Emit one load vertex; ``dep_vids`` are producer ids (index
+        values), touched through the register model in order."""
         hit = self.cache.access(addr, is_write=False)
         deps = set()
-        for iv in idx_vids:
+        for iv in dep_vids:
             iv2 = self._touch(iv)
             if iv2 is not None:
                 deps.add(iv2)
@@ -304,14 +306,18 @@ class Tracer:
         self._readers.setdefault(addr, []).append(v)
         self._admit(v)
         self._resident[v] = v
-        return Value(pyval, v)
+        return v
 
-    def _store(self, addr: int, dep_vid, itemsize: int, idx_vids, label="st") -> int:
+    def _load(self, addr: int, pyval, itemsize: int, idx_vids, label="ld") -> Value:
+        return Value(pyval, self._load_vid(addr, itemsize, idx_vids, label))
+
+    def _store_vid(self, addr: int, itemsize: float, dep_vids,
+                   label="st") -> int:
+        """Emit one store vertex depending on ``dep_vids`` (stored value
+        first, then index values — the scalar-path touch order)."""
         hit = self.cache.access(addr, is_write=True)
         deps = set()
-        if dep_vid is not None:
-            deps.add(self._touch(dep_vid))
-        for iv in idx_vids:
+        for iv in dep_vids:
             iv2 = self._touch(iv)
             if iv2 is not None:
                 deps.add(iv2)
@@ -329,20 +335,31 @@ class Tracer:
         self._readers[addr] = []
         return v
 
-    def alu(self, op: str, *operands, label: Optional[str] = None) -> Value:
-        """ALU vertex: op in {+,-,*,/,max,min} or a callable."""
-        fn = _OPS[op] if isinstance(op, str) else op
-        vals = [o.val if isinstance(o, Value) else o for o in operands]
+    def _store(self, addr: int, dep_vid, itemsize: int, idx_vids, label="st") -> int:
+        dep_vids = ([dep_vid] if dep_vid is not None else []) + list(idx_vids)
+        return self._store_vid(addr, itemsize, dep_vids, label)
+
+    def _alu_vid(self, dep_vids, label="alu") -> int:
+        """Emit one ALU vertex over producer ids (register-model touched)."""
         deps = set()
-        for o in operands:
-            if isinstance(o, Value) and o.vid is not None:
-                deps.add(self._touch(o.vid))
-        v = self.g.add_vertex(cost=1.0, is_mem=False, nbytes=0.0,
-                              label=label or (op if isinstance(op, str) else "alu"))
+        for iv in dep_vids:
+            if iv is not None:
+                deps.add(self._touch(iv))
+        v = self.g.add_vertex(cost=1.0, is_mem=False, nbytes=0.0, label=label)
         for d in sorted(deps):
             self.g.add_edge(d, v)
         self._admit(v)
         self._resident[v] = v
+        return v
+
+    def alu(self, op: str, *operands, label: Optional[str] = None) -> Value:
+        """ALU vertex: op in {+,-,*,/,max,min} or a callable."""
+        fn = _OPS[op] if isinstance(op, str) else op
+        vals = [o.val if isinstance(o, Value) else o for o in operands]
+        v = self._alu_vid(
+            [o.vid for o in operands if isinstance(o, Value)
+             and o.vid is not None],
+            label or (op if isinstance(op, str) else "alu"))
         result = fn(*vals) if len(vals) > 1 else fn(vals[0])
         return Value(result, v)
 
@@ -353,15 +370,57 @@ class Tracer:
     # Vertex kinds for emit_block op arrays.
     LOAD, STORE, ALU = 0, 1, 2
 
-    def _check_bulk_ok(self) -> None:
-        if self.max_regs is not None:
-            raise NotImplementedError(
-                "bulk emission bypasses the bounded-register-file model; "
-                "use the scalar API when max_regs is set")
-        if self.false_deps:
-            raise NotImplementedError(
-                "bulk emission tracks RAW dependencies only; use the scalar "
-                "API for false_deps tracing")
+    def _needs_scalar_replay(self) -> bool:
+        """Tracer modes with per-op global state (the bounded-register-file
+        spill model, WAR/WAW tracking) run blocks through the scalar
+        emitters op by op instead of the vectorized fast path."""
+        return self.max_regs is not None or self.false_deps
+
+    def _emit_block_scalar(self, kind, addr, nbytes, deps, label) -> np.ndarray:
+        """Replay a block through the scalar emitters in program order.
+
+        Semantically identical to the vectorized path — same vertices,
+        edges and cache-access stream — but additionally applies the
+        §3.2.1 register model: operand touches may emit spill reloads and
+        admissions may emit spill stores *between* the block's own ops,
+        exactly as the per-element API would.  Dependency entries at or
+        above the block's first (virtual) vertex id are positional
+        references to earlier block ops and are remapped onto the ids
+        those ops actually received."""
+        kind = np.asarray(kind, dtype=np.int64)
+        k = len(kind)
+        if k == 0:
+            return np.zeros(0, dtype=np.int64)
+        addr = (np.full(k, -1, dtype=np.int64) if addr is None
+                else np.asarray(addr, dtype=np.int64))
+        nb = np.where(kind == self.ALU, 0.0,
+                      np.broadcast_to(np.asarray(nbytes, dtype=np.float64),
+                                      (k,)))
+        labels = [label] * k if isinstance(label, str) else list(label)
+        if deps is not None:
+            deps = np.asarray(deps, dtype=np.int64)
+            if deps.ndim == 1:
+                deps = deps[:, None]
+        base = self.g.n_vertices
+        out = np.empty(k, dtype=np.int64)
+        for i in range(k):
+            dvs = []
+            if deps is not None:
+                for dep in deps[i]:
+                    if dep < 0:
+                        continue
+                    dvs.append(int(out[dep - base]) if dep >= base
+                               else int(dep))
+            kd = kind[i]
+            if kd == self.LOAD:
+                out[i] = self._load_vid(int(addr[i]), float(nb[i]), dvs,
+                                        labels[i])
+            elif kd == self.STORE:
+                out[i] = self._store_vid(int(addr[i]), float(nb[i]), dvs,
+                                         labels[i])
+            else:
+                out[i] = self._alu_vid(dvs, labels[i])
+        return out
 
     def emit_block(self, kind, addr=None, nbytes=0.0, deps=None,
                    label="") -> np.ndarray:
@@ -381,9 +440,12 @@ class Tracer:
                     internally and need not be listed.
         ``label``   one label for the block, or a length-k sequence.
 
-        Returns the new vertex ids (contiguous, in program order).
+        Returns the new vertex ids, in program order (contiguous on the
+        vectorized path; under the bounded-register-file / false-deps
+        modes, spill stores and reloads may be interleaved between them).
         """
-        self._check_bulk_ok()
+        if self._needs_scalar_replay():
+            return self._emit_block_scalar(kind, addr, nbytes, deps, label)
         kind = np.asarray(kind, dtype=np.int64)
         k = len(kind)
         if k == 0:
@@ -509,7 +571,6 @@ class Tracer:
 
     def block(self) -> "BlockBuilder":
         """Start an affine loop-nest block (see BlockBuilder)."""
-        self._check_bulk_ok()
         return BlockBuilder(self)
 
     # ---------------------------------------------------------------- output
@@ -638,6 +699,14 @@ class BlockBuilder:
             nbytes[s::S] = slot["nbytes"]
             labels[s] = slot["label"]
             cols = []
+            if slot["scan_init"] is not None:
+                # the loop-carried operand comes first: the scalar kernels
+                # write ``acc = alu(acc, m)``, and the register-model replay
+                # touches operands in column order, so spills/reloads land
+                # exactly where the per-element tracer would put them
+                prev = base + (it - 1) * S + s
+                prev[0] = slot["scan_init"]
+                cols.append(prev)
             for dep in slot["deps"]:
                 if dep is None:
                     continue
@@ -648,10 +717,6 @@ class BlockBuilder:
                     cols.append(base + it * S + dep.pos)
                 else:
                     cols.append(self._dep_array(dep))
-            if slot["scan_init"] is not None:
-                prev = base + (it - 1) * S + s
-                prev[0] = slot["scan_init"]
-                cols.append(prev)
             for c in cols:
                 dep_cols.append((s, c))
         d_max = max((sum(1 for p, _ in dep_cols if p == s)

@@ -3,7 +3,9 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core import EDag, latency_sweep, simulate
+from repro.core import (EDag, latency_sweep, make_cache, memory_cost_bounds,
+                        non_memory_cost, simulate, simulate_batch,
+                        simulate_reference, sweep_report, total_cost_bounds)
 
 
 def test_chain_exact():
@@ -63,3 +65,143 @@ def test_width_vs_slots(width, m, alpha):
         g.add_vertex(is_mem=True)
     t = simulate(g, m=m, alpha=alpha)
     assert t == pytest.approx(np.ceil(width / m) * alpha)
+
+
+# ---------------------------------------------------- batched engine oracle
+
+@st.composite
+def sim_cases(draw):
+    """Random topological DAG + machine model + tie-heavy alpha grid."""
+    n = draw(st.integers(1, 60))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < 0.5), nbytes=8.0)
+        for j in range(i):
+            if rng.random() < 0.12:
+                g.add_edge(j, i)
+    m = draw(st.integers(1, 5))
+    cs = draw(st.integers(0, 5))
+    # small integers make event-time ties plentiful — the adversarial case
+    # for the (R, E, vid) issue-order verification
+    alphas = rng.choice([0.5, 1.0, 2.0, 3.0, 50.0, 200.0, 333.25],
+                        size=5, replace=False)
+    return g, m, cs, alphas
+
+
+@given(sim_cases())
+def test_batched_matches_reference_exactly(case):
+    """simulate_batch is bit-identical to the retained heapq engine."""
+    g, m, cs, alphas = case
+    got = simulate_batch(g, alphas, m=m, compute_slots=cs)
+    want = np.array([simulate_reference(g, m=m, alpha=float(a),
+                                        compute_slots=cs) for a in alphas])
+    assert np.array_equal(got, want)
+
+
+@given(sim_cases())
+def test_batched_within_eq2_bounds(case):
+    """Every batched makespan obeys the Eq-2 upper bound of its alpha
+    point and the Eq-1 memory lower bound (the Eq-2 *lower* bound adds
+    all of C serially, which a parallel machine may beat)."""
+    g, m, _cs, alphas = case
+    lay = g.mem_layers()
+    C = non_memory_cost(g)
+    times = simulate_batch(g, alphas, m=m)   # unbounded ALU: Eq-2 regime
+    for a, t in zip(alphas, times):
+        _, hi = total_cost_bounds(lay.W, lay.D, m, float(a), C)
+        mem_lo, _ = memory_cost_bounds(lay.W, lay.D, m, float(a))
+        assert mem_lo - 1e-6 <= t <= hi + 1e-6
+
+
+def test_batched_traced_kernels_cached_and_uncached():
+    """Traced PolyBench kernels, with and without a cache model, sweep to
+    bit-identical makespans on both engines."""
+    from repro.apps import polybench
+
+    alphas = np.arange(50.0, 301.0, 50.0)
+    for name in ("gemm", "trisolv", "trmm"):
+        for cache_size in (0, 1024):
+            g = polybench.trace_kernel(name, 6,
+                                       cache=make_cache(cache_size))
+            got = simulate_batch(g, alphas, m=4, compute_slots=8)
+            want = np.array([simulate_reference(g, m=4, alpha=float(a),
+                                                compute_slots=8)
+                             for a in alphas])
+            assert np.array_equal(got, want), (name, cache_size)
+
+
+def test_latency_sweep_batch_flag_equivalent():
+    g = EDag()
+    prev = None
+    for i in range(40):
+        v = g.add_vertex(is_mem=(i % 3 == 0))
+        if prev is not None and i % 5:
+            g.add_edge(prev, v)
+        prev = v
+    alphas = [50.0, 75.0, 100.0, 250.0]
+    assert np.array_equal(latency_sweep(g, alphas, m=2, compute_slots=3),
+                          latency_sweep(g, alphas, m=2, compute_slots=3,
+                                        batch=False))
+
+
+def test_batched_degenerate_machine_models():
+    """Non-positive / non-finite parameters keep reference semantics."""
+    g = EDag()
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex(is_mem=False)
+    g.add_edge(a, b)
+    for alphas in ([0.0, 50.0], [-1.0, 2.0]):
+        got = simulate_batch(g, alphas, m=2)
+        want = [simulate_reference(g, m=2, alpha=float(x)) for x in alphas]
+        assert np.array_equal(got, np.array(want))
+
+
+def test_sweep_report_simulated_is_batched_reference():
+    from repro.apps import polybench
+
+    g = polybench.trace_kernel("mvt", 6)
+    alphas = [50.0, 150.0, 300.0]
+    rep = sweep_report(g, alphas, simulate_points=True, compute_slots=4)
+    want = np.array([simulate_reference(g, alpha=a, compute_slots=4)
+                     for a in alphas])
+    assert np.array_equal(rep["simulated"], want)
+
+
+# ------------------------------------------------- fig10-13 seed regression
+
+def _force_reference_engine(monkeypatch):
+    """Route every latency_sweep through the per-point seed engine."""
+    import repro.core.scheduler as sched
+    monkeypatch.setattr(sched, "_MIN_BATCH_POINTS", 10 ** 9)
+
+
+def test_fig10_11_output_matches_seed_engine(monkeypatch):
+    from benchmarks import fig10_11_lambda
+
+    got = fig10_11_lambda.run(N=5)
+    _force_reference_engine(monkeypatch)
+    want = fig10_11_lambda.run(N=5)
+    assert got == want
+
+
+def test_fig12_output_matches_seed_engine(monkeypatch):
+    from benchmarks import fig12_Lambda
+
+    got = fig12_Lambda.run(N=5)
+    _force_reference_engine(monkeypatch)
+    want = fig12_Lambda.run(N=5)
+    assert got == want
+
+
+def test_fig13_register_pressure_variants():
+    from benchmarks import fig13_depth
+
+    res = fig13_depth.run(sizes=(6, 10))
+    # idealized trmm keeps constant depth; a 3-register file spills the
+    # accumulator every iteration and reproduces trmm_spill's linear
+    # depth growth exactly, while 8 registers fit the loop body (§5.1)
+    assert res["trmm"][0] == res["trmm"][1]
+    assert res["trmm@regs8"] == res["trmm"]
+    assert res["trmm@regs3"] == res["trmm_spill"]
+    assert res["trmm_spill"][1] > res["trmm_spill"][0]

@@ -206,9 +206,37 @@ def test_lulesh_block_port_exact():
         assert _graph_sig(g_blk) == _graph_sig(g_ref)
 
 
-def test_trace_kernel_reference_fallback_modes():
-    """max_regs / false_deps route through the reference scalar path."""
-    g = polybench.trace_kernel("trmm", 6, max_regs=4)
-    assert g.n_vertices > 0
-    g2 = polybench.trace_kernel("gemm", 5, false_deps=True)
-    assert g2.n_vertices > 0
+@pytest.mark.parametrize("name", ["trmm", "gemm", "2mm", "lu", "durbin"])
+@pytest.mark.parametrize("max_regs", [4, 8])
+def test_block_port_exact_under_register_pressure(name, max_regs):
+    """The §5.1 bounded-register-file study through the block-emission
+    kernels: the scalar-replay path spills/reloads exactly like the
+    per-element reference tracer (byte-identical eDAG, §3.2.1)."""
+    for cache_size in (0, 1024):
+        g_blk = polybench.trace_kernel(name, 6, cache=make_cache(cache_size),
+                                       max_regs=max_regs)
+        tr = Tracer(cache=make_cache(cache_size), max_regs=max_regs)
+        reference.REF_POLYBENCH_KERNELS[name](tr, 6, np.random.default_rng(0))
+        assert _graph_sig(g_blk) == _graph_sig(tr.edag), (name, max_regs)
+
+
+@pytest.mark.parametrize("name", ["gemm", "syr2k", "trmm_spill"])
+def test_block_port_exact_false_deps(name):
+    """WAR/WAW tracking (Fig 6a mode) through the block-emission kernels."""
+    for cache_size in (0, 1024):
+        g_blk = polybench.trace_kernel(name, 6, cache=make_cache(cache_size),
+                                       false_deps=True)
+        tr = Tracer(cache=make_cache(cache_size), false_deps=True)
+        reference.REF_POLYBENCH_KERNELS[name](tr, 6, np.random.default_rng(0))
+        assert _graph_sig(g_blk) == _graph_sig(tr.edag), name
+
+
+def test_trmm_spill_depth_grows_with_register_pressure():
+    """§5.1: a register file too small for trmm's loop body round-trips
+    the accumulator through memory and chains depth through every
+    k-iteration; idealized (or sufficient) registers keep it flat."""
+    d_ideal = polybench.trace_kernel("trmm", 10).mem_layers().D
+    d_fits = polybench.trace_kernel("trmm", 10, max_regs=8).mem_layers().D
+    d_spill = polybench.trace_kernel("trmm", 10, max_regs=3).mem_layers().D
+    assert d_fits == d_ideal
+    assert d_spill > d_ideal
