@@ -13,7 +13,17 @@ Measures, at paper-size PolyBench traces (plus HPCG for tracing):
                   ``t_inf_sweep_mem`` default;
 * **sim**         §4 simulator sweeps — the batched schedule-replay engine
                   vs the retained per-point heapq reference (written to
-                  ``BENCH_sim.json``; acceptance floor 10x at paper sizes).
+                  ``BENCH_sim.json``; acceptance floor 10x at paper sizes);
+* **grid**        alpha × m × compute_slots capacity-planning grids —
+                  ``sweep_grid`` vs per-point ``simulate_reference``, with
+                  every grid point asserted bit-identical;
+* **cache**       the persistent schedule cache across two successive
+                  *processes*: a cold child records every (m, slots)
+                  schedule, a warm child sharing the same cache directory
+                  must record none.
+
+Timed sim/grid runs pass ``use_cache=False`` so the engine numbers stay
+comparable across runs and PRs; the cache rows measure the cache itself.
 
 Writes ``BENCH_core.json`` / ``BENCH_sim.json`` next to the repo root and
 prints one CSV row per measurement.  ``--smoke`` shrinks sizes for CI
@@ -25,13 +35,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
 
 from repro.apps import hpcg, polybench, reference
 from repro.configs.paper_suite import SIM_COMPUTE_SLOTS
-from repro.core import Tracer, cost_matrix, latency_sweep
+from repro.core import (Tracer, cost_matrix, latency_sweep,
+                        simulate_reference, sweep_grid)
 
 
 def _best_of(fn, repeats: int = 5) -> float:
@@ -144,10 +159,12 @@ def bench_sim(names, N: int, n_points: int, repeats: int,
         g = polybench.trace_kernel(name, N)
         g._finalize()
         g._sim_lists()
-        latency_sweep(g, alphas[:3], m=m, compute_slots=compute_slots)  # warm
+        latency_sweep(g, alphas[:3], m=m, compute_slots=compute_slots,
+                      use_cache=False)                                # warm
 
         t_b, got = _timed_best(lambda: latency_sweep(
-            g, alphas, m=m, compute_slots=compute_slots), repeats)
+            g, alphas, m=m, compute_slots=compute_slots,
+            use_cache=False), repeats)
         t_r, want = _timed_best(lambda: latency_sweep(
             g, alphas, m=m, compute_slots=compute_slots, batch=False),
             repeats)
@@ -161,6 +178,106 @@ def bench_sim(names, N: int, n_points: int, repeats: int,
                 total_speedup=tot_r / tot_b,
                 config=dict(N=N, n_points=n_points, m=m,
                             compute_slots=compute_slots))
+
+
+def bench_grid(names, N: int, alphas, ms, css, repeats: int) -> dict:
+    """alpha × m × compute_slots capacity-planning grid: ``sweep_grid``
+    (one recorded schedule per (m, slots) pair, stacked alpha replay)
+    vs per-point ``simulate_reference``, bit-identity asserted at every
+    grid point of every kernel."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    rows = []
+    tot_g = tot_r = 0.0
+    for name in names:
+        g = polybench.trace_kernel(name, N)
+        g._finalize()
+        g._sim_lists()
+        sweep_grid(g, alphas[:2], ms=ms, compute_slots=css,
+                   use_cache=False)                                   # warm
+
+        t_g, grid = _timed_best(lambda: sweep_grid(
+            g, alphas, ms=ms, compute_slots=css, use_cache=False),
+            repeats)
+        t0 = time.perf_counter()
+        for i, a in enumerate(alphas):
+            for j, m in enumerate(ms):
+                for l, cs in enumerate(css):
+                    want = simulate_reference(g, m=m, alpha=float(a),
+                                              compute_slots=cs)
+                    assert grid[i, j, l] == want, \
+                        f"grid diverged on {name} at {(a, m, cs)}"
+        t_r = time.perf_counter() - t0
+        tot_g += t_g
+        tot_r += t_r
+        rows.append(dict(name=f"grid_{name}_N{N}", n_vertices=g.n_vertices,
+                         n_points=grid.size, grid_s=t_g, ref_s=t_r,
+                         speedup=t_r / t_g))
+    return dict(kernels=rows, total_grid_s=tot_g, total_ref_s=tot_r,
+                total_speedup=tot_r / tot_g,
+                config=dict(N=N, alphas=list(map(float, alphas)),
+                            ms=list(ms), compute_slots=list(css)))
+
+
+def _cache_child(cfg: dict) -> None:
+    """One benchmark process: trace the kernel, run the grid, report how
+    many schedules had to be recorded.  Driven twice by
+    ``bench_schedule_cache`` against one shared cache directory."""
+    from repro.core import schedule_cache as sc
+
+    g = polybench.trace_kernel(cfg["kernel"], cfg["N"])
+    g._finalize()
+    g._sim_lists()
+    sc.reset_stats()
+    t0 = time.perf_counter()
+    grid = sweep_grid(g, np.asarray(cfg["alphas"]), ms=cfg["ms"],
+                      compute_slots=cfg["compute_slots"])
+    dt = time.perf_counter() - t0
+    print("CACHE_CHILD " + json.dumps(dict(
+        seconds=dt, makespan_sum=float(grid.sum()),
+        n_vertices=g.n_vertices, **sc.stats)))
+
+
+def bench_schedule_cache(name: str, N: int, alphas, ms, css) -> dict:
+    """Persistent-cache proof across two successive *processes*: the cold
+    child records one schedule per (m, compute_slots) pair and persists
+    them; the warm child, sharing only the on-disk cache directory, must
+    record zero and produce the identical grid."""
+    cfg = dict(kernel=name, N=N, alphas=list(map(float, alphas)),
+               ms=list(ms), compute_slots=list(css))
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ, EDAN_SCHEDULE_CACHE=td,
+                   # self-contained: don't inherit caller floors/caps
+                   EDAN_SCHEDULE_CACHE_MIN="0",
+                   EDAN_SCHEDULE_CACHE_MAX=str(10 ** 6),
+                   PYTHONPATH=src + os.pathsep +
+                   os.environ.get("PYTHONPATH", ""))
+        for label in ("cold", "warm"):
+            p = subprocess.run(
+                [sys.executable, "-m", "benchmarks.perf_core",
+                 "--cache-child", json.dumps(cfg)],
+                env=env, capture_output=True, text=True,
+                cwd=os.path.dirname(src))
+            if p.returncode != 0:
+                # surface the child's traceback in the CI log before dying
+                sys.stderr.write(p.stdout + p.stderr)
+                raise RuntimeError(
+                    f"{label} cache child exited {p.returncode}")
+            line = next((ln for ln in p.stdout.splitlines()
+                         if ln.startswith("CACHE_CHILD ")), None)
+            if line is None:
+                sys.stderr.write(p.stdout + p.stderr)
+                raise RuntimeError(
+                    f"{label} cache child produced no CACHE_CHILD line")
+            out[label] = json.loads(line[len("CACHE_CHILD "):])
+    assert out["cold"]["record_runs"] > 0
+    assert out["warm"]["record_runs"] == 0, \
+        "warm process re-recorded despite a persistent schedule cache"
+    assert out["warm"]["makespan_sum"] == out["cold"]["makespan_sum"]
+    return dict(config=cfg, cold=out["cold"], warm=out["warm"],
+                speedup=out["cold"]["seconds"] / out["warm"]["seconds"])
 
 
 def run(smoke: bool = False) -> dict:
@@ -180,9 +297,21 @@ def run_sim(smoke: bool = False) -> dict:
     if smoke:
         # big enough that the one recording run amortizes (the gate floor
         # is loose, but a return to per-point simulation must still trip it)
-        return bench_sim(("gemm", "mvt", "lu"), N=14, n_points=21,
-                         repeats=2)
-    return bench_sim(polybench.PAPER_15, N=20, n_points=51, repeats=2)
+        sim = bench_sim(("gemm", "mvt", "lu"), N=14, n_points=21,
+                        repeats=2)
+        sim["grid"] = bench_grid(("gemm", "mvt"), N=12,
+                                 alphas=np.linspace(50.0, 300.0, 7),
+                                 ms=(2, 4), css=(0, 4), repeats=1)
+        sim["cache"] = bench_schedule_cache(
+            "gemm", 14, np.linspace(50.0, 300.0, 11), (2, 4), (0, 8))
+    else:
+        sim = bench_sim(polybench.PAPER_15, N=20, n_points=51, repeats=2)
+        sim["grid"] = bench_grid(polybench.PAPER_15, N=20,
+                                 alphas=np.linspace(50.0, 300.0, 13),
+                                 ms=(2, 4, 8), css=(0, 8), repeats=1)
+        sim["cache"] = bench_schedule_cache(
+            "gemm", 20, np.linspace(50.0, 300.0, 26), (2, 4, 8), (0, 8))
+    return sim
 
 
 def main() -> None:
@@ -191,7 +320,12 @@ def main() -> None:
                     help="small sizes for CI wall-clock")
     ap.add_argument("--out", default="BENCH_core.json")
     ap.add_argument("--out-sim", default="BENCH_sim.json")
+    ap.add_argument("--cache-child", metavar="JSON", default=None,
+                    help=argparse.SUPPRESS)   # bench_schedule_cache driver
     args = ap.parse_args()
+    if args.cache_child:
+        _cache_child(json.loads(args.cache_child))
+        return
     res = run(smoke=args.smoke)
     print("name,metric,vectorized,scalar,speedup")
     for group, key in (("tracing", "vps"), ("accumulate", "eps"),
@@ -215,12 +349,25 @@ def main() -> None:
     for row in sim["kernels"]:
         print(f"{row['name']},sim/sweep,{row['batch_s']:.3f}s,"
               f"{row['ref_s']:.3f}s,{row['speedup']:.1f}x")
+    for row in sim["grid"]["kernels"]:
+        print(f"{row['name']},sim/grid,{row['grid_s']:.3f}s,"
+              f"{row['ref_s']:.3f}s,{row['speedup']:.1f}x")
+    cache = sim["cache"]
+    print(f"grid_cache_{cache['config']['kernel']}"
+          f"_N{cache['config']['N']},sim/cache,"
+          f"{cache['warm']['seconds']:.3f}s,"
+          f"{cache['cold']['seconds']:.3f}s,{cache['speedup']:.2f}x "
+          f"(records cold={cache['cold']['record_runs']} "
+          f"warm={cache['warm']['record_runs']})")
     with open(args.out_sim, "w") as f:
         json.dump(sim, f, indent=2)
     print(f"# wrote {args.out_sim}")
     print(f"# simulator sweep speedup {sim['total_speedup']:.1f}x over "
           f"{len(sim['kernels'])} kernels "
           "(acceptance floor: 10x at paper sizes)")
+    print(f"# grid speedup {sim['grid']['total_speedup']:.1f}x over "
+          f"{len(sim['grid']['kernels'])} kernels; warm schedule cache: "
+          f"{cache['warm']['record_runs']} re-recordings across processes")
 
 
 if __name__ == "__main__":

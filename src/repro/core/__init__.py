@@ -13,16 +13,18 @@ from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
                    layered_upper_bound, non_memory_cost, analyze)
 from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
                       bandwidth_sweep, cost_matrix, data_movement_over_time,
-                      cost_vector, report, Report, sweep_report, t_inf_sweep)
-from .backend import LevelCSR, level_accumulate, select_backend
+                      cost_vector, grid_report, report, Report,
+                      sweep_report, t_inf_sweep)
+from .backend import LevelCSR, level_accumulate, levelize, select_backend
 from .scheduler import (simulate, simulate_reference, simulate_batch,
-                        latency_sweep)
+                        latency_sweep, sweep_grid)
+from . import schedule_cache
 from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
                   hlo_flops_estimate, hlo_hbm_bytes_estimate,
                   axis_signature_table)
 from .jaxpr import edag_from_fn, edag_from_jaxpr
 from .sensitivity import (collective_sensitivity, AxisSensitivity,
-                          axis_latency_sweep)
+                          axis_latency_sweep, axis_latency_grid)
 
 __all__ = [
     "EDag", "MemLayering", "NoCache", "SetAssociativeCache", "make_cache",
@@ -31,11 +33,12 @@ __all__ = [
     "non_memory_cost", "analyze", "lambda_abs", "lambda_rel",
     "bandwidth_utilization", "bandwidth_sweep", "cost_matrix",
     "data_movement_over_time", "cost_vector", "report", "Report",
-    "sweep_report", "t_inf_sweep", "simulate", "simulate_reference",
-    "simulate_batch", "latency_sweep", "LevelCSR", "level_accumulate",
-    "select_backend", "parse_hlo",
+    "sweep_report", "t_inf_sweep", "grid_report", "simulate",
+    "simulate_reference", "simulate_batch", "latency_sweep", "sweep_grid",
+    "LevelCSR", "level_accumulate", "levelize",
+    "select_backend", "schedule_cache", "parse_hlo",
     "analyze_collectives", "shape_bytes", "hlo_flops_estimate",
     "hlo_hbm_bytes_estimate", "axis_signature_table", "edag_from_fn",
     "edag_from_jaxpr", "collective_sensitivity", "AxisSensitivity",
-    "axis_latency_sweep",
+    "axis_latency_sweep", "axis_latency_grid",
 ]

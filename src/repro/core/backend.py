@@ -17,7 +17,12 @@ Two implementations are provided:
 * ``jax``   — a ``jax.jit``-compiled level loop whose per-level
   segmented-max/slot-update step is a pallas kernel (interpreted on CPU,
   compiled on TPU/GPU).  Auto-selected when jax sees an accelerator;
-  opt in/out explicitly with ``EDAN_BACKEND=numpy|jax``.
+  opt in/out explicitly with ``EDAN_BACKEND=numpy|jax``.  The pallas step
+  emits the ready times (``R_out``) alongside the finish times, so the
+  batched simulator's verification pass stays on the accelerator too —
+  for float64 inputs (the simulator's replay matrices) only when jax
+  runs with the x64 flag; otherwise the guard below keeps them exact on
+  the numpy kernel.
 
 Both backends implement the same (max, +) recurrence.  max is exact and
 every ``+ service`` is a single IEEE addition, so results are reproducible
@@ -62,7 +67,12 @@ def select_backend(override: Optional[str] = None) -> str:
 
 @dataclass
 class LevelCSR:
-    """Edge partition of a DAG by destination topological level.
+    """Edge partition of a DAG by destination topological level — the
+    input structure of ``level_accumulate``.
+
+    Built once per graph by ``build_level_partition`` (cached on the
+    ``EDag`` at ``_finalize`` time; built per recorded schedule by the
+    simulator for its order-augmented replay graphs).
 
     ``esrc`` holds edge sources sorted by (level(dst), dst); ``run_dst`` /
     ``run_starts`` / ``run_lens`` describe the runs of equal dst inside that
@@ -136,6 +146,11 @@ def build_level_partition(src: np.ndarray, dst: np.ndarray,
 
 def levelize(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     """Topological levels of a DAG whose edges satisfy src < dst.
+
+    ``level[v]`` is the length (edge count) of the longest path ending at
+    ``v``; sources sit at level 0.  Feed the result to
+    ``build_level_partition`` to obtain the ``LevelCSR`` that
+    ``level_accumulate`` consumes.
 
     Runs the per-edge scalar recurrence over edges sorted by destination —
     a strict left-fold that is O(E) regardless of depth, which beats the
@@ -243,34 +258,55 @@ def _jax_padded(lv: LevelCSR):
     return lv.jax_padded
 
 
-def _pallas_level_step(seg, mask, base, clamp: bool):
+def _pallas_level_step(seg, mask, fq, base, clamp: bool, has_q: bool,
+                       want_r: bool):
     """Segmented-max/slot-update inner step as a pallas kernel.
 
-    ``seg``  (R, D, k) gathered predecessor finish rows (masked invalid),
-    ``mask`` (R, D) validity, ``base`` (R, k) the dst base costs (already
-    maxed with the queue predecessor where one exists).  Returns (R, k)
-    new finish rows.  Interpreted on CPU; compiled on accelerators.
+    ``seg``  (R, D, k) gathered DAG-predecessor finish rows (masked where
+    invalid), ``mask`` (R, D) validity, ``fq`` (R, k) the queue
+    predecessor's finish rows (the slot chain; the zero sentinel row when
+    absent — only consulted when ``has_q``), ``base`` (R, k) the dst base
+    costs.  Returns the pair ``(new, ready)``: the new (R, k) finish rows
+    and, when ``want_r``, the DAG-predecessor-only maxima (the
+    simulator's ready times, 0 where a destination has no DAG
+    predecessor; ``None`` otherwise, sparing the analytic sweeps the
+    extra per-level output store).  Both halves of the recurrence come
+    out of one kernel launch, so the verification pass of the batched
+    simulator needs no numpy round-trip.  Interpreted on CPU; compiled
+    on TPU/GPU.
     """
     import jax
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
 
-    def kernel(seg_ref, mask_ref, base_ref, out_ref):
+    def kernel(seg_ref, mask_ref, fq_ref, base_ref, out_ref, r_ref=None):
         s = seg_ref[:]                          # (R, D, k)
         valid = mask_ref[:][:, :, None]
         neg = jnp.full_like(s, -jnp.inf)
         red = jnp.max(jnp.where(valid, s, neg), axis=1)
-        red = jnp.where(jnp.any(valid, axis=1), red, 0.0)
+        has = jnp.any(valid, axis=1)            # (R, 1)
+        if want_r:
+            # ready times: max over DAG predecessors only (pre-clamp,
+            # pre-slot fold), what the numpy kernel writes into R_out
+            r_ref[:] = jnp.where(has, red, 0.0)
+        if has_q:
+            # fold the queue predecessor (slot chain) in; queue-only
+            # vertices (no DAG predecessor) take the slot finish alone
+            red = jnp.where(has, jnp.maximum(red, fq_ref[:]), fq_ref[:])
+        else:
+            red = jnp.where(has, red, 0.0)
         if clamp:
             red = jnp.maximum(red, 0.0)
         out_ref[:] = red + base_ref[:]
 
     interpret = jax.default_backend() == "cpu"
-    return pl.pallas_call(
+    shape = jax.ShapeDtypeStruct(base.shape, base.dtype)
+    res = pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        out_shape=(shape, shape) if want_r else shape,
         interpret=interpret,
-    )(seg, mask, base)
+    )(seg, mask, fq, base)
+    return res if want_r else (res, None)
 
 
 def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
@@ -278,12 +314,13 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
     """jax backend: jit-compiled level loop + pallas inner step.
 
     Computes the same (max,+) recurrence as the numpy kernel in the input
-    dtype.  Queue predecessors are folded into the per-level base before
-    the pallas step (the slot-update).  ``R_out`` is not supported here —
-    the simulator verification path always runs on the numpy backend.
+    dtype.  Queue predecessors (slot chains) are folded inside the pallas
+    step, which also emits the DAG-predecessor-only maxima per level — so
+    when ``R_out`` is requested (the batched simulator's ready-time /
+    order-verification pass) the whole recurrence, finish times *and*
+    ready times, runs on the accelerator in one fused level loop with no
+    numpy round-trip.
     """
-    if R_out is not None:
-        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     import jax
     import jax.numpy as jnp
 
@@ -295,41 +332,47 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
 
     gather, dsts = _jax_padded(lv)
     has_q = lv.qpred is not None
+    want_r = R_out is not None
     qp = (lv.qpred if has_q else np.zeros(1, dtype=np.int64)).astype(np.int32)
     # the traced function depends only on these flags — the graph arrays are
     # arguments, so jax.jit re-specializes per shape on its own
-    key = (has_q, clamp)
+    key = (has_q, clamp, want_r)
 
-    def run(Fin, gat, dst_pad, qpred):
+    def run(Fin, Rin, gat, dst_pad, qpred):
         L = gat.shape[0]
 
-        def body(lvl, Fcur):
+        def body(lvl, carry):
+            Fcur, Rcur = carry
             g = gat[lvl]                        # (R, D)
             d = dst_pad[lvl]                    # (R,)
             seg = Fcur[jnp.maximum(g, 0)]       # (R, D, k)
             mask = g >= 0
             dc = jnp.maximum(d, 0)
-            if has_q:
-                # fold the queue predecessor (slot chain) in as one more
-                # segment entry; missing predecessors hit the zero
-                # sentinel row, i.e. a slot that is free at t=0
-                fq = Fcur[qpred[dc]]
-                seg = jnp.concatenate([seg, fq[:, None, :]], axis=1)
-                mask = jnp.concatenate(
-                    [mask, jnp.ones((mask.shape[0], 1), bool)], axis=1)
-            new = _pallas_level_step(seg, mask, Fcur[dc], clamp)
+            # the queue predecessor's finish (slot chain); missing
+            # predecessors hit the zero sentinel row, i.e. a slot that
+            # is free at t=0
+            fq = Fcur[qpred[dc]] if has_q else Fcur[dc]
+            new, r = _pallas_level_step(seg, mask, fq, Fcur[dc], clamp,
+                                        has_q, want_r)
             keep = (d >= 0)[:, None]
-            return Fcur.at[dc].set(jnp.where(keep, new, Fcur[dc]))
+            Fnext = Fcur.at[dc].set(jnp.where(keep, new, Fcur[dc]))
+            if want_r:
+                Rcur = Rcur.at[dc].set(jnp.where(keep, r, Rcur[dc]))
+            return Fnext, Rcur
 
-        return jax.lax.fori_loop(1, L, body, Fin)
+        return jax.lax.fori_loop(1, L, body, (Fin, Rin))
 
     fn = _JAX_CACHE.get(key)
     if fn is None:
         fn = jax.jit(run)
         _JAX_CACHE[key] = fn
-    out = fn(jnp.asarray(F), jnp.asarray(gather), jnp.asarray(dsts),
-             jnp.asarray(qp))
-    F[:] = np.asarray(out)
+    Rin = jnp.asarray(R_out) if want_r else jnp.zeros((1, F.shape[1]),
+                                                      dtype=F.dtype)
+    Fj, Rj = fn(jnp.asarray(F), Rin, jnp.asarray(gather), jnp.asarray(dsts),
+                jnp.asarray(qp))
+    F[:] = np.asarray(Fj)
+    if want_r:
+        R_out[:] = np.asarray(Rj)
     return F
 
 
@@ -340,8 +383,37 @@ def level_accumulate(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
                      backend: Optional[str] = None) -> np.ndarray:
     """Run the batched (max,+) level recurrence in-place on ``F``.
 
-    ``F`` enters holding the per-vertex base costs ((n,) or (n, k)) and
-    leaves holding the finish times."""
+    This is the engine's one shared hot loop: the analytic latency sweeps
+    (``EDag._accumulate_batch_nk``) and the batched §4 simulator replay
+    (``scheduler._ReplayPlan.replay``) both dispatch here.
+
+    Parameters
+    ----------
+    lv : LevelCSR
+        Edge partition from ``build_level_partition`` (optionally with
+        ``qpred`` / ``qonly_*`` slot chains attached by the simulator).
+    F : ndarray, shape (n,) or (n, k) — or (n+1, k) with slot chains
+        Enters holding the per-vertex base costs (one column per sweep
+        point) and leaves holding the finish times
+        ``F[v] = base[v] + max(0?, F[u] for u in preds(v))``.  Callers
+        using ``lv.qpred`` pass one extra row: the zero sentinel missing
+        queue predecessors point at.
+    clamp : bool
+        Clamp predecessor maxima at 0 (a vertex can always start at t=0).
+        The simulator replay passes False — its bases are all positive
+        and the slot chains bottom out on the zero sentinel row instead.
+    R_out : ndarray, optional
+        Same shape as ``F``; receives the DAG-predecessor-only maxima
+        (the simulator's ready times, before the slot-chain fold and the
+        clamp).  Rows of vertices without DAG predecessors are left
+        untouched (callers pass zeros).  Both backends produce it; on the
+        jax path it comes out of the same fused pallas level loop.
+    backend : str, optional
+        ``"numpy"`` / ``"jax"``; default per ``select_backend``.
+
+    Returns ``F`` (mutated in place).  For a fixed dtype the backends
+    agree bit-for-bit: max is exact and every ``+ base`` is one IEEE add.
+    """
     b = select_backend(backend)
     if b == "jax":
         try:

@@ -18,6 +18,9 @@ latency sweeps.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+
 import numpy as np
 from dataclasses import dataclass
 from typing import Optional, Sequence
@@ -216,6 +219,8 @@ class EDag:
         from .backend import build_level_partition
         lv = build_level_partition(src, dst, level, n)
         self._level_csr_cache = lv
+        self._trace_digest: Optional[str] = None
+        self._replay_plans: OrderedDict = OrderedDict()
         self._esrc_lv = lv.esrc
         self._elevel_ptr = lv.elevel_ptr
         self._run_starts = lv.run_starts
@@ -256,6 +261,28 @@ class EDag:
         self._finalize()
         lo, hi = self._indptr[v], self._indptr[v + 1]
         return self.src[lo:hi]
+
+    def trace_digest(self) -> str:
+        """Stable content hash of the simulation-relevant trace state.
+
+        Covers exactly what the §4 simulator's schedule depends on —
+        vertex count, the (canonically dst-sorted) edge list and the
+        memory classification ``is_mem``.  Costs, byte counts and labels
+        do not enter (the machine model prices vertices from alpha/unit,
+        not ``cost``), so relabeling a trace keeps its digest.  Any
+        mutation through ``add_vertex*`` / ``add_edge*`` invalidates the
+        memo and yields a new digest — this is the key the persistent
+        schedule cache (``core/schedule_cache``) is invalidated by.
+        """
+        self._finalize()
+        if self._trace_digest is None:
+            h = hashlib.sha256()
+            h.update(np.int64(self.n_vertices).tobytes())
+            h.update(self.src.tobytes())
+            h.update(self.dst.tobytes())
+            h.update(np.packbits(self.is_mem).tobytes())
+            self._trace_digest = h.hexdigest()
+        return self._trace_digest
 
     # -------------------------------------------------------------- analyses
     def _accumulate_scalar(self, base: np.ndarray) -> np.ndarray:

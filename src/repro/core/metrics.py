@@ -132,7 +132,9 @@ class Report:
 def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
                  simulate_points: bool = False,
                  compute_slots: int = 0,
-                 backend: Optional[str] = None) -> dict:
+                 backend: Optional[str] = None,
+                 mem_budget: Optional[int] = None,
+                 use_cache: bool = True) -> dict:
     """Full latency sweep in one pass (§3.3 metrics per alpha point).
 
     The analytic quantities — T-inf, Eq-2 bounds, bandwidth, Lambda — come
@@ -141,8 +143,11 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
     §4 ground-truth simulator runs as one batched schedule replay over the
     same cached CSR (bit-identical to the per-point reference engine).
     ``backend`` selects the kernel backend (numpy / jax) for the analytic
-    span/bandwidth passes and is forwarded to the simulator, whose
-    order-verification pass currently pins the numpy kernel.
+    span/bandwidth passes and is forwarded to the simulator (whose pallas
+    path emits finish and ready times in one fused level loop; float64
+    replays fall back to numpy unless jax runs with the x64 flag), as are
+    ``mem_budget`` (replay chunk bytes) and ``use_cache`` (schedule
+    reuse: per-process memo + the persistent on-disk cache).
     """
     from .cost import non_memory_cost, total_cost_bounds
     from .scheduler import latency_sweep as _sim_sweep
@@ -163,7 +168,62 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
         out["simulated"] = _sim_sweep(g, alphas, m=params.m,
                                       unit=params.unit,
                                       compute_slots=compute_slots,
-                                      backend=backend)
+                                      backend=backend,
+                                      mem_budget=mem_budget,
+                                      use_cache=use_cache)
+    return out
+
+
+def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
+                params: CostModelParams = CostModelParams(),
+                simulate_points: bool = False,
+                backend: Optional[str] = None,
+                mem_budget: Optional[int] = None,
+                use_cache: bool = True) -> dict:
+    """§3.3 metrics on the alpha × m grid — the analytic side of the
+    capacity-planning sweep — plus, with ``simulate_points=True``, the §4
+    simulated grid over the full alpha × m × compute_slots product.
+
+    W, D and C are configuration-independent and computed once; the span
+    ``t_inf`` depends only on alpha (unbounded parallelism) and comes
+    from one batched level pass.  Everything that varies with m — Eq 3
+    lambda, Eq 4 Lambda and the Eq 1-2 bounds — is evaluated over the
+    whole (n_alphas, n_ms) grid as stacked numpy expressions, exactly
+    equal to calling the scalar ``lambda_abs`` / ``total_cost_bounds``
+    per point.  The simulated grid rides ``scheduler.sweep_grid`` (one
+    recorded schedule per (m, compute_slots) pair, shared finalize,
+    schedule-cache warm starts, memory-budget chunking).
+
+    Returns ``dict(alphas, ms, compute_slots, W, D, C, lam (n_ms,),
+    t_inf (n_alphas,), t_lower/t_upper/Lam (n_alphas, n_ms), and
+    simulated (n_alphas, n_ms, n_compute_slots) when requested)``.
+    """
+    from .cost import non_memory_cost
+    from .scheduler import sweep_grid as _sim_grid
+
+    g._finalize()
+    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
+    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)], dtype=np.int64)
+    css = np.asarray([int(v) for v in np.atleast_1d(compute_slots)],
+                     dtype=np.int64)
+    lay = g.mem_layers()
+    W, D = lay.W, lay.D
+    C = non_memory_cost(g, params.unit)
+    lam = lambda_abs(W, D, ms_arr)                         # Eq 3, per m
+    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend)
+    # Eq 1-2 bounds and Eq 4 Lambda over the (alpha, m) grid in one shot
+    mem_lo = np.maximum(D, W / ms_arr)[None, :] * alphas[:, None]
+    mem_hi = lam[None, :] * alphas[:, None]
+    denom = mem_hi + C
+    Lam = np.divide(lam[None, :], denom,
+                    out=np.zeros_like(denom), where=denom > 0)
+    out = dict(alphas=alphas, ms=ms_arr, compute_slots=css,
+               W=W, D=D, C=C, lam=lam, Lam=Lam, t_inf=t_inf,
+               t_lower=mem_lo + C, t_upper=mem_hi + C)
+    if simulate_points:
+        out["simulated"] = _sim_grid(
+            g, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
+            backend=backend, mem_budget=mem_budget, use_cache=use_cache)
     return out
 
 

@@ -1,0 +1,208 @@
+"""Persistent on-disk cache of recorded §4 simulator schedules.
+
+The batched simulator (``scheduler.simulate_batch``) pays one serial
+recording run — the instrumented heapq event loop — per ``(trace, m,
+compute_slots)`` combination, then replays the recorded issue orders for
+every sweep point in one level-synchronous (max,+) pass.  For short
+sweeps (and for capacity-planning grids that touch many ``(m,
+compute_slots)`` pairs) that recording run is the dominant serial cost,
+and before this cache it was paid again by every process.
+
+This module persists recorded schedules across processes:
+
+* **Key** — ``(EDag.trace_digest(), m, compute_slots)``.  The digest
+  covers exactly what the schedule depends on (vertex count, edge list,
+  ``is_mem``); any trace mutation produces a new digest, so stale
+  entries can never be replayed against a changed graph.  The ``unit``
+  cost refines the key (separate files per unit), and every stored
+  field is cross-checked against the requested key on load — a renamed
+  or copied entry is never trusted.
+* **Safety** — a cached schedule is only ever used as the *optimistic
+  first candidate*: ``simulate_batch`` re-runs its exact ``(R, E, vid)``
+  order verification for every sweep point, so a loaded schedule that no
+  longer certifies (it can't be wrong for the keyed trace, but sweep
+  points whose issue order genuinely differs exist) simply falls back to
+  a fresh recording.  Bit-exactness versus ``simulate_reference`` is
+  therefore unconditional — the cache can only save time, never change
+  results.
+* **Location** — ``$EDAN_SCHEDULE_CACHE`` if set (the values ``off`` /
+  ``0`` / ``none`` disable persistence entirely), else
+  ``$XDG_CACHE_HOME/edan/schedules``, else ``~/.cache/edan/schedules``.
+* **Thresholds** — traces below ``$EDAN_SCHEDULE_CACHE_MIN`` vertices
+  (default 4096) skip the disk: recording them costs microseconds and a
+  busy test suite would otherwise litter the cache with tiny entries.
+  The directory is pruned to ``$EDAN_SCHEDULE_CACHE_MAX`` entries
+  (default 256) by mtime, LRU — loads touch mtime.
+
+Writes are atomic (tempfile + ``os.replace``), so concurrent processes
+sharing a cache directory race benignly: last writer wins, readers see
+either a complete entry or none.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import zipfile
+from pathlib import Path
+from typing import Optional, Tuple
+
+import numpy as np
+
+_FORMAT = 2
+_DEFAULT_MAX_ENTRIES = 256
+_DEFAULT_MIN_VERTICES = 4096
+
+#: Cumulative per-process counters, for benchmarks and tests:
+#: ``memory_hits`` / ``disk_hits`` / ``misses`` count plan lookups in
+#: ``simulate_batch``; ``record_runs`` counts instrumented event-loop
+#: recordings (the cost the cache exists to amortize); ``stores`` counts
+#: successful disk writes.
+stats = dict(memory_hits=0, disk_hits=0, misses=0, stores=0, record_runs=0)
+
+
+def reset_stats() -> None:
+    """Zero the per-process counters (tests and benchmarks)."""
+    for k in stats:
+        stats[k] = 0
+
+
+def cache_dir() -> Optional[Path]:
+    """Resolve the cache directory, or None when persistence is disabled.
+
+    Re-read from the environment on every call so tests and benchmark
+    subprocesses can redirect it without reimporting."""
+    env = os.environ.get("EDAN_SCHEDULE_CACHE", "").strip()
+    if env.lower() in ("off", "0", "none", "disabled"):
+        return None
+    if env:
+        return Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME", "").strip() or \
+        os.path.join(os.path.expanduser("~"), ".cache")
+    return Path(xdg) / "edan" / "schedules"
+
+
+def min_vertices() -> int:
+    """Smallest trace (vertex count) worth persisting to disk."""
+    try:
+        return int(os.environ.get("EDAN_SCHEDULE_CACHE_MIN", ""))
+    except ValueError:
+        return _DEFAULT_MIN_VERTICES
+
+
+def max_entries() -> int:
+    """Prune cap for the cache directory (LRU by mtime)."""
+    try:
+        return max(int(os.environ.get("EDAN_SCHEDULE_CACHE_MAX", "")), 1)
+    except ValueError:
+        return _DEFAULT_MAX_ENTRIES
+
+
+def _entry_path(d: Path, digest: str, m: int, cs: int,
+                unit: float) -> Path:
+    # unit is part of the name so workloads sweeping the same trace at
+    # different unit costs get separate entries instead of evicting each
+    # other on every run
+    return d / f"{digest[:32]}_m{m}_cs{cs}_u{float(unit):g}.npz"
+
+
+def load(digest: str, m: int, cs: int, n: int,
+         unit: float = 1.0) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray]]:
+    """Fetch a recorded schedule ``(topo, O_mem, O_alu, level)``.
+
+    ``level`` is the persisted topological level assignment of the
+    *order-augmented* replay graph (in pop-order vertex space) — it lets
+    a warm process skip the O(E) serial ``levelize`` pass as well as the
+    recording run, so plan reconstruction is pure vectorized numpy.
+
+    Misses (returns None) on: persistence disabled, absent entry,
+    format-version or ``unit`` mismatch, or an entry whose arrays do not
+    describe ``n`` vertices (a truncated or foreign file — never
+    trusted; the scheduler re-validates the arrays structurally before
+    replaying them in any case)."""
+    d = cache_dir()
+    if d is None:
+        return None
+    p = _entry_path(d, digest, m, cs, unit)
+    try:
+        with np.load(p) as z:
+            if int(z["format"]) != _FORMAT or int(z["n"]) != n or \
+                    float(z["unit"]) != float(unit) or \
+                    int(z["m"]) != int(m) or \
+                    int(z["compute_slots"]) != int(cs) or \
+                    str(z["digest"]) != digest:
+                # every stored field must corroborate the requested key —
+                # a renamed/copied entry is never trusted
+                return None
+            topo = np.asarray(z["topo"], dtype=np.int64)
+            O_mem = np.asarray(z["O_mem"], dtype=np.int64)
+            O_alu = np.asarray(z["O_alu"], dtype=np.int64)
+            level = np.asarray(z["level"], dtype=np.int64)
+    except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+        return None
+    if any(arr.ndim != 1 for arr in (topo, O_mem, O_alu, level)):
+        return None
+    if len(topo) != n or len(level) != n or len(O_mem) + len(O_alu) > n:
+        return None
+    try:
+        os.utime(p)                    # touch: keep hot entries off the
+    except OSError:                    # prune list
+        pass
+    return topo, O_mem, O_alu, level
+
+
+def store(digest: str, m: int, cs: int, n: int, unit: float,
+          topo: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
+          level: np.ndarray) -> bool:
+    """Persist a recorded schedule; returns True on a successful write."""
+    d = cache_dir()
+    if d is None or n < min_vertices():
+        return False
+    tmp = None
+    try:
+        d.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, format=_FORMAT, digest=digest, n=n,
+                                unit=float(unit), m=m, compute_slots=cs,
+                                topo=topo, O_mem=O_mem, O_alu=O_alu,
+                                level=level)
+        os.replace(tmp, _entry_path(d, digest, m, cs, unit))
+        tmp = None
+    except OSError:
+        return False
+    finally:
+        if tmp is not None:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+    stats["stores"] += 1
+    prune()
+    return True
+
+
+def prune(cap: Optional[int] = None) -> int:
+    """Drop the oldest entries beyond the cap; returns how many went."""
+    d = cache_dir()
+    if d is None or not d.is_dir():
+        return 0
+    cap = max_entries() if cap is None else max(int(cap), 0)
+    try:
+        entries = sorted(d.glob("*.npz"),
+                         key=lambda p: p.stat().st_mtime)
+    except OSError:
+        return 0
+    gone = 0
+    for p in entries[:max(len(entries) - cap, 0)]:
+        try:
+            p.unlink()
+            gone += 1
+        except OSError:
+            pass
+    return gone
+
+
+def clear() -> int:
+    """Remove every cached schedule; returns how many were removed."""
+    return prune(cap=0)

@@ -43,23 +43,43 @@ Two engines implement the identical machine model:
 The successor CSR and in-degree arrays are computed once at
 ``EDag._finalize`` and shared by every engine, so a latency sweep pays
 graph finalization exactly once.
+
+Recorded schedules are reused at three tiers: within one call (all alpha
+points share one plan), within one process (a small per-``EDag`` LRU of
+``_ReplayPlan`` objects, so grids over (m, compute_slots) and repeated
+sweeps skip re-recording), and across processes (the persistent
+``schedule_cache``, keyed by ``(trace digest, m, compute_slots)``).
+Every reused schedule goes through the same per-point ``(R, E, vid)``
+verification as a fresh one, so reuse can never change results — points
+a stale schedule fails to certify simply re-record.
+
+``sweep_grid`` evaluates the full alpha × m × compute_slots product:
+one ``_finalize``/``_sim_lists`` build, one plan per (m, compute_slots)
+pair, and one stacked (max,+) replay per plan covering the whole alpha
+axis, chunked under a memory budget so million-vertex traces stream
+through the level kernel instead of materializing (n, |grid|) matrices.
 """
 from __future__ import annotations
 
 import heapq
+import os
 from typing import Optional
 
 import numpy as np
 
 from . import backend as _bk
+from . import schedule_cache as _sc
 from .graph import EDag
 
 # Point-chunk memory budget for the batched replay: the per-master pass
 # holds ~3 (n_vertices, chunk) float64 matrices (base/finish, ready times,
-# scratch), so chunk ~ budget / (24 * n).
+# scratch), so chunk ~ budget / (24 * n).  Override per call with
+# ``mem_budget=`` or process-wide with $EDAN_REPLAY_MEM_BUDGET (bytes).
 _REPLAY_MEM_BUDGET = 512 * 1024 * 1024
 # Below this many sweep points the recording run cannot amortize.
 _MIN_BATCH_POINTS = 2
+# Per-EDag in-process plan memo: one entry per (m, compute_slots) pair.
+_PLAN_MEMO_CAP = 8
 
 
 # --------------------------------------------------------------- event loop
@@ -162,13 +182,20 @@ class _ReplayPlan:
 
     Holds the order-augmented eDAG in pop-order relabeling (a topological
     order of the augmented graph) as a ``backend.LevelCSR``, plus the issue
-    orders and the arrays the per-point order verification needs."""
+    orders and the arrays the per-point order verification needs.
+
+    ``level`` may carry a previously persisted level assignment of the
+    augmented graph (from the schedule cache); it is validated against
+    the augmented edges and recomputed if it does not respect them, so a
+    corrupt cache entry degrades to a fresh ``levelize``, never to a
+    wrong evaluation order."""
 
     __slots__ = ("n", "m", "cs", "topo", "rank", "lv", "is_mem_topo",
-                 "O_mem", "O_alu", "Om_rel", "Oa_rel")
+                 "O_mem", "O_alu", "Om_rel", "Oa_rel", "level_aug")
 
     def __init__(self, g: EDag, topo: np.ndarray, O_mem: np.ndarray,
-                 O_alu: np.ndarray, m: int, cs: int):
+                 O_alu: np.ndarray, m: int, cs: int,
+                 level: Optional[np.ndarray] = None):
         n = g.n_vertices
         self.n, self.m, self.cs = n, m, cs
         # the recorded pop order (finish time, vid) is a linear extension
@@ -191,8 +218,20 @@ class _ReplayPlan:
         src_r, dst_r = rank[g.src], rank[g.dst]
 
         qdst = np.nonzero(qpred < n)[0]
-        level = _bk.levelize(np.concatenate([src_r, qpred[qdst]]),
-                             np.concatenate([dst_r, qdst]), n)
+        asrc = np.concatenate([src_r, qpred[qdst]])
+        adst = np.concatenate([dst_r, qdst])
+        # a usable persisted level assignment must be a 1-D array of n
+        # in-range values (valid assignments are < n: a longest path has
+        # at most n-1 edges — this also bounds the per-level arrays the
+        # partition builder allocates) that respects every augmented edge
+        if level is not None and (
+                getattr(level, "ndim", 0) != 1 or len(level) != n or
+                (n and (level.min() < 0 or level.max() >= n)) or
+                (len(asrc) and not (level[asrc] < level[adst]).all())):
+            level = None              # invalid persisted levels: recompute
+        if level is None:
+            level = _bk.levelize(asrc, adst, n)
+        self.level_aug = level
         lv = _bk.build_level_partition(src_r, dst_r, level, n)
         lv.qpred = qpred
         # vertices whose only predecessor is the slot chain
@@ -273,24 +312,149 @@ def _verify_class(g: EDag, plan: _ReplayPlan, F: np.ndarray, R: np.ndarray,
     return pair_ok.all(axis=0)
 
 
-def _points_chunk(n: int, k: int) -> int:
+def _replay_mem_budget(override: Optional[int] = None) -> int:
+    """Replay working-set budget in bytes: arg > $EDAN_REPLAY_MEM_BUDGET >
+    default.  Bounds the (n, chunk) matrices of one stacked pass so
+    HPCG/LULESH-size traces stream through the level kernel."""
+    if override is not None:
+        return max(int(override), 1)
+    try:
+        return max(int(os.environ.get("EDAN_REPLAY_MEM_BUDGET", "")), 1)
+    except ValueError:
+        return _REPLAY_MEM_BUDGET
+
+
+def _points_chunk(n: int, k: int, mem_budget: Optional[int] = None) -> int:
     """Balanced point chunk under the replay memory budget: the level loop
     pays per-level dispatch once per chunk, so fewer, equal-sized chunks
     beat one full chunk plus a sliver."""
-    cap = max(4, int(_REPLAY_MEM_BUDGET // max(24 * n, 1)))
+    cap = max(4, int(_replay_mem_budget(mem_budget) // max(24 * n, 1)))
     n_chunks = -(-k // cap)
     return -(-k // n_chunks)
 
 
+# ----------------------------------------------------------- schedule reuse
+
+def _memo_plan(g: EDag, key, plan: _ReplayPlan) -> None:
+    memo = getattr(g, "_replay_plans", None)
+    if memo is None:
+        return
+    memo[key] = plan
+    memo.move_to_end(key)
+    while len(memo) > _PLAN_MEMO_CAP:
+        memo.popitem(last=False)
+
+
+def _plan_from_cache(g: EDag, m: int, cs: int, topo, O_mem, O_alu,
+                     level) -> Optional[_ReplayPlan]:
+    """Rebuild a replay plan from persisted arrays, or None if they fail
+    structural validation.
+
+    The checks establish exactly the preconditions the bit-exactness
+    argument needs from a *candidate* schedule: ``topo`` is a permutation
+    that linearizes the DAG edges, the slot chains run forward in that
+    order by construction, and the issue orders partition the memory /
+    ALU vertex sets.  Whether the candidate is the *right* schedule for a
+    given sweep point is then decided by the usual per-point (R, E, vid)
+    verification — a wrong-but-well-formed schedule costs a re-record,
+    never a wrong makespan."""
+    n = g.n_vertices
+    W = int(g.is_mem.sum())
+    for arr in (topo, O_mem, O_alu):
+        if getattr(arr, "ndim", 0) != 1:
+            return None
+    if len(topo) != n or len(O_mem) != W or \
+            len(O_alu) != ((n - W) if cs else 0):
+        return None
+    for arr in (topo, O_mem, O_alu):
+        if len(arr) and not ((arr >= 0) & (arr < n)).all():
+            return None
+    # topo a permutation that linearizes the DAG edges
+    if (np.bincount(topo, minlength=n) != 1).any():
+        return None
+    rank = np.empty(n, dtype=np.int64)
+    rank[topo] = np.arange(n)
+    if len(g.src) and not (rank[g.src] < rank[g.dst]).all():
+        return None                   # not a linear extension of the eDAG
+    # the slot chains the orders imply must also run forward in rank —
+    # together with the check above this makes every augmented edge
+    # satisfy src < dst, the levelize/level-partition precondition the
+    # replay's correctness argument rests on
+    if len(O_mem) > m and not \
+            (rank[O_mem[:-m]] < rank[O_mem[m:]]).all():
+        return None
+    if cs and len(O_alu) > cs and not \
+            (rank[O_alu[:-cs]] < rank[O_alu[cs:]]).all():
+        return None
+    # O_mem a permutation of the memory vertices; O_alu of the rest
+    if W and (np.bincount(O_mem, minlength=n) !=
+              g.is_mem.astype(np.int64)).any():
+        return None
+    if cs and len(O_alu) and \
+            (np.bincount(O_alu, minlength=n) !=
+             (~g.is_mem).astype(np.int64)).any():
+        return None
+    return _ReplayPlan(g, topo, O_mem, O_alu, m, cs, level=level)
+
+
+def _get_plan(g: EDag, m: int, cs: int,
+              unit: float) -> Optional[_ReplayPlan]:
+    """Look up a reusable replay plan: per-process memo, then disk."""
+    key = (m, cs, float(unit))
+    memo = getattr(g, "_replay_plans", None)
+    if memo is not None and key in memo:
+        memo.move_to_end(key)
+        _sc.stats["memory_hits"] += 1
+        return memo[key]
+    if g.n_vertices >= _sc.min_vertices():
+        got = _sc.load(g.trace_digest(), m, cs, g.n_vertices, unit)
+        if got is not None:
+            plan = _plan_from_cache(g, m, cs, *got)
+            if plan is not None:
+                _sc.stats["disk_hits"] += 1
+                _memo_plan(g, key, plan)
+                return plan
+    _sc.stats["misses"] += 1
+    return None
+
+
+def _record_plan(g: EDag, sim_lists, m: int, cs: int, a0: float,
+                 unit: float, persist: bool):
+    """One instrumented reference run -> (master makespan, replay plan);
+    the plan is memoized and, for large traces, persisted to disk."""
+    _sc.stats["record_runs"] += 1
+    mk0, topo, O_mem, O_alu = _event_loop(
+        g.is_mem, sim_lists, m, a0, unit, cs, record=True)
+    plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs)
+    if persist:
+        _memo_plan(g, (m, cs, float(unit)), plan)
+        if g.n_vertices >= _sc.min_vertices():
+            _sc.store(g.trace_digest(), m, cs, g.n_vertices, unit,
+                      topo, O_mem, O_alu, plan.level_aug)
+    return mk0, plan
+
+
 def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                    compute_slots: int = 0,
-                   backend: Optional[str] = None) -> np.ndarray:
+                   backend: Optional[str] = None,
+                   mem_budget: Optional[int] = None,
+                   use_cache: bool = True) -> np.ndarray:
     """Simulated makespans for a whole latency sweep in one batched pass.
 
     Bit-identical to ``[simulate_reference(g, m, a, unit, compute_slots)
     for a in alphas]`` — the schedule-replay engine re-verifies its
     recorded issue order for every point and falls back to fresh recordings
     (at worst, the reference engine per point) whenever the order shifts.
+
+    ``use_cache`` (default True) reuses recorded schedules — the
+    per-process plan memo and, for traces of at least
+    ``schedule_cache.min_vertices()`` vertices, the persistent on-disk
+    cache keyed by ``(trace digest, m, compute_slots)``.  A reused
+    schedule is only an optimistic first candidate: every point is still
+    verified, so the cache never changes results.  ``mem_budget`` bounds
+    the bytes of one stacked replay chunk (default 512 MB, or
+    $EDAN_REPLAY_MEM_BUDGET) so large traces stream through the level
+    kernel.
     """
     g._finalize()
     alphas = np.asarray(alphas, dtype=np.float64)
@@ -311,13 +475,21 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
         return out
 
     remaining = np.arange(P)
+    plan = _get_plan(g, m, cs, unit) if use_cache else None
+    mk0: Optional[float] = None       # master makespan; None for reused plans
+    persist = use_cache and plan is None
     while remaining.size:
-        a0 = float(alphas[remaining[0]])
-        mk0, topo, O_mem, O_alu = _event_loop(
-            g.is_mem, sim_lists, m, a0, unit, cs, record=True)
-        plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs)
+        reused = plan is not None and mk0 is None
+        if plan is None:
+            a0 = float(alphas[remaining[0]])
+            mk0, plan = _record_plan(g, sim_lists, m, cs, a0, unit,
+                                     persist=persist)
+            # only the sweep's first recording is worth keeping: later
+            # ones are per-point fallbacks for tie-shifted orders and
+            # would thrash the cache with alpha-specific schedules
+            persist = False
         ok = np.zeros(remaining.size, dtype=bool)
-        chunk = _points_chunk(n, remaining.size)
+        chunk = _points_chunk(n, remaining.size, mem_budget)
         for c0 in range(0, remaining.size, chunk):
             sel = remaining[c0:c0 + chunk]
             F, R = plan.replay(alphas[sel], unit, backend=backend)
@@ -327,18 +499,29 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
             mk = F.max(axis=0)
             out[sel[okc]] = mk[okc]
             ok[c0:c0 + chunk] = okc
-        if not ok[0]:
+        if not ok[0] and mk0 is not None:
             # the master's own schedule always certifies; if the check ever
             # disagrees, trust its recorded makespan and keep making progress
             out[remaining[0]] = mk0
             ok[0] = True
+        if reused and not ok.all():
+            # the reused plan failed part of this sweep — let the next
+            # fresh recording replace it (memo + disk), so repeated
+            # sweeps converge on a schedule that certifies their points
+            # instead of re-paying the serial recording forever
+            persist = use_cache
         remaining = remaining[~ok]
+        # anything a reused plan failed to certify re-records from a fresh
+        # master on the next iteration (guaranteed progress from then on)
+        plan, mk0 = None, None
     return out
 
 
 def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                   compute_slots: int = 0, batch: Optional[bool] = None,
-                  backend: Optional[str] = None) -> np.ndarray:
+                  backend: Optional[str] = None,
+                  mem_budget: Optional[int] = None,
+                  use_cache: bool = True) -> np.ndarray:
     """Simulated makespan across a latency sweep (the §4 gem5 protocol).
 
     One finalize builds the shared CSR; the batched schedule-replay engine
@@ -351,8 +534,47 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                  else bool(batch))
     if use_batch:
         return simulate_batch(g, alphas, m=m, unit=unit,
-                              compute_slots=compute_slots, backend=backend)
+                              compute_slots=compute_slots, backend=backend,
+                              mem_budget=mem_budget, use_cache=use_cache)
     sim_lists = g._sim_lists()   # shared: the sweep pays finalization once
     return np.array([_event_loop(g.is_mem, sim_lists, int(m), float(a),
                                  float(unit), int(compute_slots))
                      for a in alphas])
+
+
+def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
+               unit: float = 1.0, backend: Optional[str] = None,
+               mem_budget: Optional[int] = None,
+               use_cache: bool = True) -> np.ndarray:
+    """Simulated makespans over the full alpha × m × compute_slots grid.
+
+    The capacity-planning what-if: one call evaluates every hardware
+    configuration point of the product, returning an array of shape
+    ``(len(alphas), len(ms), len(compute_slots))`` where entry
+    ``[i, j, l]`` is bit-identical to
+    ``simulate_reference(g, m=ms[j], alpha=alphas[i], unit=unit,
+    compute_slots=compute_slots[l])``.
+
+    Cost structure: the whole grid shares one ``_finalize`` /
+    ``_sim_lists`` build; each ``(m, compute_slots)`` pair needs one
+    recorded schedule (in-process memo / persistent ``schedule_cache``
+    hits skip even that) and evaluates its entire alpha axis as stacked
+    (max,+) passes through ``backend.level_accumulate`` — chunked under
+    ``mem_budget`` so million-vertex traces stream through the level
+    kernel instead of materializing an (n, |grid|) matrix.  Alpha is
+    therefore the cheap axis; m and compute_slots each cost at most one
+    serial recording run per value, paid once per process ever for
+    cached traces.
+    """
+    g._finalize()
+    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
+    ms = [int(v) for v in np.atleast_1d(ms)]
+    css = [int(v) for v in np.atleast_1d(compute_slots)]
+    out = np.zeros((len(alphas), len(ms), len(css)))
+    for j, mm in enumerate(ms):
+        for l, cs in enumerate(css):
+            out[:, j, l] = simulate_batch(
+                g, alphas, m=mm, unit=unit, compute_slots=cs,
+                backend=backend, mem_budget=mem_budget,
+                use_cache=use_cache)
+    return out

@@ -87,6 +87,46 @@ def axis_latency_sweep(per_axis: Dict[str, AxisSensitivity],
                        Lam=Lam[i]) for i, axis in enumerate(axes)}
 
 
+def axis_latency_grid(per_axis: Dict[str, AxisSensitivity],
+                      alphas: Sequence[float],
+                      ms: Sequence[int],
+                      step_seconds: float) -> dict:
+    """Eq 3-4 over the full (axis, m, alpha) product in one stacked pass.
+
+    Generalizes ``axis_latency_sweep`` by also sweeping m — the number of
+    concurrently-progressing collective channels per chip, i.e. how much
+    communication/computation overlap the runtime can sustain.  That is
+    the second knob of the disaggregation capacity-planning question
+    ("how much latency can we tolerate *if* we also widen the channel
+    pool?"), mirroring ``scheduler.sweep_grid`` on the analytic side.
+
+    lambda is recomputed per (axis, m) from the axis's W and D via Eq 3;
+    the projected step-time deltas and relative sensitivities then come
+    from one broadcast (n_axes, n_ms, n_alphas) expression — no
+    Python loop over any axis of the grid.  Returns
+    ``{axis: {alphas, ms, lam (n_ms,), lam_seconds (n_ms, n_alphas),
+    Lam (n_ms, n_alphas)}}``.
+    """
+    alphas = np.asarray(alphas, dtype=np.float64)
+    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)],
+                        dtype=np.int64)
+    axes = list(per_axis)
+    if not axes:
+        return {}
+    W = np.array([per_axis[a].W for a in axes], dtype=np.float64)
+    D = np.array([per_axis[a].D for a in axes], dtype=np.float64)
+    base = np.maximum(step_seconds -
+                      np.array([per_axis[a].lam_seconds for a in axes]), 0.0)
+    lam = lambda_abs(W[:, None], D[:, None], ms_arr[None, :])
+    lam_seconds = lam[:, :, None] * alphas[None, None, :]
+    denom = lam_seconds + base[:, None, None]
+    Lam = np.divide(lam_seconds, denom,
+                    out=np.zeros_like(denom), where=denom > 0)
+    return {axis: dict(alphas=alphas, ms=ms_arr, lam=lam[i],
+                       lam_seconds=lam_seconds[i], Lam=Lam[i])
+            for i, axis in enumerate(axes)}
+
+
 def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],
                            step_seconds: float) -> dict:
     """Relative sensitivity per axis: Eq 4 with C = everything that is not

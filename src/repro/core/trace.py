@@ -443,6 +443,34 @@ class Tracer:
         Returns the new vertex ids, in program order (contiguous on the
         vectorized path; under the bounded-register-file / false-deps
         modes, spill stores and reloads may be interleaved between them).
+
+        Spill-model parameters (set on the ``Tracer``, honored here):
+
+        ``max_regs``    §3.2.1 bounded register file.  ``None`` (default)
+                        models the paper's unlimited virtual registers and
+                        takes the vectorized fast path.  ``K`` caps live
+                        values at K: admitting a vertex beyond capacity
+                        evicts one live range (``spill_policy``: "fifo"
+                        evicts the oldest — Chaitin-style, what makes
+                        trmm's accumulator spill in §5.1 — "lru" the
+                        least recently touched), emitting a spill *store*
+                        vertex; touching a spilled operand emits a reload
+                        *load* vertex depending on that store.  Both go
+                        through the cache model, so spill traffic also
+                        shifts hit/miss classification.  Blocks then
+                        replay op-by-op in program order
+                        (``_emit_block_scalar``) so spills land exactly
+                        where the per-element API would put them.
+        ``false_deps``  Fig 6a mode: stores additionally depend on the
+                        previous writer (WAW) and all readers (WAR) of
+                        their address.  Also forces the scalar replay —
+                        the reader/writer maps are per-op global state.
+
+        Both parameters preserve the emitted vertex/edge/cache-access
+        stream byte-for-byte versus the equivalent scalar calls; the §5.1
+        trmm study and all 18 PolyBench kernels are asserted exact in
+        ``tests/test_vector_engine.py`` across max_regs × false_deps ×
+        cache configurations.
         """
         if self._needs_scalar_replay():
             return self._emit_block_scalar(kind, addr, nbytes, deps, label)
@@ -610,6 +638,17 @@ class BlockBuilder:
     producer), or None (constants).  ``scan`` adds the loop-carried edge
     from the previous iteration's slot vertex (``init`` feeds iteration 0).
     RAW edges through memory are derived by ``emit_block``.
+
+    Spill-model interaction: when the owning ``Tracer`` has a bounded
+    register file (``max_regs=K``) or false dependencies enabled, the
+    emitted nest replays through the scalar emitters in program order, so
+    spill stores/reloads interleave between slot vertices exactly as in
+    the per-element API.  ``scan`` orders its loop-carried operand
+    *first* for this reason: the reference kernels write
+    ``acc = alu(acc, x)`` and the register model touches operands left to
+    right, so the accumulator's reload (if it was evicted) lands before
+    ``x``'s — keeping block-emitted traces byte-identical to
+    ``apps/reference.py`` even under register pressure (§5.1).
     """
 
     def __init__(self, tr: Tracer):

@@ -102,10 +102,63 @@ def test_jax_kernel_with_slot_chain_f32():
     assert np.array_equal(F_np, F_jx)
 
 
+def test_jax_kernel_R_out_matches_numpy_f32():
+    """Ready times come out of the same fused pallas level loop as the
+    finish times — no numpy round-trip — and match the numpy kernel's
+    R_out bit-for-bit, with and without the clamp."""
+    g = _random_edag(21)
+    lv = g._level_csr()
+    rng = np.random.default_rng(22)
+    base = rng.standard_normal((g.n_vertices, 5)).astype(np.float32)
+    for clamp in (True, False):
+        R_np = np.zeros_like(base)
+        R_jx = np.zeros_like(base)
+        F_np = level_accumulate(lv, base.copy(), clamp=clamp, R_out=R_np,
+                                backend="numpy")
+        F_jx = level_accumulate(lv, base.copy(), clamp=clamp, R_out=R_jx,
+                                backend="jax")
+        assert np.array_equal(F_np, F_jx)
+        assert np.array_equal(R_np, R_jx)
+
+
+def test_jax_kernel_R_out_with_slot_chain_f32():
+    """The full simulator-replay shape — qpred slot chains, queue-only
+    vertices, zero sentinel row, clamp off — produces identical finish
+    AND ready matrices on both backends."""
+    from repro.core.scheduler import _ReplayPlan, _event_loop
+
+    rng = np.random.default_rng(31)
+    g = EDag()
+    for i in range(50):
+        g.add_vertex(is_mem=bool(rng.random() < 0.6))
+        for j in range(i):
+            if rng.random() < 0.1:
+                g.add_edge(j, i)
+    g._finalize()
+    _, topo, O_mem, O_alu = _event_loop(
+        g.is_mem, g._sim_lists(), 2, 80.0, 1.0, 3, record=True)
+    plan = _ReplayPlan(g, topo, O_mem, O_alu, 2, 3)
+    k = 4
+    base = np.empty((g.n_vertices + 1, k), dtype=np.float32)
+    base[:-1] = np.where(plan.is_mem_topo[:, None],
+                         np.linspace(40, 160, k, dtype=np.float32)[None],
+                         np.float32(1.0))
+    base[-1] = 0.0
+    R_np = np.zeros_like(base)
+    R_jx = np.zeros_like(base)
+    F_np = level_accumulate(plan.lv, base.copy(), clamp=False, R_out=R_np,
+                            backend="numpy")
+    F_jx = level_accumulate(plan.lv, base.copy(), clamp=False, R_out=R_jx,
+                            backend="jax")
+    assert np.array_equal(F_np, F_jx)
+    assert np.array_equal(R_np, R_jx)
+
+
 def test_simulate_batch_jax_backend_exact():
     """The batched simulator stays bit-identical to the reference when the
-    jax backend is requested (the verification pass pins the numpy kernel;
-    the analytic replay may run on device)."""
+    jax backend is requested (the float64 guard routes the replay to the
+    numpy kernel on non-x64 jax; with x64, finish and ready times both
+    come off the accelerator path)."""
     g = _random_edag(11)
     alphas = [50.0, 125.0, 300.0]
     got = simulate_batch(g, alphas, m=3, compute_slots=2, backend="jax")

@@ -1,0 +1,333 @@
+"""Persistent schedule cache: digests, hit/miss/invalidation, safety.
+
+The cache may only ever save time: every test that exercises a cache hit
+also asserts bit-identical makespans against the retained heapq
+reference, including adversarial cases where the cached entry is
+corrupt, malformed, or a well-formed schedule for the *wrong* machine
+configuration.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EDag, latency_sweep, simulate_reference,
+                        sweep_grid, schedule_cache as sc)
+from repro.core.scheduler import _plan_from_cache
+
+
+def build_graph(seed: int = 0, n: int = 60, p_edge: float = 0.1,
+                label: str = "") -> EDag:
+    rng = np.random.default_rng(seed)
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < 0.5), nbytes=8.0,
+                     label=label)
+        for j in range(i):
+            if rng.random() < p_edge:
+                g.add_edge(j, i)
+    g._finalize()
+    return g
+
+
+@pytest.fixture
+def cache_env(tmp_path, monkeypatch):
+    """Redirect the schedule cache to a private tmp dir, no size floor."""
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE", str(tmp_path))
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MIN", "0")
+    sc.reset_stats()
+    return tmp_path
+
+
+# ------------------------------------------------------------------ digests
+
+def test_trace_digest_deterministic_across_objects():
+    assert build_graph().trace_digest() == build_graph().trace_digest()
+
+
+def test_trace_digest_ignores_costs_and_labels():
+    a = build_graph(label="x")
+    b = build_graph(label="y")
+    assert a.trace_digest() == b.trace_digest()
+    c = EDag()
+    d = EDag()
+    c.add_vertex(cost=1.0, is_mem=True)
+    d.add_vertex(cost=7.0, is_mem=True, nbytes=64.0)
+    assert c.trace_digest() == d.trace_digest()
+
+
+def test_trace_digest_changes_on_mutation():
+    g = build_graph()
+    d0 = g.trace_digest()
+    g.add_vertex(is_mem=False)
+    d1 = g.trace_digest()
+    assert d1 != d0
+    g.add_edge(0, g.n_vertices - 1)
+    d2 = g.trace_digest()
+    assert d2 != d1
+    # flipping a memory classification is a different trace too
+    h = EDag()
+    h.add_vertex(is_mem=True)
+    k = EDag()
+    k.add_vertex(is_mem=False)
+    assert h.trace_digest() != k.trace_digest()
+
+
+# ------------------------------------------------------------ store / load
+
+def test_store_load_roundtrip(cache_env):
+    g = build_graph()
+    topo = np.arange(g.n_vertices, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    level = np.zeros(g.n_vertices, dtype=np.int64)
+    assert sc.store(g.trace_digest(), 4, 0, g.n_vertices, 1.0,
+                    topo, O_mem, O_alu, level)
+    got = sc.load(g.trace_digest(), 4, 0, g.n_vertices, 1.0)
+    assert got is not None
+    t, om, oa, lv = got
+    assert np.array_equal(t, topo) and np.array_equal(om, O_mem)
+    assert np.array_equal(oa, O_alu) and np.array_equal(lv, level)
+    # wrong key dimensions miss
+    assert sc.load(g.trace_digest(), 3, 0, g.n_vertices, 1.0) is None
+    assert sc.load(g.trace_digest(), 4, 1, g.n_vertices, 1.0) is None
+    assert sc.load(g.trace_digest(), 4, 0, g.n_vertices, 2.0) is None
+    assert sc.load(g.trace_digest(), 4, 0, g.n_vertices + 1, 1.0) is None
+
+
+def test_load_rejects_corrupt_entry(cache_env):
+    g = build_graph()
+    topo = np.arange(g.n_vertices, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    sc.store(g.trace_digest(), 4, 0, g.n_vertices, 1.0, topo, O_mem,
+             np.zeros(0, dtype=np.int64),
+             np.zeros(g.n_vertices, dtype=np.int64))
+    (entry,) = list(cache_env.glob("*.npz"))
+    entry.write_bytes(b"definitely not a zip archive")
+    assert sc.load(g.trace_digest(), 4, 0, g.n_vertices, 1.0) is None
+
+
+def test_disabled_and_threshold_write_nothing(cache_env, monkeypatch):
+    g = build_graph()
+    alphas = [50.0, 100.0, 200.0]
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE", "off")
+    latency_sweep(g, alphas)
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE", str(cache_env))
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MIN", "1000000")
+    latency_sweep(build_graph(seed=1), alphas)
+    assert list(cache_env.glob("*.npz")) == []
+
+
+def test_prune_cap(cache_env, monkeypatch):
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MAX", "2")
+    g = build_graph()
+    alphas = [50.0, 100.0, 200.0]
+    sweep_grid(g, alphas, ms=[1, 2, 3, 4], compute_slots=[0])
+    assert len(list(cache_env.glob("*.npz"))) <= 2
+    assert sc.clear() >= 1
+    assert list(cache_env.glob("*.npz")) == []
+
+
+# ------------------------------------------------------- hits and validity
+
+def test_disk_hit_skips_recording_and_stays_exact(cache_env):
+    alphas = [50.0, 100.0, 150.0, 300.0]
+    cold = latency_sweep(build_graph(), alphas, m=3, compute_slots=2)
+    assert sc.stats["record_runs"] == 1 and sc.stats["stores"] == 1
+
+    sc.reset_stats()
+    g2 = build_graph()            # fresh object: simulates a new process
+    warm = latency_sweep(g2, alphas, m=3, compute_slots=2)
+    assert sc.stats["disk_hits"] == 1 and sc.stats["record_runs"] == 0
+    assert np.array_equal(cold, warm)
+    want = np.array([simulate_reference(g2, m=3, alpha=a, compute_slots=2)
+                     for a in alphas])
+    assert np.array_equal(warm, want)
+
+    # same object again: the in-process memo answers, not the disk
+    sc.reset_stats()
+    assert np.array_equal(
+        latency_sweep(g2, alphas, m=3, compute_slots=2), want)
+    assert sc.stats["memory_hits"] == 1 and sc.stats["disk_hits"] == 0
+    assert sc.stats["record_runs"] == 0
+
+
+def test_mutated_trace_misses_and_rerecords(cache_env):
+    alphas = [50.0, 100.0, 200.0]
+    g = build_graph()
+    latency_sweep(g, alphas)
+    g.add_vertex(is_mem=True)         # mutation: new digest, stale entry
+    sc.reset_stats()
+    got = latency_sweep(g, alphas)
+    assert sc.stats["misses"] == 1 and sc.stats["record_runs"] == 1
+    want = np.array([simulate_reference(g, alpha=a) for a in alphas])
+    assert np.array_equal(got, want)
+
+
+def test_wrong_machine_schedule_is_rejected_by_verification(cache_env):
+    """A well-formed cached schedule for the wrong (m, compute_slots) must
+    fall through per-point verification to a fresh recording, keeping the
+    result bit-identical — the cache can never change answers."""
+    from repro.core.scheduler import _event_loop
+
+    g = build_graph(seed=3)
+    alphas = [50.0, 100.0, 200.0]
+    # record a legitimate schedule under m=1, then plant it under m=4's key
+    _, topo, O_mem, O_alu = _event_loop(
+        g.is_mem, g._sim_lists(), 1, 50.0, 1.0, 0, record=True)
+    sc.store(g.trace_digest(), 4, 0, g.n_vertices, 1.0, topo, O_mem,
+             O_alu, np.zeros(g.n_vertices, dtype=np.int64))
+    got = latency_sweep(build_graph(seed=3), alphas, m=4)
+    want = np.array([simulate_reference(g, m=4, alpha=a) for a in alphas])
+    assert np.array_equal(got, want)
+
+
+def test_plan_from_cache_rejects_malformed_arrays():
+    g = build_graph(seed=4)
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.flatnonzero(~g.is_mem).astype(np.int64)
+    level = None
+    # sane baseline: identity order is a linear extension (vids are topo)
+    assert _plan_from_cache(g, 4, 2, topo, O_mem, O_alu, level) is not None
+    bad = [
+        (topo[:-1], O_mem, O_alu),                      # wrong length
+        (np.zeros(n, dtype=np.int64), O_mem, O_alu),    # not a permutation
+        (topo - 1, O_mem, O_alu),                       # out of range
+        (topo, O_mem[::-1][1:], O_alu),                 # wrong O_mem length
+        (topo, O_alu[:len(O_mem)], O_alu),              # not the mem set
+        (topo, O_mem, O_alu[:-1]),                      # wrong O_alu length
+    ]
+    for t, om, oa in bad:
+        assert _plan_from_cache(g, 4, 2, t, om, oa, None) is None
+    # cs=0 requires an empty ALU order
+    assert _plan_from_cache(g, 4, 0, topo, O_mem, O_alu, None) is None
+    # a garbage persisted level is repaired (levelize fallback), not trusted
+    junk_level = np.zeros(n, dtype=np.int64)
+    plan = _plan_from_cache(g, 4, 2, topo, O_mem, O_alu, junk_level)
+    assert plan is not None
+    if g.n_edges:
+        lv = plan.level_aug
+        assert (lv[plan.rank[g.src]] < lv[plan.rank[g.dst]]).all()
+
+
+def test_malformed_level_and_shape_entries_degrade_gracefully(cache_env):
+    """Adversarial persisted arrays — monotone-but-negative levels, huge
+    level values (a would-be OOM in the partition builder), 2-D arrays —
+    must degrade to a fresh recording, never crash or change results."""
+    g = build_graph(seed=6)
+    n = g.n_vertices
+    alphas = [50.0, 100.0, 200.0]
+    want = np.array([simulate_reference(g, m=4, alpha=a) for a in alphas])
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    digest = g.trace_digest()
+    bad_levels = [
+        np.arange(n, dtype=np.int64) - 10 ** 6,   # monotone but negative
+        np.arange(n, dtype=np.int64) * 2 ** 40,   # monotone but enormous
+        np.stack([np.arange(n)] * 2).astype(np.int64),  # wrong ndim
+    ]
+    for lvl in bad_levels:
+        sc.store(digest, 4, 0, n, 1.0, topo, O_mem, O_alu, lvl)
+        got = latency_sweep(build_graph(seed=6), alphas, m=4)
+        assert np.array_equal(got, want)
+    # 2-D topo in an otherwise plausible entry
+    sc.store(digest, 4, 0, n, 1.0, np.stack([topo, topo]), O_mem, O_alu,
+             np.zeros(n, dtype=np.int64))
+    # store() flattens nothing — n-length check happens on load
+    got = latency_sweep(build_graph(seed=6), alphas, m=4)
+    assert np.array_equal(got, want)
+
+
+def test_memo_keyed_by_unit_and_stale_plan_replaced(cache_env):
+    """Different unit costs are different schedules: the memo must not
+    serve a unit=1 plan to a unit=2 sweep, and once the fresh plan is
+    recorded it must be memoized so later unit=2 sweeps skip recording."""
+    g = build_graph(seed=8)
+    alphas = [50.0, 100.0, 200.0]
+    latency_sweep(g, alphas, m=4, unit=1.0)
+    sc.reset_stats()
+    got = latency_sweep(g, alphas, m=4, unit=2.0)
+    want = np.array([simulate_reference(g, m=4, alpha=a, unit=2.0)
+                     for a in alphas])
+    assert np.array_equal(got, want)
+    first_records = sc.stats["record_runs"]
+    assert first_records >= 1          # unit=1 plan was not blindly reused
+    sc.reset_stats()
+    assert np.array_equal(latency_sweep(g, alphas, m=4, unit=2.0), want)
+    assert sc.stats["record_runs"] == 0 and sc.stats["memory_hits"] == 1
+
+
+def test_renamed_entry_rejected_by_stored_fields(cache_env):
+    """Copying/renaming an entry to another (m, cs) key must miss: the
+    stored fields are cross-checked against the requested key."""
+    import shutil
+
+    g = build_graph(seed=9)
+    latency_sweep(g, [50.0, 100.0, 200.0], m=2)
+    (entry,) = list(cache_env.glob("*.npz"))
+    fake = cache_env / entry.name.replace("_m2_", "_m4_")
+    shutil.copy(entry, fake)
+    assert sc.load(g.trace_digest(), 4, 0, g.n_vertices, 1.0) is None
+
+
+def test_backward_slot_chain_rejected():
+    g = EDag()
+    for _ in range(3):
+        g.add_vertex(is_mem=True)
+    g._finalize()
+    topo = np.arange(3, dtype=np.int64)
+    empty = np.zeros(0, dtype=np.int64)
+    # O_mem chain 1 -> 0 runs backward in topo rank under m=1
+    assert _plan_from_cache(g, 1, 0, topo,
+                            np.array([1, 0, 2], dtype=np.int64),
+                            empty, None) is None
+    assert _plan_from_cache(g, 1, 0, topo,
+                            np.array([0, 1, 2], dtype=np.int64),
+                            empty, None) is not None
+
+
+def test_foreign_digest_entry_rejected(cache_env):
+    """An entry copied from a different trace with identical n/m/cs/unit
+    must miss: the digest stored inside the entry is cross-checked."""
+    import shutil
+
+    g1 = build_graph(seed=10)
+    g2 = build_graph(seed=11)       # same n, different edges/is_mem
+    assert g1.n_vertices == g2.n_vertices
+    assert g1.trace_digest() != g2.trace_digest()
+    latency_sweep(g1, [50.0, 100.0, 200.0], m=2)
+    (entry,) = list(cache_env.glob("*.npz"))
+    fake = cache_env / (g2.trace_digest()[:32] +
+                        entry.name[len(g1.trace_digest()[:32]):])
+    shutil.copy(entry, fake)
+    assert sc.load(g2.trace_digest(), 2, 0, g2.n_vertices, 1.0) is None
+
+
+def test_partially_stale_plan_is_replaced(cache_env):
+    """A reused plan that fails part of a sweep gets replaced by that
+    sweep's fresh recording, so repeated sweeps converge instead of
+    re-paying the serial recording forever."""
+    g = build_graph(seed=0, n=80)
+    latency_sweep(g, [50.0, 100.0, 200.0], m=2, compute_slots=1)
+    tie_alphas = [0.5, 1.0, 2.0, 3.0]
+    want = np.array([simulate_reference(g, m=2, alpha=a, compute_slots=1)
+                     for a in tie_alphas])
+    sc.reset_stats()
+    assert np.array_equal(
+        latency_sweep(g, tie_alphas, m=2, compute_slots=1), want)
+    # the memoized 50-cycle schedule cannot certify the tie-heavy points;
+    # the sweep re-records and persists the replacement
+    assert sc.stats["record_runs"] >= 1 and sc.stats["stores"] >= 1
+
+
+def test_reversed_topo_not_linear_extension():
+    g = EDag()
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex(is_mem=True)
+    g.add_edge(a, b)
+    g._finalize()
+    topo = np.array([1, 0], dtype=np.int64)     # violates the edge
+    O_mem = np.array([0, 1], dtype=np.int64)
+    assert _plan_from_cache(g, 2, 0, topo, O_mem,
+                            np.zeros(0, dtype=np.int64), None) is None

@@ -3,9 +3,10 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core import (EDag, latency_sweep, make_cache, memory_cost_bounds,
-                        non_memory_cost, simulate, simulate_batch,
-                        simulate_reference, sweep_report, total_cost_bounds)
+from repro.core import (EDag, grid_report, latency_sweep, make_cache,
+                        memory_cost_bounds, non_memory_cost, simulate,
+                        simulate_batch, simulate_reference, sweep_grid,
+                        sweep_report, total_cost_bounds)
 
 
 def test_chain_exact():
@@ -166,6 +167,153 @@ def test_sweep_report_simulated_is_batched_reference():
     want = np.array([simulate_reference(g, alpha=a, compute_slots=4)
                      for a in alphas])
     assert np.array_equal(rep["simulated"], want)
+
+
+# ----------------------------------------------- alpha × m × slots grids
+
+@st.composite
+def grid_cases(draw):
+    """Random topological DAG + small alpha × m × compute_slots grid with
+    tie-heavy alphas (the adversarial case for schedule reuse across
+    machine configurations)."""
+    n = draw(st.integers(1, 40))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < 0.5), nbytes=8.0)
+        for j in range(i):
+            if rng.random() < 0.12:
+                g.add_edge(j, i)
+    ms = sorted({draw(st.integers(1, 5)), draw(st.integers(1, 5))})
+    css = sorted({draw(st.integers(0, 4)), draw(st.integers(0, 4))})
+    alphas = rng.choice([0.5, 1.0, 2.0, 3.0, 50.0, 200.0, 333.25],
+                        size=3, replace=False)
+    return g, ms, css, alphas
+
+
+@given(grid_cases())
+def test_sweep_grid_matches_reference_exactly(case):
+    """Every grid point is bit-identical to the per-point heapq oracle."""
+    g, ms, css, alphas = case
+    grid = sweep_grid(g, alphas, ms=ms, compute_slots=css)
+    assert grid.shape == (len(alphas), len(ms), len(css))
+    for i, a in enumerate(alphas):
+        for j, m in enumerate(ms):
+            for l, cs in enumerate(css):
+                want = simulate_reference(g, m=m, alpha=float(a),
+                                          compute_slots=cs)
+                assert grid[i, j, l] == want, (a, m, cs)
+
+
+@given(grid_cases())
+def test_sweep_grid_matches_stacked_singles(case):
+    """The grid equals the stack of per-(m, cs) single-axis sweeps."""
+    g, ms, css, alphas = case
+    grid = sweep_grid(g, alphas, ms=ms, compute_slots=css)
+    singles = np.stack(
+        [np.stack([latency_sweep(g, alphas, m=m, compute_slots=cs)
+                   for cs in css], axis=-1) for m in ms], axis=1)
+    assert np.array_equal(grid, singles)
+
+
+def test_sweep_grid_memory_budget_invariant():
+    """Streaming the replay in tiny memory-budget chunks cannot change a
+    single bit of the grid."""
+    rng = np.random.default_rng(7)
+    g = EDag()
+    for i in range(50):
+        g.add_vertex(is_mem=bool(rng.random() < 0.6))
+        for j in range(i):
+            if rng.random() < 0.1:
+                g.add_edge(j, i)
+    alphas = np.linspace(40.0, 300.0, 14)
+    full = sweep_grid(g, alphas, ms=[1, 4], compute_slots=[0, 3])
+    tiny = sweep_grid(g, alphas, ms=[1, 4], compute_slots=[0, 3],
+                      mem_budget=1)     # forces the minimum chunk of 4
+    assert np.array_equal(full, tiny)
+
+
+def test_sweep_grid_degenerate_and_empty():
+    g = EDag()
+    assert sweep_grid(g, [50.0], ms=[2], compute_slots=[0]).shape == \
+        (1, 1, 1)
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex(is_mem=False)
+    g.add_edge(a, b)
+    grid = sweep_grid(g, [0.0, 50.0], ms=[1, 2], compute_slots=[0])
+    for i, al in enumerate([0.0, 50.0]):
+        for j, m in enumerate([1, 2]):
+            assert grid[i, j, 0] == simulate_reference(g, m=m, alpha=al)
+
+
+def test_axis_latency_grid_matches_sweep_per_m():
+    """The (axis, m, alpha) fabric grid reduces to axis_latency_sweep at
+    the m each AxisSensitivity was built with, and recomputes Eq-3
+    lambda per m elsewhere."""
+    from repro.core import (AxisSensitivity, axis_latency_grid,
+                            axis_latency_sweep, lambda_abs)
+
+    m0 = 4
+    per_axis = {
+        "model": AxisSensitivity(axis="model", W=64, D=8, bytes=2.0 ** 30,
+                                 lam=lambda_abs(64, 8, m0),
+                                 lam_seconds=lambda_abs(64, 8, m0) * 1e-6),
+        "pod": AxisSensitivity(axis="pod", W=16, D=4, bytes=2.0 ** 28,
+                               lam=lambda_abs(16, 4, m0),
+                               lam_seconds=lambda_abs(16, 4, m0) * 1e-5),
+    }
+    alphas = [1e-6, 5e-6, 10e-6]
+    ms = [2, m0, 8]
+    step = 1e-3
+    grid = axis_latency_grid(per_axis, alphas, ms=ms, step_seconds=step)
+    sweep = axis_latency_sweep(per_axis, alphas, step_seconds=step)
+    for axis in per_axis:
+        g = grid[axis]
+        assert g["lam"].shape == (len(ms),)
+        assert g["lam_seconds"].shape == g["Lam"].shape == \
+            (len(ms), len(alphas))
+        # the m0 row is exactly the single-axis sweep
+        j = ms.index(m0)
+        assert np.array_equal(g["lam_seconds"][j], sweep[axis]["lam_seconds"])
+        assert np.array_equal(g["Lam"][j], sweep[axis]["Lam"])
+        # other rows recompute Eq 3 from (W, D, m)
+        W, D = per_axis[axis].W, per_axis[axis].D
+        for jj, m in enumerate(ms):
+            assert g["lam"][jj] == lambda_abs(W, D, m)
+    assert axis_latency_grid({}, alphas, ms=ms, step_seconds=step) == {}
+
+
+def test_grid_report_matches_scalar_metrics():
+    """grid_report's stacked Eq 3-4 / Eq 1-2 values equal the scalar
+    helpers at every (alpha, m) point, and its simulated grid equals
+    sweep_grid."""
+    from repro.core import lambda_abs
+
+    rng = np.random.default_rng(11)
+    g = EDag()
+    for i in range(45):
+        g.add_vertex(is_mem=bool(rng.random() < 0.5))
+        for j in range(i):
+            if rng.random() < 0.12:
+                g.add_edge(j, i)
+    alphas = [50.0, 125.0, 300.0]
+    ms = [1, 2, 4]
+    css = [0, 2]
+    rep = grid_report(g, alphas, ms=ms, compute_slots=css,
+                      simulate_points=True)
+    lay = g.mem_layers()
+    C = non_memory_cost(g)
+    for j, m in enumerate(ms):
+        assert rep["lam"][j] == lambda_abs(lay.W, lay.D, m)
+        for i, a in enumerate(alphas):
+            lo, hi = total_cost_bounds(lay.W, lay.D, m, a, C)
+            assert rep["t_lower"][i, j] == lo
+            assert rep["t_upper"][i, j] == hi
+    sr = sweep_report(g, alphas)       # m=4 default of CostModelParams
+    assert np.array_equal(rep["t_inf"], sr["t_inf"])
+    assert np.array_equal(rep["Lam"][:, ms.index(4)], sr["Lam"])
+    assert np.array_equal(rep["simulated"],
+                          sweep_grid(g, alphas, ms=ms, compute_slots=css))
 
 
 # ------------------------------------------------- fig10-13 seed regression
