@@ -17,6 +17,12 @@ Measures, at paper-size PolyBench traces (plus HPCG for tracing):
 * **grid**        alpha × m × compute_slots capacity-planning grids —
                   ``sweep_grid`` vs per-point ``simulate_reference``, with
                   every grid point asserted bit-identical;
+* **suite**       the whole-suite union grid — ``suite_sweep_grid`` over
+                  one block-diagonal union eDAG of all kernels vs the
+                  per-kernel ``sweep_grid`` loop, both schedule-cache-warm
+                  (one stacked level pass vs K independent pipelines);
+                  every per-trace row asserted bit-identical, aggregate
+                  speedup floor 2x at paper sizes;
 * **cache**       the persistent schedule cache across two successive
                   *processes*: a cold child records every (m, slots)
                   schedule, a warm child sharing the same cache directory
@@ -45,8 +51,8 @@ import numpy as np
 
 from repro.apps import hpcg, polybench, reference
 from repro.configs.paper_suite import SIM_COMPUTE_SLOTS
-from repro.core import (Tracer, cost_matrix, latency_sweep,
-                        simulate_reference, sweep_grid)
+from repro.core import (EDagSuite, Tracer, cost_matrix, latency_sweep,
+                        simulate_reference, suite_sweep_grid, sweep_grid)
 
 
 def _best_of(fn, repeats: int = 5) -> float:
@@ -218,6 +224,78 @@ def bench_grid(names, N: int, alphas, ms, css, repeats: int) -> dict:
                             ms=list(ms), compute_slots=list(css)))
 
 
+def bench_suite_grid(names, N: int, alphas, ms, css, repeats: int,
+                     floor: float) -> dict:
+    """Whole-suite union grid vs the per-kernel ``sweep_grid`` loop.
+
+    Both sides run schedule-cache-warm against a private cache directory
+    (a cold suite pass records and persists every (member, m, slots)
+    schedule first), so the timed comparison isolates exactly what the
+    union batches: one stacked (max,+) level pass over the block-diagonal
+    union eDAG versus K independent finalize/replay pipelines.  Every
+    per-trace row of the suite grid is asserted bit-identical to the
+    single-trace loop, and the timed section must record nothing —
+    recording costs are identical on both sides by construction and are
+    reported separately as ``cold_s``."""
+    from repro.core import schedule_cache as sc
+
+    alphas = np.asarray(alphas, dtype=np.float64)
+    traces = [polybench.trace_kernel(nm, N) for nm in names]
+    for g in traces:
+        g._finalize()
+        g._sim_lists()
+    suite = EDagSuite(traces, names=list(names))
+    keys = ("EDAN_SCHEDULE_CACHE", "EDAN_SCHEDULE_CACHE_MIN",
+            "EDAN_SCHEDULE_CACHE_MAX")
+    saved = {k: os.environ.get(k) for k in keys}
+    with tempfile.TemporaryDirectory() as td:
+        os.environ.update(EDAN_SCHEDULE_CACHE=td,
+                          EDAN_SCHEDULE_CACHE_MIN="0",
+                          EDAN_SCHEDULE_CACHE_MAX=str(10 ** 6))
+        try:
+            sc.reset_stats()
+            t0 = time.perf_counter()
+            suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css)
+            cold_s = time.perf_counter() - t0
+            cold_records = sc.stats["record_runs"]
+
+            def run_loop():
+                return [sweep_grid(g, alphas, ms=ms, compute_slots=css)
+                        for g in traces]
+
+            def run_suite():
+                return suite_sweep_grid(suite, alphas, ms=ms,
+                                        compute_slots=css)
+
+            run_loop()                 # warm the member plan memos too
+            sc.reset_stats()
+            t_loop, singles = _timed_best(run_loop, repeats)
+            t_suite, sgrid = _timed_best(run_suite, repeats)
+            warm_records = sc.stats["record_runs"]
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+    assert warm_records == 0, \
+        "suite bench timed section re-recorded despite a warm cache"
+    for k, nm in enumerate(names):
+        assert np.array_equal(sgrid[k], singles[k]), \
+            f"suite grid diverged from single-trace sweep_grid on {nm}"
+    speedup = t_loop / t_suite
+    assert speedup > floor, \
+        f"suite grid speedup collapsed: {speedup:.2f}x (floor {floor}x)"
+    return dict(name=f"suite_grid_{len(names)}x_N{N}",
+                n_traces=len(names), n_vertices=suite.n_vertices,
+                n_points=int(sgrid.size), cold_s=cold_s,
+                cold_records=cold_records, loop_s=t_loop, suite_s=t_suite,
+                warm_record_runs=warm_records, speedup=speedup,
+                config=dict(N=N, alphas=list(map(float, alphas)),
+                            ms=list(ms), compute_slots=list(css),
+                            kernels=list(names), floor=floor))
+
+
 def _cache_child(cfg: dict) -> None:
     """One benchmark process: trace the kernel, run the grid, report how
     many schedules had to be recorded.  Driven twice by
@@ -302,6 +380,10 @@ def run_sim(smoke: bool = False) -> dict:
         sim["grid"] = bench_grid(("gemm", "mvt"), N=12,
                                  alphas=np.linspace(50.0, 300.0, 7),
                                  ms=(2, 4), css=(0, 4), repeats=1)
+        sim["suite"] = bench_suite_grid(
+            ("gemm", "mvt", "lu"), N=14,
+            alphas=np.linspace(50.0, 300.0, 11), ms=(2, 4), css=(0, 4),
+            repeats=2, floor=1.0)
         sim["cache"] = bench_schedule_cache(
             "gemm", 14, np.linspace(50.0, 300.0, 11), (2, 4), (0, 8))
     else:
@@ -309,6 +391,12 @@ def run_sim(smoke: bool = False) -> dict:
         sim["grid"] = bench_grid(polybench.PAPER_15, N=20,
                                  alphas=np.linspace(50.0, 300.0, 13),
                                  ms=(2, 4, 8), css=(0, 8), repeats=1)
+        # the acceptance config: PAPER_15 at N=20 over the full 78-point
+        # grid, whole-suite union pass >= 2x the 15-call loop
+        sim["suite"] = bench_suite_grid(
+            polybench.PAPER_15, N=20,
+            alphas=np.linspace(50.0, 300.0, 13), ms=(2, 4, 8), css=(0, 8),
+            repeats=2, floor=2.0)
         sim["cache"] = bench_schedule_cache(
             "gemm", 20, np.linspace(50.0, 300.0, 26), (2, 4, 8), (0, 8))
     return sim
@@ -352,6 +440,11 @@ def main() -> None:
     for row in sim["grid"]["kernels"]:
         print(f"{row['name']},sim/grid,{row['grid_s']:.3f}s,"
               f"{row['ref_s']:.3f}s,{row['speedup']:.1f}x")
+    suite = sim["suite"]
+    print(f"{suite['name']},sim/suite,{suite['suite_s']:.3f}s,"
+          f"{suite['loop_s']:.3f}s,{suite['speedup']:.1f}x "
+          f"(cold {suite['cold_s']:.3f}s / "
+          f"{suite['cold_records']} recordings)")
     cache = sim["cache"]
     print(f"grid_cache_{cache['config']['kernel']}"
           f"_N{cache['config']['N']},sim/cache,"
@@ -368,6 +461,10 @@ def main() -> None:
     print(f"# grid speedup {sim['grid']['total_speedup']:.1f}x over "
           f"{len(sim['grid']['kernels'])} kernels; warm schedule cache: "
           f"{cache['warm']['record_runs']} re-recordings across processes")
+    print(f"# suite grid speedup {suite['speedup']:.1f}x over the "
+          f"{suite['n_traces']}-call loop "
+          f"(floor {suite['config']['floor']}x, every per-trace row "
+          "bit-identical)")
 
 
 if __name__ == "__main__":

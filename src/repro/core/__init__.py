@@ -6,7 +6,7 @@ Three trace frontends over one analysis core:
   * HLO     (``hlo``)    — post-SPMD compiled module (collectives = remote
     memory accesses), powering the multi-pod latency-sensitivity analysis.
 """
-from .graph import EDag, MemLayering
+from .graph import EDag, MemLayering, concat_edags
 from .cache import NoCache, SetAssociativeCache, make_cache
 from .trace import Tracer, Value, build_edag_from_trace
 from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
@@ -14,17 +14,21 @@ from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
 from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
                       bandwidth_sweep, cost_matrix, data_movement_over_time,
                       cost_vector, grid_report, report, Report,
-                      sweep_report, t_inf_sweep)
-from .backend import LevelCSR, level_accumulate, levelize, select_backend
+                      suite_grid_report, sweep_report, t_inf_sweep)
+from .backend import (LevelCSR, level_accumulate, levelize, segment_max_rows,
+                      segment_sum_rows, select_backend)
 from .scheduler import (simulate, simulate_reference, simulate_batch,
                         latency_sweep, sweep_grid)
+from .suite import (EDagSuite, suite_latency_sweep, suite_sweep_grid,
+                    suite_t_inf_sweep)
 from . import schedule_cache
 from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
                   hlo_flops_estimate, hlo_hbm_bytes_estimate,
                   axis_signature_table)
 from .jaxpr import edag_from_fn, edag_from_jaxpr
 from .sensitivity import (collective_sensitivity, AxisSensitivity,
-                          axis_latency_sweep, axis_latency_grid)
+                          axis_latency_sweep, axis_latency_grid,
+                          suite_axis_latency_grid)
 
 __all__ = [
     "EDag", "MemLayering", "NoCache", "SetAssociativeCache", "make_cache",
@@ -33,12 +37,14 @@ __all__ = [
     "non_memory_cost", "analyze", "lambda_abs", "lambda_rel",
     "bandwidth_utilization", "bandwidth_sweep", "cost_matrix",
     "data_movement_over_time", "cost_vector", "report", "Report",
-    "sweep_report", "t_inf_sweep", "grid_report", "simulate",
-    "simulate_reference", "simulate_batch", "latency_sweep", "sweep_grid",
-    "LevelCSR", "level_accumulate", "levelize",
-    "select_backend", "schedule_cache", "parse_hlo",
+    "sweep_report", "t_inf_sweep", "grid_report", "suite_grid_report",
+    "simulate", "simulate_reference", "simulate_batch", "latency_sweep",
+    "sweep_grid", "concat_edags", "EDagSuite", "suite_latency_sweep",
+    "suite_sweep_grid", "suite_t_inf_sweep",
+    "LevelCSR", "level_accumulate", "levelize", "segment_max_rows",
+    "segment_sum_rows", "select_backend", "schedule_cache", "parse_hlo",
     "analyze_collectives", "shape_bytes", "hlo_flops_estimate",
     "hlo_hbm_bytes_estimate", "axis_signature_table", "edag_from_fn",
     "edag_from_jaxpr", "collective_sensitivity", "AxisSensitivity",
-    "axis_latency_sweep", "axis_latency_grid",
+    "axis_latency_sweep", "axis_latency_grid", "suite_axis_latency_grid",
 ]

@@ -84,6 +84,13 @@ class LevelCSR:
     pass an (n+1, k) matrix whose last row stays 0).  ``qonly_ptr`` /
     ``qonly_dst`` partition by level the vertices whose only predecessor
     is their queue predecessor.
+
+    For a block-diagonal *union* graph (a multi-trace suite replay),
+    ``seg_ptr`` holds the (K+1,) block boundaries in row space.  Edges
+    and slot chains of such a partition never cross a boundary — each
+    member trace owns its own slot pool — so per-trace results fall out
+    of the shared row matrix via one segmented reduction
+    (``segment_max_rows``) instead of K kernel invocations.
     """
 
     n: int
@@ -98,6 +105,7 @@ class LevelCSR:
     qpred: Optional[np.ndarray] = None
     qonly_ptr: Optional[np.ndarray] = None
     qonly_dst: Optional[np.ndarray] = None
+    seg_ptr: Optional[np.ndarray] = None    # block boundaries (union graphs)
     jax_padded: Optional[tuple] = None      # memoized (gather, dsts) tensors
 
     def level_maxlens(self) -> list:
@@ -142,6 +150,44 @@ def build_level_partition(src: np.ndarray, dst: np.ndarray,
     return LevelCSR(n=n, n_levels=n_levels, esrc=esrc, run_dst=run_dst,
                     run_starts=run_starts, run_lens=run_lens, run_ptr=run_ptr,
                     elevel_ptr=elevel_ptr)
+
+
+def segment_max_rows(F: np.ndarray, seg_ptr: np.ndarray,
+                     empty: float = 0.0) -> np.ndarray:
+    """Per-segment maximum over the leading axis of ``F``.
+
+    ``seg_ptr`` is a (K+1,) nondecreasing boundary array (a union graph's
+    block boundaries); returns a (K,) or (K, k) array whose entry ``i``
+    is ``F[seg_ptr[i]:seg_ptr[i+1]].max(axis=0)``, or ``empty`` for
+    zero-length segments.  Rows beyond ``seg_ptr[-1]`` belong to no
+    segment and are ignored (the union replay's zero sentinel row, for
+    instance).  This is the reduction that maps a union replay's shared
+    row matrix back to per-trace makespans / spans in one vectorized
+    pass."""
+    seg_ptr = np.asarray(seg_ptr, dtype=np.int64)
+    K = len(seg_ptr) - 1
+    out = np.full((K,) + F.shape[1:], empty, dtype=np.float64)
+    lens = np.diff(seg_ptr)
+    live = np.nonzero(lens > 0)[0]
+    if len(live):
+        # reduceat runs the last segment to the end of the array it is
+        # given, so clip to the segmented span first
+        out[live] = np.maximum.reduceat(F[:seg_ptr[-1]], seg_ptr[live],
+                                        axis=0)
+    return out
+
+
+def segment_sum_rows(values: np.ndarray, seg_ptr: np.ndarray) -> np.ndarray:
+    """Per-segment sum over the leading axis (see ``segment_max_rows``)."""
+    seg_ptr = np.asarray(seg_ptr, dtype=np.int64)
+    K = len(seg_ptr) - 1
+    out = np.zeros((K,) + values.shape[1:], dtype=np.float64)
+    lens = np.diff(seg_ptr)
+    live = np.nonzero(lens > 0)[0]
+    if len(live):
+        out[live] = np.add.reduceat(values[:seg_ptr[-1]], seg_ptr[live],
+                                    axis=0)
+    return out
 
 
 def levelize(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
@@ -195,11 +241,11 @@ def _accumulate_numpy(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
             # are tiny, so a couple of vectorized maximum passes finish
             # every run (faster than np.maximum.reduceat over 2D)
             segmax = F[src[starts]]
+            lens = rlens[r0:r1]
             for off in range(1, maxlens[lvl]):
-                lens = rlens[r0:r1]
+                # off < the level's max run length, so at least one run
+                # is always live — no early-exit check needed
                 live = lens > off
-                if not live.any():
-                    break
                 segmax[live] = np.maximum(segmax[live],
                                           F[src[starts[live] + off]])
             if R_out is not None:

@@ -467,3 +467,33 @@ class EDag:
         return dict(n_vertices=self.n_vertices, n_edges=self.n_edges,
                     n_mem=int(self.is_mem.sum()),
                     bytes_total=float(self.nbytes.sum()))
+
+
+def concat_edags(graphs: Sequence[EDag]) -> EDag:
+    """Block-diagonal union of K eDAGs: member k's vertex ``v`` becomes
+    union vertex ``offsets[k] + v``.
+
+    Each member's vertices keep their relative insertion order and every
+    edge is offset with its block, so the union preserves the topological
+    insertion invariant (src < dst) and no edge ever crosses a block
+    boundary — the union of independent traces is itself a valid eDAG.
+    Because the blocks are disconnected, every level-synchronous analysis
+    of the union decomposes exactly into its members: the union's
+    topological levels, finish times and memory layers restricted to
+    block k are bit-identical to analyzing member k alone, while the
+    levels of independent members *interleave* — the level kernel sees
+    fatter levels and at most ``max_k n_levels_k`` serial steps instead
+    of ``sum_k``.  ``EDagSuite`` (``core/suite.py``) carries the
+    per-vertex trace_id segment array that maps union results back to
+    members."""
+    u = EDag()
+    for g in graphs:
+        g._finalize()
+        n = g.n_vertices
+        if n == 0:
+            continue
+        base = u.add_vertex_block(g.cost, g.is_mem, g.nbytes,
+                                  label=list(g.labels()), n=n)[0]
+        if len(g.src):
+            u.add_edge_block(g.src + base, g.dst + base)
+    return u

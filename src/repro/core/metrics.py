@@ -227,6 +227,67 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     return out
 
 
+def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
+                      params: CostModelParams = CostModelParams(),
+                      simulate_points: bool = False,
+                      backend: Optional[str] = None,
+                      mem_budget: Optional[int] = None,
+                      use_cache: bool = True) -> dict:
+    """§3.3 metrics for a whole ``EDagSuite`` on the alpha × m grid —
+    per-trace Eq 1-4 tables from ONE pass over the block-diagonal union.
+
+    The union's memory layering is a single level pass (blocks are
+    disconnected, so member layers come out bit-identical); per-trace W,
+    D and C then fall out as segmented reductions over the ``trace_id``
+    segment array, the per-trace span sweep is one union-batched level
+    pass (``suite_t_inf_sweep``), and the Eq 1-4 grid is a single
+    broadcast over the (trace, alpha, m) product.  Every per-trace table
+    equals ``grid_report(member_k, ...)`` exactly.
+
+    Returns ``dict(names, alphas, ms, compute_slots, W/D/C (K,),
+    lam (K, n_ms), t_inf (K, n_alphas), t_lower/t_upper/Lam
+    (K, n_alphas, n_ms), and simulated (K, n_alphas, n_ms, n_css) when
+    requested)`` where K is the number of member traces.
+    """
+    from .suite import suite_sweep_grid, suite_t_inf_sweep
+
+    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
+    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)], dtype=np.int64)
+    css = np.asarray([int(v) for v in np.atleast_1d(compute_slots)],
+                     dtype=np.int64)
+    K = suite.n_traces
+    if K and suite.n_vertices:
+        u = suite.union
+        lay = u.mem_layers()                       # one union level pass
+        W = suite.segment_sum(u.is_mem.astype(np.float64)).astype(np.int64)
+        D = suite.segment_max(lay.level).astype(np.int64)
+        counts = np.diff(suite.offsets)
+        C = (counts - W) * params.unit
+        t_inf = suite_t_inf_sweep(suite, alphas, params.unit,
+                                  backend=backend)
+    else:
+        W = D = np.zeros(K, dtype=np.int64)
+        C = np.zeros(K)
+        t_inf = np.zeros((K, len(alphas)))
+    lam = lambda_abs(W[:, None].astype(np.float64), D[:, None], ms_arr)
+    # Eq 1-2 bounds and Eq 4 Lambda over the (trace, alpha, m) grid
+    mem_lo = np.maximum(D[:, None], W[:, None] / ms_arr)[:, None, :] * \
+        alphas[None, :, None]
+    mem_hi = lam[:, None, :] * alphas[None, :, None]
+    denom = mem_hi + C[:, None, None]
+    Lam = np.divide(lam[:, None, :], denom,
+                    out=np.zeros_like(denom), where=denom > 0)
+    out = dict(names=list(suite.names), alphas=alphas, ms=ms_arr,
+               compute_slots=css, W=W, D=D, C=C, lam=lam, Lam=Lam,
+               t_inf=t_inf, t_lower=mem_lo + C[:, None, None],
+               t_upper=mem_hi + C[:, None, None])
+    if simulate_points:
+        out["simulated"] = suite_sweep_grid(
+            suite, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
+            backend=backend, mem_budget=mem_budget, use_cache=use_cache)
+    return out
+
+
 def report(g: EDag, params: CostModelParams = CostModelParams()) -> Report:
     """One-stop §3.3 report for an eDAG: W, D, C, lambda, Lambda, B."""
     lay = g.mem_layers()

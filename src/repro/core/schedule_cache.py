@@ -34,6 +34,18 @@ This module persists recorded schedules across processes:
   The directory is pruned to ``$EDAN_SCHEDULE_CACHE_MAX`` entries
   (default 256) by mtime, LRU — loads touch mtime.
 
+* **Encoding** — format 3 stores every schedule array (issue orders,
+  topo order, augmented levels) as int32 *deltas* (``np.diff`` with a
+  zero prepend).  Values are vertex ids / levels in ``[0, n)`` with
+  ``n < 2^31``, so deltas always fit int32; consecutive entries of a
+  recorded order are strongly correlated, so the deltas are small and
+  compress far better than raw int64 — the ROADMAP scale target for
+  HPCG/LULESH-size traces whose raw entries ran 10-25 MB.  Decoding is
+  one ``np.cumsum`` per array.  Entries written by older formats (or
+  whose arrays are not int32) are rejected on load and simply
+  re-recorded — the format version is part of the validation, never
+  migrated in place.
+
 Writes are atomic (tempfile + ``os.replace``), so concurrent processes
 sharing a cache directory race benignly: last writer wins, readers see
 either a complete entry or none.
@@ -48,9 +60,32 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-_FORMAT = 2
+_FORMAT = 3
 _DEFAULT_MAX_ENTRIES = 256
 _DEFAULT_MIN_VERTICES = 4096
+#: Delta-encoded schedule arrays, stored int32: (archive key, load dtype).
+_ARRAY_KEYS = ("topo_d", "O_mem_d", "O_alu_d", "level_d")
+
+
+def _delta_encode(arr: np.ndarray) -> Optional[np.ndarray]:
+    """int32 delta encoding of a 1-D nonnegative int array, or None when
+    the array cannot be represented (wrong ndim, or values outside
+    ``[0, 2^31)`` whose deltas would overflow int32)."""
+    arr = np.asarray(arr)
+    if arr.ndim != 1:
+        return None
+    if len(arr) and (arr.min() < 0 or arr.max() >= 2 ** 31):
+        return None
+    return np.diff(arr.astype(np.int64), prepend=np.int64(0)) \
+        .astype(np.int32)
+
+
+def _delta_decode(deltas: np.ndarray) -> Optional[np.ndarray]:
+    """Inverse of ``_delta_encode``; None for malformed stored arrays
+    (anything but 1-D int32 is a corrupt or foreign entry)."""
+    if deltas.ndim != 1 or deltas.dtype != np.int32:
+        return None
+    return np.cumsum(deltas.astype(np.int64))
 
 #: Cumulative per-process counters, for benchmarks and tests:
 #: ``memory_hits`` / ``disk_hits`` / ``misses`` count plan lookups in
@@ -116,10 +151,12 @@ def load(digest: str, m: int, cs: int, n: int,
     recording run, so plan reconstruction is pure vectorized numpy.
 
     Misses (returns None) on: persistence disabled, absent entry,
-    format-version or ``unit`` mismatch, or an entry whose arrays do not
-    describe ``n`` vertices (a truncated or foreign file — never
-    trusted; the scheduler re-validates the arrays structurally before
-    replaying them in any case)."""
+    format-version or ``unit`` mismatch, stored arrays that are not the
+    format's int32 deltas, or an entry whose arrays do not describe
+    ``n`` vertices (a truncated or foreign file — never trusted; the
+    scheduler re-validates the arrays structurally before replaying
+    them in any case).  Entries written by older formats miss and get
+    re-recorded — there is no in-place migration."""
     d = cache_dir()
     if d is None:
         return None
@@ -134,14 +171,12 @@ def load(digest: str, m: int, cs: int, n: int,
                 # every stored field must corroborate the requested key —
                 # a renamed/copied entry is never trusted
                 return None
-            topo = np.asarray(z["topo"], dtype=np.int64)
-            O_mem = np.asarray(z["O_mem"], dtype=np.int64)
-            O_alu = np.asarray(z["O_alu"], dtype=np.int64)
-            level = np.asarray(z["level"], dtype=np.int64)
+            arrays = [_delta_decode(np.asarray(z[k])) for k in _ARRAY_KEYS]
     except (OSError, KeyError, ValueError, zipfile.BadZipFile):
         return None
-    if any(arr.ndim != 1 for arr in (topo, O_mem, O_alu, level)):
+    if any(arr is None for arr in arrays):
         return None
+    topo, O_mem, O_alu, level = arrays
     if len(topo) != n or len(level) != n or len(O_mem) + len(O_alu) > n:
         return None
     try:
@@ -154,9 +189,17 @@ def load(digest: str, m: int, cs: int, n: int,
 def store(digest: str, m: int, cs: int, n: int, unit: float,
           topo: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
           level: np.ndarray) -> bool:
-    """Persist a recorded schedule; returns True on a successful write."""
+    """Persist a recorded schedule; returns True on a successful write.
+
+    Refuses (returns False) schedules whose arrays the int32 delta
+    encoding cannot represent — anything not 1-D with values in
+    ``[0, 2^31)`` (no real schedule is; refusing beats writing a lossy
+    entry)."""
     d = cache_dir()
     if d is None or n < min_vertices():
+        return False
+    encoded = [_delta_encode(a) for a in (topo, O_mem, O_alu, level)]
+    if any(e is None for e in encoded):
         return False
     tmp = None
     try:
@@ -165,8 +208,7 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
         with os.fdopen(fd, "wb") as f:
             np.savez_compressed(f, format=_FORMAT, digest=digest, n=n,
                                 unit=float(unit), m=m, compute_slots=cs,
-                                topo=topo, O_mem=O_mem, O_alu=O_alu,
-                                level=level)
+                                **dict(zip(_ARRAY_KEYS, encoded)))
         os.replace(tmp, _entry_path(d, digest, m, cs, unit))
         tmp = None
     except OSError:

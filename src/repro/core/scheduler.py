@@ -177,6 +177,52 @@ def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
 
 # -------------------------------------------------------------- replay plan
 
+def _slot_qpred(rank: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
+                m: int, cs: int, n: int) -> np.ndarray:
+    """Queue predecessors implied by the issue orders, in rank space.
+
+    ``qpred[r]`` is the rank of the vertex issued ``m`` (or ``cs``) slots
+    earlier on the same resource class; vertices without one point at the
+    zero sentinel row ``n`` (a slot that is free at t=0).  Chains are
+    built per issue order, so in a multi-trace union (one order per
+    member trace) they can never cross block boundaries."""
+    qpred = np.full(n, n, dtype=np.int64)
+    if len(O_mem) > m:
+        qpred[rank[O_mem[m:]]] = rank[O_mem[:-m]]
+    if cs and len(O_alu) > cs:
+        qpred[rank[O_alu[cs:]]] = rank[O_alu[:-cs]]
+    return qpred
+
+
+def _aug_level_valid(level, asrc: np.ndarray, adst: np.ndarray,
+                     n: int) -> bool:
+    """Whether a persisted level assignment is usable for the augmented
+    graph: a 1-D array of n in-range values (valid assignments are < n: a
+    longest path has at most n-1 edges — this also bounds the per-level
+    arrays the partition builder allocates) that respects every augmented
+    edge."""
+    return (getattr(level, "ndim", 0) == 1 and len(level) == n and
+            (n == 0 or (level.min() >= 0 and level.max() < n)) and
+            (len(asrc) == 0 or bool((level[asrc] < level[adst]).all())))
+
+
+def _attach_queue_partition(lv, dst_r: np.ndarray, qpred: np.ndarray,
+                            level: np.ndarray) -> None:
+    """Attach slot chains to a level partition: ``qpred`` plus the
+    by-level partition of vertices whose only predecessor is their queue
+    predecessor."""
+    n = lv.n
+    lv.qpred = qpred
+    qdst = np.nonzero(qpred < n)[0]
+    qonly = qdst[np.bincount(dst_r, minlength=n)[qdst] == 0]
+    if len(qonly):
+        qonly = qonly[np.argsort(level[qonly], kind="stable")]
+        counts = np.bincount(level[qonly], minlength=lv.n_levels)
+        lv.qonly_ptr = np.concatenate(
+            ([0], np.cumsum(counts))).astype(np.int64)
+        lv.qonly_dst = qonly
+
+
 class _ReplayPlan:
     """Recorded schedule of one master run, ready for batched replay.
 
@@ -210,38 +256,19 @@ class _ReplayPlan:
 
         # queue predecessors point at the zero sentinel row n when absent
         # (a slot that is free at t=0)
-        qpred = np.full(n, n, dtype=np.int64)
-        if len(O_mem) > m:
-            qpred[rank[O_mem[m:]]] = rank[O_mem[:-m]]
-        if cs and len(O_alu) > cs:
-            qpred[rank[O_alu[cs:]]] = rank[O_alu[:-cs]]
+        qpred = _slot_qpred(rank, O_mem, O_alu, m, cs, n)
         src_r, dst_r = rank[g.src], rank[g.dst]
 
         qdst = np.nonzero(qpred < n)[0]
         asrc = np.concatenate([src_r, qpred[qdst]])
         adst = np.concatenate([dst_r, qdst])
-        # a usable persisted level assignment must be a 1-D array of n
-        # in-range values (valid assignments are < n: a longest path has
-        # at most n-1 edges — this also bounds the per-level arrays the
-        # partition builder allocates) that respects every augmented edge
-        if level is not None and (
-                getattr(level, "ndim", 0) != 1 or len(level) != n or
-                (n and (level.min() < 0 or level.max() >= n)) or
-                (len(asrc) and not (level[asrc] < level[adst]).all())):
+        if level is not None and not _aug_level_valid(level, asrc, adst, n):
             level = None              # invalid persisted levels: recompute
         if level is None:
             level = _bk.levelize(asrc, adst, n)
         self.level_aug = level
         lv = _bk.build_level_partition(src_r, dst_r, level, n)
-        lv.qpred = qpred
-        # vertices whose only predecessor is the slot chain
-        qonly = qdst[np.bincount(dst_r, minlength=n)[qdst] == 0]
-        if len(qonly):
-            qonly = qonly[np.argsort(level[qonly], kind="stable")]
-            counts = np.bincount(level[qonly], minlength=lv.n_levels)
-            lv.qonly_ptr = np.concatenate(
-                ([0], np.cumsum(counts))).astype(np.int64)
-            lv.qonly_dst = qonly
+        _attach_queue_partition(lv, dst_r, qpred, level)
         self.lv = lv
 
     def replay(self, alphas: np.ndarray, unit: float,
@@ -284,31 +311,39 @@ def _enabler_pass(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
     return out
 
 
-def _verify_class(g: EDag, plan: _ReplayPlan, F: np.ndarray, R: np.ndarray,
+def _verify_class(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
                   O: np.ndarray, O_rel: np.ndarray) -> np.ndarray:
     """Check per point that ``O`` is the (R, E, vid)-sorted issue order.
 
     R must be nondecreasing along O; at R ties the enabler vid E (computed
-    lazily, only for the tied positions) and then the vid break the tie."""
+    lazily, only for the tied positions) and then the vid break the tie.
+    ``rank`` / ``F`` / ``R`` live in the graph's own rank space — for a
+    member of a union suite, pass views of that member's block rows."""
     k = F.shape[1]
     if len(O) < 2:
         return np.ones(k, dtype=bool)
     RO = R[O_rel]
     lo, hi = RO[:-1], RO[1:]
     less = lo < hi
-    eq = lo == hi
     pair_ok = less
-    tie = np.nonzero(eq.any(axis=1))[0]
-    if len(tie):
-        T = np.unique(np.concatenate([O[tie], O[tie + 1]]))
-        E_T = _enabler_pass(g, plan.rank, F, R, T)
-        e_lo = E_T[np.searchsorted(T, O[tie])]
-        e_hi = E_T[np.searchsorted(T, O[tie + 1])]
-        v_lo = O[tie][:, None]
-        v_hi = O[tie + 1][:, None]
-        tie_ok = (e_lo < e_hi) | ((e_lo == e_hi) & (v_lo < v_hi))
-        pair_ok = less.copy()
-        pair_ok[tie] = np.where(eq[tie], tie_ok, less[tie])
+    # equality only matters on rows that are not strictly increasing at
+    # every point — compute it on those candidates, not the full matrix
+    cand = np.nonzero(~less.all(axis=1))[0]
+    if len(cand):
+        eqc = lo[cand] == hi[cand]
+        has_tie = eqc.any(axis=1)
+        tie = cand[has_tie]
+        if len(tie):
+            eqt = eqc[has_tie]
+            T = np.unique(np.concatenate([O[tie], O[tie + 1]]))
+            E_T = _enabler_pass(g, rank, F, R, T)
+            e_lo = E_T[np.searchsorted(T, O[tie])]
+            e_hi = E_T[np.searchsorted(T, O[tie + 1])]
+            v_lo = O[tie][:, None]
+            v_hi = O[tie + 1][:, None]
+            tie_ok = (e_lo < e_hi) | ((e_lo == e_hi) & (v_lo < v_hi))
+            pair_ok = less.copy()
+            pair_ok[tie] = np.where(eqt, tie_ok, less[tie])
     return pair_ok.all(axis=0)
 
 
@@ -345,10 +380,10 @@ def _memo_plan(g: EDag, key, plan: _ReplayPlan) -> None:
         memo.popitem(last=False)
 
 
-def _plan_from_cache(g: EDag, m: int, cs: int, topo, O_mem, O_alu,
-                     level) -> Optional[_ReplayPlan]:
-    """Rebuild a replay plan from persisted arrays, or None if they fail
-    structural validation.
+def _validate_schedule(g: EDag, m: int, cs: int, topo, O_mem,
+                       O_alu) -> Optional[np.ndarray]:
+    """Structurally validate a candidate schedule; returns the rank array
+    (the inverse of ``topo``) or None.
 
     The checks establish exactly the preconditions the bit-exactness
     argument needs from a *candidate* schedule: ``topo`` is a permutation
@@ -393,6 +428,15 @@ def _plan_from_cache(g: EDag, m: int, cs: int, topo, O_mem, O_alu,
     if cs and len(O_alu) and \
             (np.bincount(O_alu, minlength=n) !=
              (~g.is_mem).astype(np.int64)).any():
+        return None
+    return rank
+
+
+def _plan_from_cache(g: EDag, m: int, cs: int, topo, O_mem, O_alu,
+                     level) -> Optional[_ReplayPlan]:
+    """Rebuild a replay plan from persisted arrays, or None if they fail
+    ``_validate_schedule``."""
+    if _validate_schedule(g, m, cs, topo, O_mem, O_alu) is None:
         return None
     return _ReplayPlan(g, topo, O_mem, O_alu, m, cs, level=level)
 
@@ -455,6 +499,11 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     the bytes of one stacked replay chunk (default 512 MB, or
     $EDAN_REPLAY_MEM_BUDGET) so large traces stream through the level
     kernel.
+
+    Unsorted or duplicate ``alphas`` are deduped and sorted internally
+    (duplicates would waste replay columns and an unsorted first point
+    would pick an arbitrary recording master); results always come back
+    in caller order.
     """
     g._finalize()
     alphas = np.asarray(alphas, dtype=np.float64)
@@ -473,6 +522,14 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
         for i, a in enumerate(alphas):
             out[i] = _event_loop(g.is_mem, sim_lists, m, float(a), unit, cs)
         return out
+
+    uniq, inv = np.unique(alphas, return_inverse=True)
+    if len(uniq) != P or not np.array_equal(uniq, alphas):
+        # dedupe + sort once, scatter back to caller order (alphas are
+        # all finite here, so np.unique's ordering is total)
+        return simulate_batch(g, uniq, m=m, unit=unit, compute_slots=cs,
+                              backend=backend, mem_budget=mem_budget,
+                              use_cache=use_cache)[inv]
 
     remaining = np.arange(P)
     plan = _get_plan(g, m, cs, unit) if use_cache else None
@@ -493,9 +550,10 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
         for c0 in range(0, remaining.size, chunk):
             sel = remaining[c0:c0 + chunk]
             F, R = plan.replay(alphas[sel], unit, backend=backend)
-            okc = _verify_class(g, plan, F, R, plan.O_mem, plan.Om_rel)
+            okc = _verify_class(g, plan.rank, F, R, plan.O_mem, plan.Om_rel)
             if cs:
-                okc &= _verify_class(g, plan, F, R, plan.O_alu, plan.Oa_rel)
+                okc &= _verify_class(g, plan.rank, F, R, plan.O_alu,
+                                     plan.Oa_rel)
             mk = F.max(axis=0)
             out[sel[okc]] = mk[okc]
             ok[c0:c0 + chunk] = okc
@@ -527,7 +585,10 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     One finalize builds the shared CSR; the batched schedule-replay engine
     then evaluates the whole sweep in one level-synchronous pass
     (``batch=False`` forces the retained per-point reference loop — the
-    results are bit-identical either way)."""
+    results are bit-identical either way).  The batched path dedupes and
+    sorts repeated/unsorted alphas internally and returns results in
+    caller order; the reference loop stays a literal per-point replay (it
+    is the oracle the benchmarks time against)."""
     g._finalize()
     alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
     use_batch = (len(alphas) >= _MIN_BATCH_POINTS if batch is None
@@ -564,7 +625,8 @@ def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     kernel instead of materializing an (n, |grid|) matrix.  Alpha is
     therefore the cheap axis; m and compute_slots each cost at most one
     serial recording run per value, paid once per process ever for
-    cached traces.
+    cached traces.  Duplicate or unsorted alphas are deduped and sorted
+    internally; the returned axis follows caller order.
     """
     g._finalize()
     alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)

@@ -103,28 +103,56 @@ def axis_latency_grid(per_axis: Dict[str, AxisSensitivity],
     lambda is recomputed per (axis, m) from the axis's W and D via Eq 3;
     the projected step-time deltas and relative sensitivities then come
     from one broadcast (n_axes, n_ms, n_alphas) expression — no
-    Python loop over any axis of the grid.  Returns
-    ``{axis: {alphas, ms, lam (n_ms,), lam_seconds (n_ms, n_alphas),
-    Lam (n_ms, n_alphas)}}``.
+    Python loop over any axis of the grid (the single-step case of
+    ``suite_axis_latency_grid``, which owns the stacked evaluation).
+    Returns ``{axis: {alphas, ms, lam (n_ms,), lam_seconds
+    (n_ms, n_alphas), Lam (n_ms, n_alphas)}}``.
     """
+    return suite_axis_latency_grid({"step": per_axis}, alphas, ms,
+                                   {"step": step_seconds})["step"]
+
+
+def suite_axis_latency_grid(per_axis_by_step: Dict[str, Dict[str,
+                                                             AxisSensitivity]],
+                            alphas: Sequence[float],
+                            ms: Sequence[int],
+                            step_seconds: Dict[str, float]) -> dict:
+    """Eq 3-4 grids for a whole *suite* of compiled steps in one stacked
+    pass — the fabric-side analogue of ``suite_sweep_grid``.
+
+    ``per_axis_by_step`` maps a step name (one compiled module / training
+    step) to its per-axis sensitivities; ``step_seconds`` gives each
+    step's measured duration.  Every (step, axis) pair is flattened into
+    one segment axis and the full (step, axis, m, alpha) product is
+    evaluated as a single broadcast expression — no Python loop over any
+    grid axis — then regrouped per step.  Each step's table is
+    bit-identical to ``axis_latency_grid(per_axis, alphas, ms,
+    step_seconds[step])`` (the ops are elementwise, so stacking cannot
+    change a bit).  Returns ``{step: {axis: {...}}}`` with the same leaf
+    layout as ``axis_latency_grid``."""
     alphas = np.asarray(alphas, dtype=np.float64)
     ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)],
                         dtype=np.int64)
-    axes = list(per_axis)
-    if not axes:
-        return {}
-    W = np.array([per_axis[a].W for a in axes], dtype=np.float64)
-    D = np.array([per_axis[a].D for a in axes], dtype=np.float64)
-    base = np.maximum(step_seconds -
-                      np.array([per_axis[a].lam_seconds for a in axes]), 0.0)
+    rows = [(step, axis) for step, pa in per_axis_by_step.items()
+            for axis in pa]
+    if not rows:
+        return {step: {} for step in per_axis_by_step}
+    sens = [per_axis_by_step[s][a] for s, a in rows]
+    W = np.array([x.W for x in sens], dtype=np.float64)
+    D = np.array([x.D for x in sens], dtype=np.float64)
+    base = np.maximum(
+        np.array([step_seconds[s] for s, _ in rows]) -
+        np.array([x.lam_seconds for x in sens]), 0.0)
     lam = lambda_abs(W[:, None], D[:, None], ms_arr[None, :])
     lam_seconds = lam[:, :, None] * alphas[None, None, :]
     denom = lam_seconds + base[:, None, None]
     Lam = np.divide(lam_seconds, denom,
                     out=np.zeros_like(denom), where=denom > 0)
-    return {axis: dict(alphas=alphas, ms=ms_arr, lam=lam[i],
-                       lam_seconds=lam_seconds[i], Lam=Lam[i])
-            for i, axis in enumerate(axes)}
+    out: dict = {step: {} for step in per_axis_by_step}
+    for i, (step, axis) in enumerate(rows):
+        out[step][axis] = dict(alphas=alphas, ms=ms_arr, lam=lam[i],
+                               lam_seconds=lam_seconds[i], Lam=Lam[i])
+    return out
 
 
 def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],

@@ -1,0 +1,473 @@
+"""Multi-trace union eDAG suites: whole-suite sweep grids in one level pass.
+
+EDAN's headline results are *suite-level* — Figures 10-13 characterize
+latency sensitivity across all of PolyBench/HPCG/LULESH at once — yet the
+single-trace engine pays one finalize/replay pipeline per kernel.  This
+module batches the trace axis itself: ``EDagSuite`` concatenates K traces
+into one block-diagonal union eDAG (``graph.concat_edags``) with a
+per-vertex ``trace_id`` segment array, and ``suite_sweep_grid`` evaluates
+the full alpha × m × compute_slots grid for *every member at once*:
+
+* **One union replay plan for the whole grid.**  The plan's blocks span
+  the full (member, m, compute_slots) product: each member's recorded
+  schedule per machine pair (issue orders + augmented levels) is fetched
+  from the usual reuse tiers — the member's in-process plan memo, then
+  the persistent ``schedule_cache`` keyed by that member's
+  ``trace_digest()`` — and only missing combinations pay the serial
+  recording run.  The schedules are then concatenated in rank space:
+  slot chains are offset with their block, so they never cross a block
+  boundary (each trace owns its own m memory slots and ``compute_slots``
+  ALU slots per machine configuration, exactly as if simulated alone),
+  and the union's augmented levels are the per-block levels unchanged —
+  a block-diagonal graph levelizes blockwise.  One
+  ``build_level_partition`` call produces the union ``LevelCSR``.
+
+* **One stacked (max,+) replay for the whole grid.**  Levels of
+  independent blocks *interleave*: the shared numpy/jax level kernel
+  (``backend.level_accumulate``) sees fatter levels and at most
+  ``max_blocks n_levels`` serial steps instead of ``sum`` over K members
+  × every (m, compute_slots) pair — per-level dispatch, not FLOPs,
+  dominates deep replay graphs, so this is where the suite wins over
+  independent pipelines.  Per-block makespans fall out of the shared row
+  matrix via one segmented reduction (``backend.segment_max_rows`` over
+  the plan's ``seg_ptr``); the alpha axis rides the matrix columns,
+  chunked under the replay memory budget.
+
+* **Bit-exactness is per member, unconditional.**  The per-point
+  ``(R, E, vid)`` issue-order verification runs on each member's block
+  rows exactly as in the single-trace engine; any (member, point) the
+  union schedule fails to certify falls back to that member's own
+  ``simulate_batch`` (which re-records and, with ``use_cache``, persists
+  the replacement).  Every entry of the suite grid is therefore
+  bit-identical to single-trace ``sweep_grid`` — property-tested in
+  ``tests/test_suite.py`` and asserted per trace in the suite benchmark.
+
+The analytic side rides the same union: ``suite_t_inf_sweep`` runs one
+batched span pass over the union and segments it per trace, and
+``metrics.suite_grid_report`` emits per-trace Eq 1-4 tables from one
+``mem_layers`` pass plus segmented reductions.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import backend as _bk
+from . import schedule_cache as _sc
+from .graph import EDag, _auto_sweep_chunk, concat_edags
+from .scheduler import (_ReplayPlan, _aug_level_valid,
+                        _attach_queue_partition, _event_loop, _memo_plan,
+                        _points_chunk, _slot_qpred, _validate_schedule,
+                        _verify_class, simulate_batch, sweep_grid)
+
+# Per-suite union-plan memo: one entry per (m, compute_slots, unit).
+_SUITE_PLAN_CAP = 8
+
+
+class EDagSuite:
+    """K member eDAGs viewed as one block-diagonal union trace.
+
+    ``members`` keeps the original graphs (verification and fallbacks run
+    against them); ``offsets`` is the (K+1,) block-boundary array in
+    union vertex space and ``trace_id`` the per-vertex segment array
+    mapping union vertices back to members.  The union eDAG itself
+    (``.union``) is built lazily — the simulator path never needs it,
+    only the analytic suite passes do."""
+
+    def __init__(self, members: Sequence[EDag],
+                 names: Optional[Sequence[str]] = None):
+        self.members = list(members)
+        for g in self.members:
+            if not isinstance(g, EDag):
+                raise TypeError(f"suite members must be EDag, got {type(g)}")
+            g._finalize()
+        if names is None:
+            names = [f"trace{i}" for i in range(len(self.members))]
+        elif len(names) != len(self.members):
+            raise ValueError("names length mismatch")
+        self.names = list(names)
+        counts = np.array([g.n_vertices for g in self.members],
+                          dtype=np.int64)
+        self.offsets = np.concatenate(([0], np.cumsum(counts)))
+        self.trace_id = np.repeat(
+            np.arange(len(self.members), dtype=np.int64), counts)
+        self._edge_counts = [g.n_edges for g in self.members]
+        self._union: Optional[EDag] = None
+        self._suite_plans: OrderedDict = OrderedDict()
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.members)
+
+    @property
+    def n_vertices(self) -> int:
+        return int(self.offsets[-1])
+
+    def _check_members(self) -> None:
+        """Refuse to operate on mutated members.
+
+        ``EDag`` is append-only, so unchanged vertex *and* edge counts
+        mean every member is exactly the graph it was at construction
+        time; anything else would silently misalign the frozen
+        ``offsets`` / ``trace_id`` segment arrays (and any memoized
+        union), so it raises instead."""
+        for k, g in enumerate(self.members):
+            if (g.n_vertices != int(self.offsets[k + 1] - self.offsets[k])
+                    or g.n_edges != self._edge_counts[k]):
+                raise ValueError(
+                    f"suite member {k} ({self.names[k]!r}) was mutated "
+                    "after EDagSuite construction; build a new suite")
+
+    @property
+    def union(self) -> EDag:
+        """The block-diagonal union eDAG (built once, on first use)."""
+        self._check_members()
+        if self._union is None:
+            self._union = concat_edags(self.members)
+            self._union._finalize()
+        return self._union
+
+    def segment_max(self, values: np.ndarray,
+                    empty: float = 0.0) -> np.ndarray:
+        """Per-trace max of a union-vertex-space array (rows = vertices)."""
+        self._check_members()
+        return _bk.segment_max_rows(np.asarray(values, dtype=np.float64),
+                                    self.offsets, empty=empty)
+
+    def segment_sum(self, values: np.ndarray) -> np.ndarray:
+        """Per-trace sum of a union-vertex-space array (rows = vertices)."""
+        self._check_members()
+        return _bk.segment_sum_rows(np.asarray(values, dtype=np.float64),
+                                    self.offsets)
+
+
+# ------------------------------------------------------------- analytic side
+
+def suite_t_inf_sweep(suite: EDagSuite, alphas, unit: float = 1.0,
+                      backend: Optional[str] = None) -> np.ndarray:
+    """Span T-inf per (trace, alpha) from one union-batched level pass.
+
+    Returns a (K, n_alphas) array; row k is bit-identical to
+    ``metrics.t_inf_sweep(member_k, alphas, unit)`` — the union is block-
+    diagonal, so the level recurrence restricted to block k performs
+    exactly the member's operations.  Chunked like ``t_inf_sweep_mem`` so
+    the (n_union, chunk) working set stays cache-resident."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    suite._check_members()
+    K = suite.n_traces
+    if K == 0 or suite.n_vertices == 0 or len(alphas) == 0:
+        return np.zeros((K, len(alphas)))
+    u = suite.union
+    chunk = _auto_sweep_chunk(u.n_vertices)
+    out = []
+    for i in range(0, len(alphas), chunk):
+        F = np.where(u.is_mem[:, None], alphas[None, i:i + chunk],
+                     float(unit))
+        F = u._accumulate_batch_nk(F, backend=backend)
+        out.append(_bk.segment_max_rows(F, suite.offsets))
+    return np.concatenate(out, axis=1)
+
+
+# ------------------------------------------------------------ the suite plan
+
+class _BlockSched:
+    """One (member, m, compute_slots) block of a union replay plan:
+    everything the per-point (R, E, vid) verification and the fallback
+    path need, in member-local rank space (F/R block views index with
+    these directly), plus where the block's results land in the grid."""
+
+    __slots__ = ("g", "trace", "pair", "m", "cs", "off", "rank",
+                 "O_mem", "Om_rel", "O_alu", "Oa_rel")
+
+    def __init__(self, g: EDag, trace: int, pair: int, m: int, cs: int,
+                 off: int, rank, O_mem, O_alu):
+        self.g = g
+        self.trace, self.pair = trace, pair
+        self.m, self.cs, self.off = m, cs, off
+        self.rank = rank
+        self.O_mem, self.O_alu = O_mem, O_alu
+        self.Om_rel = rank[O_mem]
+        self.Oa_rel = rank[O_alu] if cs else np.zeros(0, dtype=np.int64)
+
+
+class _SuitePlan:
+    """Union replay plan over the full (member, m, compute_slots) block
+    product: one ``LevelCSR`` for the whole grid, per-block verification
+    state, and the block boundary array (``seg_ptr``) the per-block
+    makespan reduction runs over.  ``replay`` evaluates every grid
+    configuration for every member at every sweep point of a chunk in a
+    single ``level_accumulate`` call."""
+
+    __slots__ = ("n", "lv", "mem_rows", "seg_ptr", "blocks")
+
+    def __init__(self, n: int, lv, mem_rows, seg_ptr, blocks):
+        self.n = n
+        self.lv = lv
+        self.mem_rows = mem_rows
+        self.seg_ptr = seg_ptr
+        self.blocks = blocks
+
+    def replay(self, alphas: np.ndarray, unit: float,
+               backend: Optional[str] = None):
+        """All blocks × all points at once: finish and ready times,
+        (n_rows + 1, k) in blockwise pop-order row space (the last row is
+        the shared zero sentinel every block's slot chains bottom out
+        on)."""
+        k = len(alphas)
+        F = np.empty((self.n + 1, k))
+        F.fill(unit)
+        F[self.mem_rows] = alphas            # rows of memory vertices
+        F[-1] = 0.0
+        R = np.zeros_like(F)
+        _bk.level_accumulate(self.lv, F, clamp=False, R_out=R,
+                             backend=backend)
+        return F, R
+
+
+def _member_schedule(g: EDag, m: int, cs: int, unit: float, a0: float,
+                     use_cache: bool):
+    """One member's recorded schedule ``(topo, O_mem, O_alu, level|None,
+    fresh)`` — memo, then disk (keyed by the member's trace digest), then
+    one instrumented recording run at alpha ``a0``."""
+    n = g.n_vertices
+    if use_cache:
+        key = (m, cs, float(unit))
+        memo = getattr(g, "_replay_plans", None)
+        if memo is not None and key in memo:
+            p = memo[key]
+            memo.move_to_end(key)
+            _sc.stats["memory_hits"] += 1
+            return p.topo, p.O_mem, p.O_alu, p.level_aug, False
+        if n >= _sc.min_vertices():
+            got = _sc.load(g.trace_digest(), m, cs, n, unit)
+            if got is not None:
+                topo, O_mem, O_alu, level = got
+                if _validate_schedule(g, m, cs, topo, O_mem,
+                                      O_alu) is not None:
+                    _sc.stats["disk_hits"] += 1
+                    return topo, O_mem, O_alu, level, False
+        _sc.stats["misses"] += 1
+    _sc.stats["record_runs"] += 1
+    _, topo, O_mem, O_alu = _event_loop(g.is_mem, g._sim_lists(), m, a0,
+                                        unit, cs, record=True)
+    return topo, O_mem, O_alu, None, True
+
+
+def _build_suite_plan(suite: EDagSuite, pairs, unit: float, a0: float,
+                      use_cache: bool) -> _SuitePlan:
+    """Concatenate the (member, m, compute_slots) block schedules into one
+    block-diagonal replay plan for the whole grid: slot chains and DAG
+    edges are offset with their block, per-block augmented levels
+    concatenate unchanged (blocks are disconnected), and a single
+    ``build_level_partition`` call produces the union ``LevelCSR``.  The
+    serial depth of the resulting replay is the *deepest block*, not the
+    sum over members and machine pairs."""
+    K = suite.n_traces
+    n_rows = suite.n_vertices * len(pairs)
+    qpred_u = np.full(n_rows, n_rows, dtype=np.int64)
+    is_mem_rows = np.zeros(n_rows, dtype=bool)
+    src_parts, dst_parts, lvl_parts = [], [], []
+    blocks: list = []
+    seg_ptr = [0]
+    off = 0
+    for pair, (m, cs) in enumerate(pairs):
+        for k, g in enumerate(suite.members):
+            n = g.n_vertices
+            seg_ptr.append(off + n)
+            if n == 0:
+                blocks.append(None)
+                continue
+            topo, O_mem, O_alu, level, fresh = _member_schedule(
+                g, m, cs, unit, a0, use_cache)
+            rank = np.empty(n, dtype=np.int64)
+            rank[topo] = np.arange(n)
+            qpred = _slot_qpred(rank, O_mem, O_alu, m, cs, n)
+            src_r, dst_r = rank[g.src], rank[g.dst]
+            qdst = np.nonzero(qpred < n)[0]
+            asrc = np.concatenate([src_r, qpred[qdst]])
+            adst = np.concatenate([dst_r, qdst])
+            if level is not None:
+                level = np.asarray(level)
+                if not _aug_level_valid(level, asrc, adst, n):
+                    level = None      # invalid persisted levels: recompute
+            if level is None:
+                level = _bk.levelize(asrc, adst, n)
+            if fresh and use_cache:
+                persisted = n >= _sc.min_vertices() and \
+                    _sc.store(g.trace_digest(), m, cs, n, unit, topo,
+                              O_mem, O_alu, level)
+                if not persisted:
+                    # below the disk floor (or persistence disabled) the
+                    # member memo is the only tier that can make this
+                    # recording reusable — "suite warms singles" must
+                    # hold there too, so pay the one member plan build
+                    _memo_plan(g, (m, cs, float(unit)),
+                               _ReplayPlan(g, topo, O_mem, O_alu, m, cs,
+                                           level=level))
+            # block offsets: slot chains stay inside their block, missing
+            # predecessors retarget the shared sentinel row n_rows
+            qpred_u[off:off + n] = np.where(qpred < n, qpred + off, n_rows)
+            src_parts.append(src_r + off)
+            dst_parts.append(dst_r + off)
+            lvl_parts.append(level)
+            is_mem_rows[off:off + n] = g.is_mem[topo]
+            blocks.append(_BlockSched(g, k, pair, m, cs, off, rank,
+                                      O_mem, O_alu))
+            off += n
+    empty = np.zeros(0, dtype=np.int64)
+    src_u = np.concatenate(src_parts) if src_parts else empty
+    dst_u = np.concatenate(dst_parts) if dst_parts else empty
+    level_u = np.concatenate(lvl_parts) if lvl_parts else empty
+    lv = _bk.build_level_partition(src_u, dst_u, level_u, n_rows)
+    _attach_queue_partition(lv, dst_u, qpred_u, level_u)
+    lv.seg_ptr = np.asarray(seg_ptr, dtype=np.int64)
+    return _SuitePlan(n_rows, lv, np.flatnonzero(is_mem_rows),
+                      lv.seg_ptr, blocks)
+
+
+def _memo_suite_plan(suite: EDagSuite, key, plan: _SuitePlan) -> None:
+    memo = suite._suite_plans
+    memo[key] = plan
+    memo.move_to_end(key)
+    while len(memo) > _SUITE_PLAN_CAP:
+        memo.popitem(last=False)
+
+
+def _suite_grid_batch(suite: EDagSuite, alphas: np.ndarray, pairs,
+                      unit: float, backend: Optional[str],
+                      mem_budget: Optional[int],
+                      use_cache: bool) -> np.ndarray:
+    """The whole grid in one union plan + one chunked stacked replay:
+    returns (K, n_alphas, n_pairs) makespans.  ``alphas`` must arrive
+    sorted, unique, finite and positive (``suite_sweep_grid`` guarantees
+    it)."""
+    K, P = suite.n_traces, len(alphas)
+    out = np.zeros((K, P, len(pairs)))
+    if suite.n_vertices == 0 or P == 0 or not pairs:
+        return out
+    key = (tuple(pairs), float(unit))
+    plan = suite._suite_plans.get(key) if use_cache else None
+    if plan is not None:
+        suite._suite_plans.move_to_end(key)
+    else:
+        plan = _build_suite_plan(suite, pairs, unit, float(alphas[0]),
+                                 use_cache)
+        if use_cache:
+            _memo_suite_plan(suite, key, plan)
+    B = len(plan.blocks)
+    ok = np.zeros((B, P), dtype=bool)
+    chunk = _points_chunk(plan.n, P, mem_budget)
+    for c0 in range(0, P, chunk):
+        cols = np.arange(c0, min(c0 + chunk, P))
+        F, R = plan.replay(alphas[cols], unit, backend=backend)
+        mk = _bk.segment_max_rows(F[:-1], plan.seg_ptr)
+        for b, blk in enumerate(plan.blocks):
+            if blk is None:           # empty member: makespan 0 everywhere
+                ok[b, cols] = True
+                continue
+            off, n = blk.off, blk.g.n_vertices
+            Fv, Rv = F[off:off + n], R[off:off + n]
+            okc = _verify_class(blk.g, blk.rank, Fv, Rv,
+                                blk.O_mem, blk.Om_rel)
+            if blk.cs:
+                okc &= _verify_class(blk.g, blk.rank, Fv, Rv,
+                                     blk.O_alu, blk.Oa_rel)
+            out[blk.trace, cols[okc], blk.pair] = mk[b, okc]
+            ok[b, cols] = okc
+    if not ok.all():
+        # any (block, point) the union schedule failed to certify falls
+        # back to that member's own batched engine (which re-records and,
+        # with use_cache, persists/memoizes the replacement — the next
+        # suite plan build picks it up through the member tiers), and the
+        # stale union plan is dropped so repeated suite sweeps converge
+        if use_cache:
+            suite._suite_plans.pop(key, None)
+        for b, blk in enumerate(plan.blocks):
+            if blk is None:
+                continue
+            bad = np.nonzero(~ok[b])[0]
+            if len(bad):
+                out[blk.trace, bad, blk.pair] = simulate_batch(
+                    blk.g, alphas[bad], m=blk.m, unit=unit,
+                    compute_slots=blk.cs, backend=backend,
+                    mem_budget=mem_budget, use_cache=use_cache)
+    return out
+
+
+# ------------------------------------------------------------- entry points
+
+def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
+                     unit: float = 1.0, backend: Optional[str] = None,
+                     mem_budget: Optional[int] = None,
+                     use_cache: bool = True) -> np.ndarray:
+    """Simulated makespans for every member over the full grid, in one
+    level pass per (m, compute_slots) pair.
+
+    Returns a ``(n_traces, len(alphas), len(ms), len(compute_slots))``
+    array whose slice ``[k]`` is bit-identical to
+    ``sweep_grid(suite.members[k], alphas, ms, compute_slots, unit)`` —
+    the whole-suite entry point for paper-protocol runs.
+
+    Cost structure: the suite pays ONE union plan for the whole grid
+    (block schedules come from the member plan memos / the persistent
+    ``schedule_cache`` keyed by each member's trace digest; only missing
+    (member, m, compute_slots) combinations record) and one stacked
+    alpha replay whose serial depth is the *deepest* block, not the sum
+    over members and machine pairs — independent blocks interleave
+    inside each level of the shared kernel, and the replay streams in
+    alpha chunks under the memory budget.  Duplicate or unsorted alphas
+    are deduped and sorted internally; the returned alpha axis follows
+    caller order.  Degenerate machine parameters (non-positive/
+    non-finite alphas or unit, m < 1) delegate to the per-member engine,
+    which keeps exact reference semantics."""
+    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
+    ms_l = [int(v) for v in np.atleast_1d(ms)]
+    css = [int(v) for v in np.atleast_1d(compute_slots)]
+    K = suite.n_traces
+    out = np.zeros((K, len(alphas), len(ms_l), len(css)))
+    suite._check_members()
+    if K == 0 or len(alphas) == 0:
+        return out
+    unit = float(unit)
+    degenerate = (unit <= 0 or not np.isfinite(unit) or
+                  (alphas <= 0).any() or not np.isfinite(alphas).all() or
+                  min(ms_l, default=1) < 1)
+    if degenerate:
+        for k, g in enumerate(suite.members):
+            out[k] = sweep_grid(g, alphas, ms=ms_l, compute_slots=css,
+                                unit=unit, backend=backend,
+                                mem_budget=mem_budget, use_cache=use_cache)
+        return out
+    uniq, inv = np.unique(alphas, return_inverse=True)
+    pairs = [(mm, cs) for mm in ms_l for cs in css]
+    res = np.zeros((K, len(uniq), len(pairs)))
+    # one union plan per distinct m: blocks sharing m have ~equal replay
+    # depth (slot-chain depth scales with 1/m), so merging their
+    # compute_slots variants widens levels without deepening the union,
+    # while distinct m values stay separate — a shallow m=8 replay never
+    # pays the m=2 serial depth, and smaller plans keep the whole alpha
+    # axis inside one memory-budget chunk
+    groups: OrderedDict = OrderedDict()
+    for i, (mm, _cs) in enumerate(pairs):
+        groups.setdefault(mm, []).append(i)
+    for idxs in groups.values():
+        sub = _suite_grid_batch(suite, uniq, [pairs[i] for i in idxs],
+                                unit, backend, mem_budget, use_cache)
+        res[:, :, idxs] = sub
+    out[:] = res[:, inv].reshape(K, len(alphas), len(ms_l), len(css))
+    return out
+
+
+def suite_latency_sweep(suite: EDagSuite, alphas, m: int = 4,
+                        unit: float = 1.0, compute_slots: int = 0,
+                        backend: Optional[str] = None,
+                        mem_budget: Optional[int] = None,
+                        use_cache: bool = True) -> np.ndarray:
+    """Single-axis suite sweep: ``(n_traces, len(alphas))`` makespans,
+    row k bit-identical to ``latency_sweep(suite.members[k], ...)``."""
+    return suite_sweep_grid(suite, alphas, ms=(m,),
+                            compute_slots=(compute_slots,), unit=unit,
+                            backend=backend, mem_budget=mem_budget,
+                            use_cache=use_cache)[:, :, 0, 0]

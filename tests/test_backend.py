@@ -154,6 +154,92 @@ def test_jax_kernel_R_out_with_slot_chain_f32():
     assert np.array_equal(R_np, R_jx)
 
 
+def test_jax_kernel_segmented_slot_chains_f32():
+    """The union (multi-trace) replay shape: a block-diagonal partition
+    whose slot chains are segmented by block boundaries — each member
+    trace owns its own slot pool, chains never cross blocks, and all
+    blocks share one zero sentinel row.  The two-output pallas level step
+    must match the numpy kernel bit-for-bit on finish AND ready times.
+    This closes the gap where only single-trace chains were covered."""
+    from repro.core import EDagSuite
+    from repro.core.suite import _build_suite_plan
+
+    members = []
+    for seed, n, p in ((61, 45, 0.10), (62, 25, 0.18), (63, 35, 0.07)):
+        rng = np.random.default_rng(seed)
+        g = EDag()
+        for i in range(n):
+            g.add_vertex(is_mem=bool(rng.random() < 0.6))
+            for j in range(i):
+                if rng.random() < p:
+                    g.add_edge(j, i)
+        g._finalize()
+        members.append(g)
+    suite = EDagSuite(members)
+    plan = _build_suite_plan(suite, [(2, 3)], 1.0, 80.0, use_cache=False)
+
+    # the segment invariant itself: every slot chain stays inside its
+    # block (or points at the shared sentinel row n_union)
+    n_u = suite.n_vertices
+    assert plan.n == n_u                   # one pair: one block per member
+    qp = plan.lv.qpred
+    tid = suite.trace_id
+    real = np.nonzero(qp < n_u)[0]
+    assert len(real)                       # the chains are exercised
+    assert np.array_equal(tid[real], tid[qp[real]])
+    assert np.array_equal(plan.lv.seg_ptr, suite.offsets)
+
+    k = 4
+    base = np.full((n_u + 1, k), 1.0, dtype=np.float32)
+    base[plan.mem_rows] = np.linspace(40, 160, k, dtype=np.float32)
+    base[-1] = 0.0
+    R_np = np.zeros_like(base)
+    R_jx = np.zeros_like(base)
+    F_np = level_accumulate(plan.lv, base.copy(), clamp=False, R_out=R_np,
+                            backend="numpy")
+    F_jx = level_accumulate(plan.lv, base.copy(), clamp=False, R_out=R_jx,
+                            backend="jax")
+    assert np.array_equal(F_np, F_jx)
+    assert np.array_equal(R_np, R_jx)
+
+    # and blockwise, the union pass equals each member's own plan run
+    # on the same dtype (block-diagonal exactness on the jax path too)
+    from repro.core.scheduler import _ReplayPlan, _event_loop
+    for i, g in enumerate(members):
+        _, topo, O_mem, O_alu = _event_loop(
+            g.is_mem, g._sim_lists(), 2, 80.0, 1.0, 3, record=True)
+        mplan = _ReplayPlan(g, topo, O_mem, O_alu, 2, 3)
+        mb = np.concatenate(
+            [base[suite.offsets[i]:suite.offsets[i + 1]], base[-1:]])
+        mF = level_accumulate(mplan.lv, mb.copy(), clamp=False,
+                              R_out=np.zeros_like(mb), backend="jax")
+        assert np.array_equal(
+            mF[:-1], F_jx[suite.offsets[i]:suite.offsets[i + 1]])
+
+
+def test_segment_reductions():
+    from repro.core import segment_max_rows, segment_sum_rows
+
+    F = np.arange(12.0).reshape(6, 2)
+    ptr = np.array([0, 2, 2, 5, 6])
+    mx = segment_max_rows(F, ptr, empty=-1.0)
+    assert np.array_equal(mx, [[2.0, 3.0], [-1.0, -1.0], [8.0, 9.0],
+                               [10.0, 11.0]])
+    sm = segment_sum_rows(F, ptr)
+    assert np.array_equal(sm, [[2.0, 4.0], [0.0, 0.0], [18.0, 21.0],
+                               [10.0, 11.0]])
+    # 1-D values and the all-empty edge
+    assert np.array_equal(segment_max_rows(np.arange(3.0), [0, 3]), [2.0])
+    assert np.array_equal(segment_max_rows(np.zeros(0), [0, 0, 0]),
+                          [0.0, 0.0])
+    # rows beyond seg_ptr[-1] (e.g. the replay's sentinel row) belong to
+    # no segment and must not leak into the last one
+    assert np.array_equal(segment_max_rows(np.arange(10.0).reshape(5, 2),
+                                           [0, 2]), [[2.0, 3.0]])
+    assert np.array_equal(segment_sum_rows(np.arange(10.0).reshape(5, 2),
+                                           [0, 2]), [[2.0, 4.0]])
+
+
 def test_simulate_batch_jax_backend_exact():
     """The batched simulator stays bit-identical to the reference when the
     jax backend is requested (the float64 guard routes the replay to the

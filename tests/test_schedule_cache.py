@@ -93,6 +93,110 @@ def test_store_load_roundtrip(cache_env):
     assert sc.load(g.trace_digest(), 4, 0, g.n_vertices + 1, 1.0) is None
 
 
+def test_delta_encoding_roundtrip_nonmonotone(cache_env):
+    """Issue orders are not monotone — the int32 delta encoding must
+    roundtrip arbitrary valid (in-range) schedules exactly, and the
+    stored arrays must actually be int32 deltas (the compaction)."""
+    g = build_graph(seed=5)
+    n = g.n_vertices
+    rng = np.random.default_rng(0)
+    topo = rng.permutation(n).astype(np.int64)
+    O_mem = rng.permutation(np.flatnonzero(g.is_mem)).astype(np.int64)
+    O_alu = rng.permutation(np.flatnonzero(~g.is_mem)).astype(np.int64)
+    level = rng.integers(0, n, size=n).astype(np.int64)
+    assert sc.store(g.trace_digest(), 4, 2, n, 1.0, topo, O_mem, O_alu,
+                    level)
+    got = sc.load(g.trace_digest(), 4, 2, n, 1.0)
+    assert got is not None
+    for want, have in zip((topo, O_mem, O_alu, level), got):
+        assert have.dtype == np.int64 and np.array_equal(want, have)
+    (entry,) = list(cache_env.glob("*.npz"))
+    with np.load(entry) as z:
+        assert int(z["format"]) == 3
+        for key in sc._ARRAY_KEYS:
+            assert z[key].dtype == np.int32
+
+
+def test_store_refuses_unencodable_arrays(cache_env):
+    """Schedules the int32 delta encoding cannot represent are refused at
+    store time rather than written lossily."""
+    g = build_graph()
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    ok_level = np.zeros(n, dtype=np.int64)
+    bad = [
+        dict(level=np.arange(n, dtype=np.int64) - 10 ** 6),  # negative
+        dict(level=np.arange(n, dtype=np.int64) * 2 ** 40),  # > int32 ids
+        dict(level=np.stack([ok_level, ok_level])),          # wrong ndim
+        dict(topo=topo.astype(np.int64) + 2 ** 31),          # out of range
+    ]
+    for kw in bad:
+        args = dict(topo=topo, O_mem=O_mem, O_alu=O_alu, level=ok_level)
+        args.update(kw)
+        assert not sc.store(g.trace_digest(), 4, 0, n, 1.0, **args)
+    assert list(cache_env.glob("*.npz")) == []
+
+
+def test_old_format_entry_rejected_and_rerecorded(cache_env):
+    """A format-2 (pre-delta-encoding) entry at the right path must miss
+    — no in-place migration, no crash — and the sweep re-records."""
+    g = build_graph(seed=7)
+    n = g.n_vertices
+    alphas = [50.0, 100.0, 200.0]
+    want = np.array([simulate_reference(g, alpha=a) for a in alphas])
+    path = sc._entry_path(cache_env, g.trace_digest(), 4, 0, 1.0)
+    np.savez_compressed(
+        path, format=2, digest=g.trace_digest(), n=n, unit=1.0, m=4,
+        compute_slots=0, topo=np.arange(n, dtype=np.int64),
+        O_mem=np.flatnonzero(g.is_mem).astype(np.int64),
+        O_alu=np.zeros(0, dtype=np.int64),
+        level=np.zeros(n, dtype=np.int64))
+    assert sc.load(g.trace_digest(), 4, 0, n, 1.0) is None
+    sc.reset_stats()
+    assert np.array_equal(latency_sweep(build_graph(seed=7), alphas), want)
+    assert sc.stats["record_runs"] == 1
+
+
+def test_wrong_dtype_delta_arrays_rejected(cache_env):
+    """A format-3 entry whose stored arrays are not int32 deltas (a
+    corrupt or foreign writer) must miss."""
+    g = build_graph(seed=12)
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    assert sc.store(g.trace_digest(), 4, 0, n, 1.0, topo, O_mem,
+                    np.zeros(0, dtype=np.int64),
+                    np.zeros(n, dtype=np.int64))
+    (entry,) = list(cache_env.glob("*.npz"))
+    with np.load(entry) as z:
+        fields = {k: z[k] for k in z.files}
+    fields["topo_d"] = fields["topo_d"].astype(np.float64)
+    np.savez_compressed(entry, **fields)
+    assert sc.load(g.trace_digest(), 4, 0, n, 1.0) is None
+
+
+def test_delta_encoding_compacts_entries(cache_env):
+    """The point of the compaction: a real traced kernel's schedule (the
+    structured, strongly-correlated case the ROADMAP scale target is
+    about) stored via deltas takes well under half the bytes of the
+    raw-int64 format-2 layout it replaces."""
+    from repro.apps import polybench
+
+    g = polybench.trace_kernel("gemm", 10)
+    latency_sweep(g, [50.0, 100.0, 200.0], m=4)
+    (entry,) = list(cache_env.glob("*.npz"))
+    new_size = entry.stat().st_size
+    with np.load(entry) as z:
+        arrays = {k: np.cumsum(z[k].astype(np.int64))
+                  for k in sc._ARRAY_KEYS}
+    old = cache_env / "old_format.npz"
+    with open(old, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    assert new_size < 0.5 * old.stat().st_size
+
+
 def test_load_rejects_corrupt_entry(cache_env):
     g = build_graph()
     topo = np.arange(g.n_vertices, dtype=np.int64)
