@@ -23,6 +23,13 @@ Measures, at paper-size PolyBench traces (plus HPCG for tracing):
                   (one stacked level pass vs K independent pipelines);
                   every per-trace row asserted bit-identical, aggregate
                   speedup floor 2x at paper sizes;
+* **device**      the accelerator-resident grid — ``sweep_grid`` and
+                  ``suite_sweep_grid`` forced onto the jax backend with
+                  no x64 flag, so every replay chunk runs the
+                  error-bounded float32 device mode; >= 90% of replay
+                  chunks must execute on the jax backend
+                  (``backend.stats``) and every returned grid point is
+                  asserted bit-identical to the float64 numpy reference;
 * **cache**       the persistent schedule cache across two successive
                   *processes*: a cold child records every (m, slots)
                   schedule, a warm child sharing the same cache directory
@@ -296,6 +303,94 @@ def bench_suite_grid(names, N: int, alphas, ms, css, repeats: int,
                             kernels=list(names), floor=floor))
 
 
+def bench_device_grid(names, N: int, alphas, ms, css) -> dict:
+    """Accelerator-resident replay: the capacity-planning grid forced
+    onto the jax backend *without* the x64 flag, i.e. through the
+    error-bounded float32 device mode of ``backend.replay_accumulate``.
+
+    The alpha grid is paper-protocol clean (integer multiples), so the
+    per-column exactness certificate holds and the replay stays on
+    device: the bench asserts that >= 90% of replay chunks executed on
+    the jax backend (``backend.stats``) and that every grid point of
+    both ``sweep_grid`` and ``suite_sweep_grid`` is bit-identical to the
+    float64 numpy reference — f32 is an execution strategy, never an
+    answer.  On CPU hosts the pallas step runs in interpret mode, so the
+    timings here measure the dispatch pipeline, not accelerator FLOPs;
+    the assertions are the gate."""
+    from repro.core import backend as bk
+
+    try:
+        import jax
+    except Exception:                # pragma: no cover - jax ships in CI
+        return dict(name=f"device_grid_{len(names)}x_N{N}",
+                    skipped="jax unavailable")
+    # the bench measures the f32 replay mode, so pin the x64 flag off
+    # for its duration (restored below)
+    x64_was = bool(jax.config.jax_enable_x64)
+    if x64_was:
+        jax.config.update("jax_enable_x64", False)
+    try:
+        return _device_grid_body(bk, names, N, alphas, ms, css)
+    finally:
+        if x64_was:
+            jax.config.update("jax_enable_x64", True)
+
+
+def _device_grid_body(bk, names, N: int, alphas, ms, css) -> dict:
+    alphas = np.asarray(alphas, dtype=np.float64)
+    assert np.array_equal(alphas.astype(np.float32).astype(np.float64),
+                          alphas), "device bench needs f32-clean alphas"
+    traces = [polybench.trace_kernel(nm, N) for nm in names]
+    for g in traces:
+        g._finalize()
+        g._sim_lists()
+    suite = EDagSuite(traces, names=list(names))
+
+    t0 = time.perf_counter()
+    ref = [sweep_grid(g, alphas, ms=ms, compute_slots=css,
+                      backend="numpy", use_cache=False) for g in traces]
+    numpy_s = time.perf_counter() - t0
+    sref = suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css,
+                            backend="numpy", use_cache=False)
+
+    # replay_dtype is pinned explicitly so an ambient EDAN_X64 /
+    # EDAN_REPLAY_DTYPE cannot silently flip the bench to x64 mode —
+    # this row must measure the f32 device mode, nothing else
+    bk.reset_stats()
+    t0 = time.perf_counter()
+    dev = [sweep_grid(g, alphas, ms=ms, compute_slots=css,
+                      backend="jax", replay_dtype="float32",
+                      use_cache=False) for g in traces]
+    device_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sdev = suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css,
+                            backend="jax", replay_dtype="float32",
+                            use_cache=False)
+    suite_device_s = time.perf_counter() - t0
+    stats = dict(bk.stats)
+    assert stats["jax_f64_chunks"] == 0, \
+        "device bench leaked into x64 mode; it must measure f32 replay"
+
+    for k, nm in enumerate(names):
+        assert np.array_equal(dev[k], ref[k]), \
+            f"device grid diverged from the f64 reference on {nm}"
+        assert np.array_equal(sdev[k], ref[k]), \
+            f"device suite grid diverged from the f64 reference on {nm}"
+        assert np.array_equal(sref[k], ref[k])
+    frac = stats["jax_chunks"] / max(stats["chunks"], 1)
+    assert frac >= 0.9, \
+        f"only {frac:.0%} of replay chunks ran on the jax backend"
+    return dict(name=f"device_grid_{len(names)}x_N{N}",
+                n_traces=len(names),
+                n_points=int(sum(r.size for r in ref)),
+                jax_chunk_fraction=frac, bitexact=True,
+                device_s=device_s, suite_device_s=suite_device_s,
+                numpy_s=numpy_s, **{k: int(v) for k, v in stats.items()},
+                config=dict(N=N, alphas=list(map(float, alphas)),
+                            ms=list(ms), compute_slots=list(css),
+                            kernels=list(names)))
+
+
 def _cache_child(cfg: dict) -> None:
     """One benchmark process: trace the kernel, run the grid, report how
     many schedules had to be recorded.  Driven twice by
@@ -386,6 +481,9 @@ def run_sim(smoke: bool = False) -> dict:
             repeats=2, floor=1.0)
         sim["cache"] = bench_schedule_cache(
             "gemm", 14, np.linspace(50.0, 300.0, 11), (2, 4), (0, 8))
+        sim["device"] = bench_device_grid(
+            ("gemm", "mvt"), N=12, alphas=np.arange(50.0, 301.0, 50.0),
+            ms=(2, 4), css=(0, 4))
     else:
         sim = bench_sim(polybench.PAPER_15, N=20, n_points=51, repeats=2)
         sim["grid"] = bench_grid(polybench.PAPER_15, N=20,
@@ -399,6 +497,11 @@ def run_sim(smoke: bool = False) -> dict:
             repeats=2, floor=2.0)
         sim["cache"] = bench_schedule_cache(
             "gemm", 20, np.linspace(50.0, 300.0, 26), (2, 4, 8), (0, 8))
+        # the acceptance config: PAPER_15 on the jax backend without x64
+        # — >= 90% of replay chunks on device, every point bit-identical
+        sim["device"] = bench_device_grid(
+            polybench.PAPER_15, N=20, alphas=np.arange(50.0, 301.0, 10.0),
+            ms=(2, 4, 8), css=(0, 8))
     return sim
 
 
@@ -445,6 +548,14 @@ def main() -> None:
           f"{suite['loop_s']:.3f}s,{suite['speedup']:.1f}x "
           f"(cold {suite['cold_s']:.3f}s / "
           f"{suite['cold_records']} recordings)")
+    dev = sim["device"]
+    if dev.get("skipped"):
+        print(f"{dev['name']},sim/device,skipped ({dev['skipped']})")
+    else:
+        print(f"{dev['name']},sim/device,{dev['device_s']:.3f}s,"
+              f"{dev['numpy_s']:.3f}s,"
+              f"{dev['jax_chunk_fraction']:.0%} chunks on jax "
+              f"(demoted columns: {dev['demoted_columns']}, bit-identical)")
     cache = sim["cache"]
     print(f"grid_cache_{cache['config']['kernel']}"
           f"_N{cache['config']['N']},sim/cache,"

@@ -15,8 +15,9 @@ from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
                       bandwidth_sweep, cost_matrix, data_movement_over_time,
                       cost_vector, grid_report, report, Report,
                       suite_grid_report, sweep_report, t_inf_sweep)
-from .backend import (LevelCSR, level_accumulate, levelize, segment_max_rows,
-                      segment_sum_rows, select_backend)
+from .backend import (LevelCSR, column_quanta, level_accumulate, levelize,
+                      replay_accumulate, replay_dtype_policy,
+                      segment_max_rows, segment_sum_rows, select_backend)
 from .scheduler import (simulate, simulate_reference, simulate_batch,
                         latency_sweep, sweep_grid)
 from .suite import (EDagSuite, suite_latency_sweep, suite_sweep_grid,
@@ -41,7 +42,8 @@ __all__ = [
     "simulate", "simulate_reference", "simulate_batch", "latency_sweep",
     "sweep_grid", "concat_edags", "EDagSuite", "suite_latency_sweep",
     "suite_sweep_grid", "suite_t_inf_sweep",
-    "LevelCSR", "level_accumulate", "levelize", "segment_max_rows",
+    "LevelCSR", "column_quanta", "level_accumulate", "levelize",
+    "replay_accumulate", "replay_dtype_policy", "segment_max_rows",
     "segment_sum_rows", "select_backend", "schedule_cache", "parse_hlo",
     "analyze_collectives", "shape_bytes", "hlo_flops_estimate",
     "hlo_hbm_bytes_estimate", "axis_signature_table", "edag_from_fn",

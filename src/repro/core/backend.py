@@ -19,18 +19,31 @@ Two implementations are provided:
   compiled on TPU/GPU).  Auto-selected when jax sees an accelerator;
   opt in/out explicitly with ``EDAN_BACKEND=numpy|jax``.  The pallas step
   emits the ready times (``R_out``) alongside the finish times, so the
-  batched simulator's verification pass stays on the accelerator too —
-  for float64 inputs (the simulator's replay matrices) only when jax
-  runs with the x64 flag; otherwise the guard below keeps them exact on
-  the numpy kernel.
+  batched simulator's verification pass stays on the accelerator too.
 
 Both backends implement the same (max, +) recurrence.  max is exact and
 every ``+ service`` is a single IEEE addition, so results are reproducible
 bit-for-bit for a given dtype on either backend.
+
+For the *replay* matrices (float64) the jax path additionally supports two
+device-resident execution strategies behind ``replay_accumulate``:
+
+* **x64 mode** (``EDAN_X64=1`` / ``replay_dtype="float64"``) enables
+  jax's x64 flag and runs the exact float64 recurrence on device.
+* **error-bounded float32 mode** (the default on non-x64 jax) runs the
+  stacked pass in float32 on device, then certifies each column against
+  a per-level error bound on host: finish times are nonnegative integer
+  multiples of the column's cost quantum ``q`` (``column_quanta``), so a
+  computed makespan safely below ``2^24 * q`` proves the whole float32
+  pass was *exact* — bit-identical to the float64 kernel.  Columns that
+  fail the bound are demoted to the numpy float64 kernel, so returned
+  results are unconditionally bit-exact; float32 is an execution
+  strategy, never an answer.
 """
 from __future__ import annotations
 
 import os
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
 
@@ -38,6 +51,24 @@ import numpy as np
 
 _BACKENDS = ("numpy", "jax")
 _AUTO_BACKEND: Optional[str] = None
+_REPLAY_DTYPES = ("float32", "float64")
+
+#: Per-process execution counters for the replay dispatch
+#: (``replay_accumulate``): ``chunks`` counts dispatches; ``jax_chunks``
+#: those whose level pass ran on the jax backend (``jax_f64_chunks`` the
+#: subset that ran in exact float64 under the x64 flag); ``numpy_chunks``
+#: those the numpy kernel handled end to end (including chunks whose f32
+#: pass certified no column at all); ``certified_columns`` /
+#: ``demoted_columns`` count sweep columns the float32 certificate
+#: accepted / demoted to the float64 numpy kernel.
+stats = dict(chunks=0, jax_chunks=0, jax_f64_chunks=0, numpy_chunks=0,
+             certified_columns=0, demoted_columns=0)
+
+
+def reset_stats() -> None:
+    """Zero the replay-dispatch counters (tests and benchmarks)."""
+    for k in stats:
+        stats[k] = 0
 
 
 def select_backend(override: Optional[str] = None) -> str:
@@ -46,12 +77,18 @@ def select_backend(override: Optional[str] = None) -> str:
     Auto-selection returns ``jax`` only when jax is importable *and* sees a
     non-CPU device (the numpy kernels win on CPU hosts, where per-level
     dispatch, not FLOPs, dominates).  The device probe is memoized — jax
-    enumerates its backends lazily and the first call is not cheap."""
+    enumerates its backends lazily and the first call is not cheap.
+
+    An unrecognized value — from the argument or from a mistyped
+    ``$EDAN_BACKEND`` — raises with the valid choices rather than being
+    silently treated as auto."""
     global _AUTO_BACKEND
-    choice = override or os.environ.get("EDAN_BACKEND", "").strip().lower()
+    env = os.environ.get("EDAN_BACKEND", "").strip().lower()
+    choice = override or env
     if choice:
         if choice not in _BACKENDS:
-            raise ValueError(f"unknown backend {choice!r}; pick from "
+            src = "backend" if override else "$EDAN_BACKEND"
+            raise ValueError(f"unknown {src} value {choice!r}; pick from "
                              f"{_BACKENDS}")
         return choice
     if _AUTO_BACKEND is None:
@@ -63,6 +100,45 @@ def select_backend(override: Optional[str] = None) -> str:
         except Exception:
             pass
     return _AUTO_BACKEND
+
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def replay_dtype_policy(override: Optional[str] = None) -> str:
+    """Resolve the replay execution dtype policy for the jax backend.
+
+    Precedence: explicit ``replay_dtype`` argument > ``$EDAN_X64``
+    (truthy selects ``float64``) > ``$EDAN_REPLAY_DTYPE`` > the default
+    ``float32``.
+
+    ``float64`` is the opt-in x64 mode: ``replay_accumulate`` enables
+    jax's x64 flag and runs the exact float64 recurrence on device.
+    ``float32`` is the default error-bounded mode: float32 execution on
+    device with per-column float64 certification and numpy demotion (see
+    the module docstring).  The policy only matters when the jax backend
+    is selected; the numpy kernel is always float64.  Unrecognized
+    values — argument or environment — raise with the valid choices."""
+    if override:
+        if override not in _REPLAY_DTYPES:
+            raise ValueError(f"unknown replay_dtype {override!r}; pick "
+                             f"from {_REPLAY_DTYPES}")
+        return override
+    x64 = os.environ.get("EDAN_X64", "").strip().lower()
+    if x64:
+        if x64 in _TRUTHY:
+            return "float64"
+        if x64 not in _FALSY:
+            raise ValueError(f"unknown $EDAN_X64 value {x64!r}; pick from "
+                             f"{_TRUTHY + _FALSY}")
+    env = os.environ.get("EDAN_REPLAY_DTYPE", "").strip().lower()
+    if env:
+        if env not in _REPLAY_DTYPES:
+            raise ValueError(f"unknown $EDAN_REPLAY_DTYPE value {env!r}; "
+                             f"pick from {_REPLAY_DTYPES}")
+        return env
+    return "float32"
 
 
 @dataclass
@@ -269,7 +345,13 @@ def _accumulate_numpy(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
 
 # ----------------------------------------------------------------------- jax
 
-_JAX_CACHE: dict = {}
+#: Jitted level-loop cache.  Keyed by the traced flag tuple plus the
+#: input dtype and the x64 flag state, and bounded as a small LRU: a
+#: long-lived serving process sweeping many flag/dtype combinations must
+#: not accumulate compiled executables without bound (each jit object
+#: retains every shape-specialized executable it ever built).
+_JAX_CACHE: OrderedDict = OrderedDict()
+_JAX_CACHE_CAP = 8
 
 
 def _jax_padded(lv: LevelCSR):
@@ -380,9 +462,12 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
     has_q = lv.qpred is not None
     want_r = R_out is not None
     qp = (lv.qpred if has_q else np.zeros(1, dtype=np.int64)).astype(np.int32)
-    # the traced function depends only on these flags — the graph arrays are
-    # arguments, so jax.jit re-specializes per shape on its own
-    key = (has_q, clamp, want_r)
+    # the traced function depends only on these flags (the graph arrays
+    # are arguments, so jax.jit re-specializes per shape on its own); the
+    # dtype and x64 flag are part of the key so f32 replays, f64 analytic
+    # sweeps and x64-mode replays each get their own bounded slot
+    key = (has_q, clamp, want_r, F.dtype.str,
+           bool(jax.config.jax_enable_x64))
 
     def run(Fin, Rin, gat, dst_pad, qpred):
         L = gat.shape[0]
@@ -412,6 +497,9 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
     if fn is None:
         fn = jax.jit(run)
         _JAX_CACHE[key] = fn
+    _JAX_CACHE.move_to_end(key)
+    while len(_JAX_CACHE) > _JAX_CACHE_CAP:
+        _JAX_CACHE.popitem(last=False)
     Rin = jnp.asarray(R_out) if want_r else jnp.zeros((1, F.shape[1]),
                                                       dtype=F.dtype)
     Fj, Rj = fn(jnp.asarray(F), Rin, jnp.asarray(gather), jnp.asarray(dsts),
@@ -469,3 +557,203 @@ def level_accumulate(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
             # a backend issue, fall back to the reference numpy kernel
             return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+
+
+# ---------------------------------------------- error-bounded replay mode
+
+#: Largest integer count exactly representable in a float32 significand.
+_F32_EXACT_MULTIPLES = 2.0 ** 24
+
+
+def _lsb_quantum(x) -> np.ndarray:
+    """Value of the least significant set significand bit of each
+    positive finite float64 — the power of two ``q`` with ``x`` an odd
+    multiple of ``q``.  Zero / non-finite entries map to 0 (no quantum:
+    such columns can never certify)."""
+    x = np.asarray(x, dtype=np.float64)
+    frac, exp = np.frexp(x)
+    with np.errstate(invalid="ignore"):
+        m = np.where(np.isfinite(frac), frac, 0.0) * 2.0 ** 53
+    m = m.astype(np.int64)            # exact: a 53-bit significand
+    return np.ldexp((m & -m).astype(np.float64), exp - 53)
+
+
+def column_quanta(alphas, unit: float) -> np.ndarray:
+    """Per-column exactness quantum of a replay cost matrix.
+
+    Every finish/ready time the (max,+) recurrence produces from a
+    column's base costs is a nonnegative integer combination
+    ``k1 * alpha + k2 * unit`` — an integer multiple of
+    ``q = min(lsb(alpha), lsb(unit))``, the coarsest power of two
+    dividing both.  ``q`` is what the float32 exactness certificate in
+    ``replay_accumulate`` is measured against: clean paper-protocol
+    grids (integer alphas, unit 1.0) have large ``q``; an alpha needing
+    all 52 significand bits has a tiny ``q`` and its column simply
+    demotes to the float64 kernel."""
+    alphas = np.atleast_1d(np.asarray(alphas, dtype=np.float64))
+    return np.minimum(_lsb_quantum(alphas),
+                      float(_lsb_quantum(float(unit))))
+
+
+def _certified_f32(F32: np.ndarray, quanta: np.ndarray,
+                   n_levels: int) -> np.ndarray:
+    """Columns of a float32 level pass that are provably exact.
+
+    Exactness argument: all true values of a column are nonnegative
+    integer multiples of its quantum ``q`` (max is exact; every add sums
+    two such multiples).  A multiple ``k * q`` with ``k < 2^24`` is
+    exactly representable in float32 and the addition producing it is
+    exact, so by induction the whole pass is exact — bit-identical to
+    the float64 kernel — whenever every true value's magnitude stays
+    below ``2^24 * q``.  Detection is sound a posteriori: if any
+    addition rounded, the *first* one (all earlier values exact) had a
+    true result of magnitude ``>= 2^24 * q``, its computed value lands
+    in the finish matrix shrunk by at most one rounding, and the
+    observed ``M32 = max(|F32|)`` bounds it from above (the absolute
+    value matters for clamped analytic sweeps, whose base costs may be
+    negative — a large-magnitude negative finish would be invisible to
+    a plain max).  Testing ``M32`` strictly below the threshold
+    slackened by a per-level error bound (a generous ``4 * 2^-24`` per
+    level, ~4x the worst-case relative drift of one float32 add)
+    therefore proves no rounding happened anywhere.  An alpha that does
+    not fit float32's significand is itself ``>= 2^24 * q``, so
+    non-representable inputs can never certify; the quantum floor keeps
+    certified values clear of float32 subnormals (flushed to zero on
+    some accelerators)."""
+    M32 = (np.abs(F32).max(axis=0).astype(np.float64) if len(F32)
+           else np.zeros(F32.shape[1]))
+    thr = _f32_thresholds(quanta, n_levels)
+    return np.isfinite(M32) & (M32 < thr)
+
+
+def _f32_thresholds(quanta: np.ndarray, n_levels: int) -> np.ndarray:
+    """Per-column certification thresholds: ``2^24 * q`` slackened by the
+    per-level error bound, zeroed where certification is impossible (a
+    subnormal-range quantum, or a level count past the bound's reach) —
+    a zero threshold fails every ``M32 < thr`` test."""
+    slack = 1.0 - (float(n_levels) + 2.0) * 2.0 ** -22
+    if slack <= 0.5:                  # ~2M levels: bound no longer tight
+        return np.zeros_like(quanta)
+    return np.where(quanta >= 2.0 ** -100,
+                    _F32_EXACT_MULTIPLES * quanta * slack, 0.0)
+
+
+def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
+                      clamp: bool = False,
+                      R_out: Optional[np.ndarray] = None,
+                      backend: Optional[str] = None,
+                      replay_dtype: Optional[str] = None) -> np.ndarray:
+    """Run a float64 replay/sweep level pass under the dtype policy.
+
+    The accelerator-resident entry point for cost-patterned matrices
+    (replay and latency-sweep bases: ``alpha`` on memory rows, ``unit``
+    elsewhere, optionally a zero sentinel row).  ``F`` / ``R_out`` are
+    float64 ``(rows, k)`` matrices as for ``level_accumulate`` and are
+    always returned bit-identical to the float64 numpy kernel — the
+    policy only chooses how that answer is computed:
+
+    * numpy backend selected: the float64 numpy kernel, unchanged.
+    * jax + ``float64`` policy (``EDAN_X64=1`` / ``replay_dtype=
+      "float64"``), or jax already running with the x64 flag: enable
+      x64 and run the exact float64 pass on device.
+    * jax + ``float32`` policy (the default): run the pass in float32 on
+      device, certify each column against the ``column_quanta`` /
+      per-level error bound (``_certified_f32``), and demote only the
+      failing columns to the float64 numpy kernel.
+
+    ``quanta`` is the per-column quantum from ``column_quanta`` (length
+    k).  Execution counters land in ``backend.stats``."""
+    if F.ndim != 2 or F.dtype != np.float64:
+        raise ValueError("replay_accumulate expects a float64 (rows, k) "
+                         f"matrix, got {F.dtype} ndim={F.ndim}")
+    quanta = np.asarray(quanta, dtype=np.float64)
+    if quanta.shape != (F.shape[1],):
+        raise ValueError("quanta must have one entry per column")
+    stats["chunks"] += 1
+    b = select_backend(backend)
+    # an explicit replay_dtype argument is validated on every backend (a
+    # typo'd argument is a caller bug and must not surface only once the
+    # code reaches an accelerator host); environment knobs are resolved
+    # lazily — they are inert unless the jax backend is selected
+    pol = (replay_dtype_policy(replay_dtype)
+           if (b == "jax" or replay_dtype) else "float64")
+    if b != "jax" or F.shape[1] == 0:
+        stats["numpy_chunks"] += 1
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    x64 = False
+    try:
+        import jax
+        if pol == "float64" and not jax.config.jax_enable_x64:
+            jax.config.update("jax_enable_x64", True)
+        x64 = bool(jax.config.jax_enable_x64)
+    except Exception:
+        stats["numpy_chunks"] += 1
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    if x64:
+        # exact float64 on device (the opt-in x64 mode, or a process
+        # already running jax with the x64 flag)
+        try:
+            _accumulate_jax(lv, F, clamp=clamp, R_out=R_out)
+            stats["jax_chunks"] += 1
+            stats["jax_f64_chunks"] += 1
+            return F
+        except Exception:
+            stats["numpy_chunks"] += 1
+            return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    # error-bounded float32 mode.  Pre-screen: only columns whose base
+    # costs all sit strictly below the threshold go to the device.  This
+    # is load-bearing for soundness, not just a fast path — the
+    # a-posteriori certificate only detects rounding *inside* the pass,
+    # so the initial float32 cast of the bases must be lossless, which
+    # |base| < thr <= 2^24 * q guarantees (such a base is a multiple of
+    # q with fewer than 25 significand bits).  A base at or past the
+    # threshold could cast lossily and then cancel below the observed
+    # max|F32| (clamped sweeps admit negative bases), so such columns
+    # always take the float64 numpy kernel.  For the monotone replay
+    # (clamp off, nonneg bases) a base past the threshold also forces
+    # the makespan past it, so nothing certifiable is ever screened off;
+    # for clamped sweeps the screen is merely conservative.
+    thr = _f32_thresholds(quanta, lv.n_levels)
+    base_mag = np.abs(F).max(axis=0) if len(F) else np.zeros(F.shape[1])
+    live = base_mag < thr
+    live_idx = np.flatnonzero(live)
+    if len(live_idx) == 0:
+        stats["numpy_chunks"] += 1
+        stats["demoted_columns"] += F.shape[1]
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    F32 = F[:, live_idx].astype(np.float32)
+    R32 = (R_out[:, live_idx].astype(np.float32) if R_out is not None
+           else None)
+    try:
+        _accumulate_jax(lv, F32, clamp=clamp, R_out=R32)
+    except Exception:
+        stats["numpy_chunks"] += 1
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    okl = _certified_f32(F32, quanta[live_idx], lv.n_levels)
+    ok = np.zeros(F.shape[1], dtype=bool)
+    ok[live_idx[okl]] = True
+    n_ok = int(okl.sum())
+    stats["certified_columns"] += n_ok
+    if n_ok == 0:
+        # nothing certified: F still holds the untouched base costs, so
+        # the numpy kernel runs in place — no slice copies needed
+        stats["numpy_chunks"] += 1
+        stats["demoted_columns"] += F.shape[1]
+        return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
+    # certified columns are exact multiples of q below 2^24 * q — the
+    # float32 values ARE the float64 values, the cast is lossless
+    F[:, ok] = F32[:, okl]
+    if R_out is not None:
+        R_out[:, ok] = R32[:, okl]
+    stats["jax_chunks"] += 1
+    bad = ~ok
+    if bad.any():
+        stats["demoted_columns"] += int(bad.sum())
+        Fb = np.ascontiguousarray(F[:, bad])
+        Rb = (np.ascontiguousarray(R_out[:, bad]) if R_out is not None
+              else None)
+        _accumulate_numpy(lv, Fb, clamp=clamp, R_out=Rb)
+        F[:, bad] = Fb
+        if R_out is not None:
+            R_out[:, bad] = Rb
+    return F

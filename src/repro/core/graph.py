@@ -389,7 +389,8 @@ class EDag:
 
     def t_inf_sweep_mem(self, alphas, unit: float = 1.0,
                         chunk: Optional[int] = None,
-                        backend: Optional[str] = None) -> np.ndarray:
+                        backend: Optional[str] = None,
+                        replay_dtype: Optional[str] = None) -> np.ndarray:
         """Span at each alpha for the standard memory cost model
         (alpha for RAM-access vertices, ``unit`` otherwise) — builds the
         (n, n_sweep) cost matrix directly, skipping the transpose copy.
@@ -397,19 +398,33 @@ class EDag:
         Points are processed ``chunk`` at a time to keep the (n, chunk)
         working set cache-resident on large traces; by default the chunk
         is picked from the trace size (``_auto_sweep_chunk``), so small
-        traces run the whole sweep in one pass."""
+        traces run the whole sweep in one pass.
+
+        The cost pattern is the replay pattern (alpha / unit columns),
+        so the pass dispatches through ``backend.replay_accumulate``: on
+        the jax backend it stays accelerator-resident under the replay
+        dtype policy (error-bounded f32 with per-column f64 demotion by
+        default, exact x64 on opt-in) and the result is bit-identical to
+        the float64 numpy kernel either way.  Generic cost matrices
+        (``finish_times_batch``) keep the plain ``level_accumulate``
+        path."""
         self._finalize()
+        from .backend import column_quanta, replay_accumulate
         alphas = np.asarray(alphas, dtype=np.float64)
         if self.n_vertices == 0 or len(alphas) == 0:
             return np.zeros(len(alphas))
         chunk = (_auto_sweep_chunk(self.n_vertices) if chunk is None
                  else max(int(chunk), 1))
+        lv = self._level_csr()
         out = []
         for i in range(0, len(alphas), chunk):
             F = np.where(self.is_mem[:, None],
                          alphas[None, i:i + chunk], float(unit))
-            out.append(self._accumulate_batch_nk(F, backend=backend)
-                       .max(axis=0))
+            replay_accumulate(lv, F,
+                              column_quanta(alphas[i:i + chunk], unit),
+                              clamp=True, backend=backend,
+                              replay_dtype=replay_dtype)
+            out.append(F.max(axis=0))
         return np.concatenate(out)
 
     def start_finish(self, cost: Optional[np.ndarray] = None):

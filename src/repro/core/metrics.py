@@ -42,24 +42,31 @@ def cost_matrix(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
 
 
 def t_inf_sweep(g: EDag, alphas, unit: float = 1.0,
-                backend: Optional[str] = None) -> np.ndarray:
+                backend: Optional[str] = None,
+                replay_dtype: Optional[str] = None) -> np.ndarray:
     """Span T-inf at every latency point in one level-synchronous pass.
 
     The whole alpha sweep is a single batched longest-path evaluation over
     the cost matrix — the vectorized replacement for re-running
-    ``g.t_inf(cost_vector(g, a))`` once per point."""
+    ``g.t_inf(cost_vector(g, a))`` once per point.  On the jax backend
+    the pass is accelerator-resident under the replay dtype policy
+    (``backend.replay_dtype_policy``) without changing a bit of the
+    result."""
     g._finalize()
     if g.n_vertices == 0:
         return np.zeros(len(np.atleast_1d(alphas)))
-    return g.t_inf_sweep_mem(alphas, unit, backend=backend)
+    return g.t_inf_sweep_mem(alphas, unit, backend=backend,
+                             replay_dtype=replay_dtype)
 
 
 def bandwidth_sweep(g: EDag, alphas, unit: float = 1.0,
                     cycles_per_second: float = 1e9,
-                    backend: Optional[str] = None) -> np.ndarray:
+                    backend: Optional[str] = None,
+                    replay_dtype: Optional[str] = None) -> np.ndarray:
     """Eq 5 bandwidth at every latency point, from one batched span pass."""
     g._finalize()
-    t_inf = t_inf_sweep(g, alphas, unit, backend=backend)
+    t_inf = t_inf_sweep(g, alphas, unit, backend=backend,
+                        replay_dtype=replay_dtype)
     moved = float(g.nbytes[g.is_mem].sum())
     out = np.zeros_like(t_inf)
     np.divide(moved * cycles_per_second, t_inf, out=out, where=t_inf > 0)
@@ -134,7 +141,8 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
                  compute_slots: int = 0,
                  backend: Optional[str] = None,
                  mem_budget: Optional[int] = None,
-                 use_cache: bool = True) -> dict:
+                 use_cache: bool = True,
+                 replay_dtype: Optional[str] = None) -> dict:
     """Full latency sweep in one pass (§3.3 metrics per alpha point).
 
     The analytic quantities — T-inf, Eq-2 bounds, bandwidth, Lambda — come
@@ -144,10 +152,12 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
     same cached CSR (bit-identical to the per-point reference engine).
     ``backend`` selects the kernel backend (numpy / jax) for the analytic
     span/bandwidth passes and is forwarded to the simulator (whose pallas
-    path emits finish and ready times in one fused level loop; float64
-    replays fall back to numpy unless jax runs with the x64 flag), as are
-    ``mem_budget`` (replay chunk bytes) and ``use_cache`` (schedule
-    reuse: per-process memo + the persistent on-disk cache).
+    path emits finish and ready times in one fused level loop), as are
+    ``replay_dtype`` (the jax execution policy: opt-in exact x64, or the
+    default error-bounded f32 mode with per-column f64 demotion — results
+    are bit-identical under every policy), ``mem_budget`` (replay chunk
+    bytes) and ``use_cache`` (schedule reuse: per-process memo + the
+    persistent on-disk cache).
     """
     from .cost import non_memory_cost, total_cost_bounds
     from .scheduler import latency_sweep as _sim_sweep
@@ -157,8 +167,10 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
     lay = g.mem_layers()
     C = non_memory_cost(g, params.unit)
     lam = lambda_abs(lay.W, lay.D, params.m)
-    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend)
-    B = bandwidth_sweep(g, alphas, params.unit, backend=backend)
+    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend,
+                        replay_dtype=replay_dtype)
+    B = bandwidth_sweep(g, alphas, params.unit, backend=backend,
+                        replay_dtype=replay_dtype)
     lo, hi = total_cost_bounds(lay.W, lay.D, params.m, alphas, C)
     denom = lam * alphas + C
     Lam = np.divide(lam, denom, out=np.zeros_like(denom), where=denom > 0)
@@ -170,7 +182,8 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
                                       compute_slots=compute_slots,
                                       backend=backend,
                                       mem_budget=mem_budget,
-                                      use_cache=use_cache)
+                                      use_cache=use_cache,
+                                      replay_dtype=replay_dtype)
     return out
 
 
@@ -179,7 +192,8 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
                 simulate_points: bool = False,
                 backend: Optional[str] = None,
                 mem_budget: Optional[int] = None,
-                use_cache: bool = True) -> dict:
+                use_cache: bool = True,
+                replay_dtype: Optional[str] = None) -> dict:
     """§3.3 metrics on the alpha × m grid — the analytic side of the
     capacity-planning sweep — plus, with ``simulate_points=True``, the §4
     simulated grid over the full alpha × m × compute_slots product.
@@ -210,7 +224,8 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     W, D = lay.W, lay.D
     C = non_memory_cost(g, params.unit)
     lam = lambda_abs(W, D, ms_arr)                         # Eq 3, per m
-    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend)
+    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend,
+                        replay_dtype=replay_dtype)
     # Eq 1-2 bounds and Eq 4 Lambda over the (alpha, m) grid in one shot
     mem_lo = np.maximum(D, W / ms_arr)[None, :] * alphas[:, None]
     mem_hi = lam[None, :] * alphas[:, None]
@@ -223,7 +238,8 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     if simulate_points:
         out["simulated"] = _sim_grid(
             g, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
-            backend=backend, mem_budget=mem_budget, use_cache=use_cache)
+            backend=backend, mem_budget=mem_budget, use_cache=use_cache,
+            replay_dtype=replay_dtype)
     return out
 
 
@@ -232,7 +248,8 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
                       simulate_points: bool = False,
                       backend: Optional[str] = None,
                       mem_budget: Optional[int] = None,
-                      use_cache: bool = True) -> dict:
+                      use_cache: bool = True,
+                      replay_dtype: Optional[str] = None) -> dict:
     """§3.3 metrics for a whole ``EDagSuite`` on the alpha × m grid —
     per-trace Eq 1-4 tables from ONE pass over the block-diagonal union.
 
@@ -264,7 +281,8 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
         counts = np.diff(suite.offsets)
         C = (counts - W) * params.unit
         t_inf = suite_t_inf_sweep(suite, alphas, params.unit,
-                                  backend=backend)
+                                  backend=backend,
+                                  replay_dtype=replay_dtype)
     else:
         W = D = np.zeros(K, dtype=np.int64)
         C = np.zeros(K)
@@ -284,7 +302,8 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
     if simulate_points:
         out["simulated"] = suite_sweep_grid(
             suite, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
-            backend=backend, mem_budget=mem_budget, use_cache=use_cache)
+            backend=backend, mem_budget=mem_budget, use_cache=use_cache,
+            replay_dtype=replay_dtype)
     return out
 
 

@@ -117,19 +117,32 @@ def cache_dir() -> Optional[Path]:
 
 
 def min_vertices() -> int:
-    """Smallest trace (vertex count) worth persisting to disk."""
+    """Smallest trace (vertex count) worth persisting to disk.
+
+    ``$EDAN_SCHEDULE_CACHE_MIN`` values that are empty, unparseable or
+    negative fall back to the default instead of raising mid-sweep
+    (0 is valid: persist everything)."""
     try:
-        return int(os.environ.get("EDAN_SCHEDULE_CACHE_MIN", ""))
-    except ValueError:
+        env = int(os.environ.get("EDAN_SCHEDULE_CACHE_MIN", ""))
+    except (TypeError, ValueError):
         return _DEFAULT_MIN_VERTICES
+    return env if env >= 0 else _DEFAULT_MIN_VERTICES
 
 
 def max_entries() -> int:
-    """Prune cap for the cache directory (LRU by mtime)."""
+    """Prune cap for the cache directory (LRU by mtime).
+
+    ``$EDAN_SCHEDULE_CACHE_MAX`` values that are empty, unparseable or
+    negative fall back to the default instead of raising mid-sweep; an
+    explicit ``0`` keeps its long-standing meaning of "smallest possible
+    cache" and clamps to 1 entry."""
     try:
-        return max(int(os.environ.get("EDAN_SCHEDULE_CACHE_MAX", "")), 1)
-    except ValueError:
+        env = int(os.environ.get("EDAN_SCHEDULE_CACHE_MAX", ""))
+    except (TypeError, ValueError):
         return _DEFAULT_MAX_ENTRIES
+    if env < 0:
+        return _DEFAULT_MAX_ENTRIES
+    return max(env, 1)
 
 
 def _entry_path(d: Path, digest: str, m: int, cs: int,
@@ -225,23 +238,36 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
 
 
 def prune(cap: Optional[int] = None) -> int:
-    """Drop the oldest entries beyond the cap; returns how many went."""
+    """Drop the oldest entries beyond the cap; returns how many went.
+
+    Concurrent processes sharing the directory store and prune at the
+    same time, so every per-entry step tolerates the entry vanishing
+    between the listing and the ``stat`` / ``unlink`` — an already-gone
+    entry is simply skipped, never a crash and never an aborted prune
+    (one vanished file must not leave the rest of an over-cap directory
+    unpruned)."""
     d = cache_dir()
     if d is None or not d.is_dir():
         return 0
     cap = max_entries() if cap is None else max(int(cap), 0)
     try:
-        entries = sorted(d.glob("*.npz"),
-                         key=lambda p: p.stat().st_mtime)
+        names = list(d.glob("*.npz"))
     except OSError:
         return 0
+    entries = []
+    for p in names:
+        try:
+            entries.append((p.stat().st_mtime, p))
+        except OSError:
+            pass                  # deleted by a concurrent process
+    entries.sort(key=lambda e: e[0])
     gone = 0
-    for p in entries[:max(len(entries) - cap, 0)]:
+    for _, p in entries[:max(len(entries) - cap, 0)]:
         try:
             p.unlink()
             gone += 1
         except OSError:
-            pass
+            pass                  # already gone: a concurrent pruner won
     return gone
 
 

@@ -73,9 +73,14 @@ from .graph import EDag
 
 # Point-chunk memory budget for the batched replay: the per-master pass
 # holds ~3 (n_vertices, chunk) float64 matrices (base/finish, ready times,
-# scratch), so chunk ~ budget / (24 * n).  Override per call with
-# ``mem_budget=`` or process-wide with $EDAN_REPLAY_MEM_BUDGET (bytes).
+# scratch) plus, on the jax backend's f32 mode, the float32 copies of the
+# live columns (+8 bytes/cell worst case), so chunk ~ budget /
+# (_REPLAY_BYTES_PER_CELL * n).  Override per call with ``mem_budget=``
+# or process-wide with $EDAN_REPLAY_MEM_BUDGET (bytes).  The per-cell
+# constant is shared with ``suite._member_groups`` so the heterogeneous-
+# suite grouping rule and the actual chunk divisor can never drift apart.
 _REPLAY_MEM_BUDGET = 512 * 1024 * 1024
+_REPLAY_BYTES_PER_CELL = 32
 # Below this many sweep points the recording run cannot amortize.
 _MIN_BATCH_POINTS = 2
 # Per-EDag in-process plan memo: one entry per (m, compute_slots) pair.
@@ -272,17 +277,23 @@ class _ReplayPlan:
         self.lv = lv
 
     def replay(self, alphas: np.ndarray, unit: float,
-               backend: Optional[str] = None):
+               backend: Optional[str] = None,
+               replay_dtype: Optional[str] = None):
         """Evaluate all points at once: returns finish times F and ready
         times R, both (n+1, k) in pop-order (topo) vertex space (the last
-        row is the zero sentinel the slot chains bottom out on)."""
+        row is the zero sentinel the slot chains bottom out on).  The
+        pass runs through ``backend.replay_accumulate`` under the dtype
+        policy (x64 on device / error-bounded f32 with per-column
+        demotion / numpy f64), so the returned matrices are always
+        bit-identical to the float64 numpy kernel."""
         k = len(alphas)
         F = np.empty((self.n + 1, k))
         F[:-1] = np.where(self.is_mem_topo[:, None], alphas[None, :], unit)
         F[-1] = 0.0
         R = np.zeros_like(F)
-        _bk.level_accumulate(self.lv, F, clamp=False, R_out=R,
-                             backend=backend)
+        _bk.replay_accumulate(self.lv, F, _bk.column_quanta(alphas, unit),
+                              clamp=False, R_out=R, backend=backend,
+                              replay_dtype=replay_dtype)
         return F, R
 
 
@@ -350,20 +361,27 @@ def _verify_class(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
 def _replay_mem_budget(override: Optional[int] = None) -> int:
     """Replay working-set budget in bytes: arg > $EDAN_REPLAY_MEM_BUDGET >
     default.  Bounds the (n, chunk) matrices of one stacked pass so
-    HPCG/LULESH-size traces stream through the level kernel."""
+    HPCG/LULESH-size traces stream through the level kernel.
+
+    Environment values that are empty, unparseable or non-positive fall
+    back to the default — a stray ``export EDAN_REPLAY_MEM_BUDGET=``
+    must never raise mid-sweep (explicit override arguments stay strict:
+    a wrong *argument* is a caller bug worth surfacing)."""
     if override is not None:
         return max(int(override), 1)
     try:
-        return max(int(os.environ.get("EDAN_REPLAY_MEM_BUDGET", "")), 1)
-    except ValueError:
+        env = int(os.environ.get("EDAN_REPLAY_MEM_BUDGET", ""))
+    except (TypeError, ValueError):
         return _REPLAY_MEM_BUDGET
+    return env if env > 0 else _REPLAY_MEM_BUDGET
 
 
 def _points_chunk(n: int, k: int, mem_budget: Optional[int] = None) -> int:
     """Balanced point chunk under the replay memory budget: the level loop
     pays per-level dispatch once per chunk, so fewer, equal-sized chunks
     beat one full chunk plus a sliver."""
-    cap = max(4, int(_replay_mem_budget(mem_budget) // max(24 * n, 1)))
+    cap = max(4, int(_replay_mem_budget(mem_budget) //
+                     max(_REPLAY_BYTES_PER_CELL * n, 1)))
     n_chunks = -(-k // cap)
     return -(-k // n_chunks)
 
@@ -482,7 +500,8 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                    compute_slots: int = 0,
                    backend: Optional[str] = None,
                    mem_budget: Optional[int] = None,
-                   use_cache: bool = True) -> np.ndarray:
+                   use_cache: bool = True,
+                   replay_dtype: Optional[str] = None) -> np.ndarray:
     """Simulated makespans for a whole latency sweep in one batched pass.
 
     Bit-identical to ``[simulate_reference(g, m, a, unit, compute_slots)
@@ -498,7 +517,10 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     verified, so the cache never changes results.  ``mem_budget`` bounds
     the bytes of one stacked replay chunk (default 512 MB, or
     $EDAN_REPLAY_MEM_BUDGET) so large traces stream through the level
-    kernel.
+    kernel.  ``replay_dtype`` selects the jax-backend execution policy
+    (``backend.replay_dtype_policy``: opt-in exact x64, or the default
+    error-bounded f32 mode with per-column f64 demotion) — returned
+    makespans are bit-identical to the reference under every policy.
 
     Unsorted or duplicate ``alphas`` are deduped and sorted internally
     (duplicates would waste replay columns and an unsorted first point
@@ -529,7 +551,8 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
         # all finite here, so np.unique's ordering is total)
         return simulate_batch(g, uniq, m=m, unit=unit, compute_slots=cs,
                               backend=backend, mem_budget=mem_budget,
-                              use_cache=use_cache)[inv]
+                              use_cache=use_cache,
+                              replay_dtype=replay_dtype)[inv]
 
     remaining = np.arange(P)
     plan = _get_plan(g, m, cs, unit) if use_cache else None
@@ -549,7 +572,8 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
         chunk = _points_chunk(n, remaining.size, mem_budget)
         for c0 in range(0, remaining.size, chunk):
             sel = remaining[c0:c0 + chunk]
-            F, R = plan.replay(alphas[sel], unit, backend=backend)
+            F, R = plan.replay(alphas[sel], unit, backend=backend,
+                               replay_dtype=replay_dtype)
             okc = _verify_class(g, plan.rank, F, R, plan.O_mem, plan.Om_rel)
             if cs:
                 okc &= _verify_class(g, plan.rank, F, R, plan.O_alu,
@@ -579,7 +603,8 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                   compute_slots: int = 0, batch: Optional[bool] = None,
                   backend: Optional[str] = None,
                   mem_budget: Optional[int] = None,
-                  use_cache: bool = True) -> np.ndarray:
+                  use_cache: bool = True,
+                  replay_dtype: Optional[str] = None) -> np.ndarray:
     """Simulated makespan across a latency sweep (the §4 gem5 protocol).
 
     One finalize builds the shared CSR; the batched schedule-replay engine
@@ -596,7 +621,8 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     if use_batch:
         return simulate_batch(g, alphas, m=m, unit=unit,
                               compute_slots=compute_slots, backend=backend,
-                              mem_budget=mem_budget, use_cache=use_cache)
+                              mem_budget=mem_budget, use_cache=use_cache,
+                              replay_dtype=replay_dtype)
     sim_lists = g._sim_lists()   # shared: the sweep pays finalization once
     return np.array([_event_loop(g.is_mem, sim_lists, int(m), float(a),
                                  float(unit), int(compute_slots))
@@ -606,7 +632,8 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
 def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
                unit: float = 1.0, backend: Optional[str] = None,
                mem_budget: Optional[int] = None,
-               use_cache: bool = True) -> np.ndarray:
+               use_cache: bool = True,
+               replay_dtype: Optional[str] = None) -> np.ndarray:
     """Simulated makespans over the full alpha × m × compute_slots grid.
 
     The capacity-planning what-if: one call evaluates every hardware
@@ -638,5 +665,5 @@ def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
             out[:, j, l] = simulate_batch(
                 g, alphas, m=mm, unit=unit, compute_slots=cs,
                 backend=backend, mem_budget=mem_budget,
-                use_cache=use_cache)
+                use_cache=use_cache, replay_dtype=replay_dtype)
     return out

@@ -7,6 +7,14 @@ collective channels per chip.  ``lambda_axis = (W_ax - D_ax)/m + D_ax`` is
 then d(step_time)/d(alpha_axis): how many microseconds a step loses per
 microsecond of added fabric latency on that axis — the capacity-planning
 number for resource disaggregation (paper §1's motivation).
+
+Unlike the trace-level sweeps, every grid in this module is a closed-form
+Eq 3-4 broadcast — no (max,+) level kernel runs, so there is nothing for
+the ``backend`` / ``replay_dtype`` execution policy to select and these
+entry points deliberately take neither.  The accelerator-resident policy
+(``backend.replay_accumulate``: opt-in x64, error-bounded f32 with f64
+demotion) applies to everything upstream that feeds ``AxisSensitivity``
+tables through ``metrics.sweep_report`` / ``grid_report``.
 """
 from __future__ import annotations
 

@@ -31,7 +31,13 @@ the full alpha × m × compute_slots grid for *every member at once*:
   independent pipelines.  Per-block makespans fall out of the shared row
   matrix via one segmented reduction (``backend.segment_max_rows`` over
   the plan's ``seg_ptr``); the alpha axis rides the matrix columns,
-  chunked under the replay memory budget.
+  chunked under the replay memory budget — per *replay group*
+  (``_member_groups``), so a member too big to fit a full-width chunk
+  streams its alpha axis alone while small members stay batched with
+  wide chunks.  On the jax backend the stacked pass runs accelerator-
+  resident under the replay dtype policy (``backend.replay_accumulate``:
+  exact x64 on opt-in, error-bounded f32 with per-column f64 demotion by
+  default) without changing a bit of any result.
 
 * **Bit-exactness is per member, unconditional.**  The per-point
   ``(R, E, vid)`` issue-order verification runs on each member's block
@@ -57,12 +63,16 @@ import numpy as np
 from . import backend as _bk
 from . import schedule_cache as _sc
 from .graph import EDag, _auto_sweep_chunk, concat_edags
-from .scheduler import (_ReplayPlan, _aug_level_valid,
-                        _attach_queue_partition, _event_loop, _memo_plan,
-                        _points_chunk, _slot_qpred, _validate_schedule,
-                        _verify_class, simulate_batch, sweep_grid)
+from .scheduler import (_REPLAY_BYTES_PER_CELL, _ReplayPlan,
+                        _aug_level_valid, _attach_queue_partition,
+                        _event_loop, _memo_plan, _points_chunk,
+                        _replay_mem_budget, _slot_qpred,
+                        _validate_schedule, _verify_class, simulate_batch,
+                        sweep_grid)
 
-# Per-suite union-plan memo: one entry per (m, compute_slots, unit).
+# Per-suite union-plan memo, keyed by (member group, pairs tuple, unit):
+# one entry per replay group per distinct-m pairs subset, so a suite with
+# several oversized (own-group) members consumes several slots per grid.
 _SUITE_PLAN_CAP = 8
 
 
@@ -146,14 +156,19 @@ class EDagSuite:
 # ------------------------------------------------------------- analytic side
 
 def suite_t_inf_sweep(suite: EDagSuite, alphas, unit: float = 1.0,
-                      backend: Optional[str] = None) -> np.ndarray:
+                      backend: Optional[str] = None,
+                      replay_dtype: Optional[str] = None) -> np.ndarray:
     """Span T-inf per (trace, alpha) from one union-batched level pass.
 
     Returns a (K, n_alphas) array; row k is bit-identical to
     ``metrics.t_inf_sweep(member_k, alphas, unit)`` — the union is block-
     diagonal, so the level recurrence restricted to block k performs
     exactly the member's operations.  Chunked like ``t_inf_sweep_mem`` so
-    the (n_union, chunk) working set stays cache-resident."""
+    the (n_union, chunk) working set stays cache-resident.  The pass runs
+    through ``backend.replay_accumulate``, so on the jax backend it is
+    accelerator-resident under the replay dtype policy (error-bounded f32
+    with per-column f64 demotion by default; exact x64 on opt-in) without
+    changing a bit of the result."""
     alphas = np.asarray(alphas, dtype=np.float64)
     suite._check_members()
     K = suite.n_traces
@@ -161,11 +176,15 @@ def suite_t_inf_sweep(suite: EDagSuite, alphas, unit: float = 1.0,
         return np.zeros((K, len(alphas)))
     u = suite.union
     chunk = _auto_sweep_chunk(u.n_vertices)
+    lv = u._level_csr()
     out = []
     for i in range(0, len(alphas), chunk):
         F = np.where(u.is_mem[:, None], alphas[None, i:i + chunk],
                      float(unit))
-        F = u._accumulate_batch_nk(F, backend=backend)
+        _bk.replay_accumulate(lv, F,
+                              _bk.column_quanta(alphas[i:i + chunk], unit),
+                              clamp=True, backend=backend,
+                              replay_dtype=replay_dtype)
         out.append(_bk.segment_max_rows(F, suite.offsets))
     return np.concatenate(out, axis=1)
 
@@ -210,19 +229,23 @@ class _SuitePlan:
         self.blocks = blocks
 
     def replay(self, alphas: np.ndarray, unit: float,
-               backend: Optional[str] = None):
+               backend: Optional[str] = None,
+               replay_dtype: Optional[str] = None):
         """All blocks × all points at once: finish and ready times,
         (n_rows + 1, k) in blockwise pop-order row space (the last row is
         the shared zero sentinel every block's slot chains bottom out
-        on)."""
+        on).  Runs through ``backend.replay_accumulate`` under the replay
+        dtype policy, so the matrices are always bit-identical to the
+        float64 numpy kernel."""
         k = len(alphas)
         F = np.empty((self.n + 1, k))
         F.fill(unit)
         F[self.mem_rows] = alphas            # rows of memory vertices
         F[-1] = 0.0
         R = np.zeros_like(F)
-        _bk.level_accumulate(self.lv, F, clamp=False, R_out=R,
-                             backend=backend)
+        _bk.replay_accumulate(self.lv, F, _bk.column_quanta(alphas, unit),
+                              clamp=False, R_out=R, backend=backend,
+                              replay_dtype=replay_dtype)
         return F, R
 
 
@@ -256,16 +279,23 @@ def _member_schedule(g: EDag, m: int, cs: int, unit: float, a0: float,
 
 
 def _build_suite_plan(suite: EDagSuite, pairs, unit: float, a0: float,
-                      use_cache: bool) -> _SuitePlan:
+                      use_cache: bool,
+                      member_idx: Optional[Sequence[int]] = None
+                      ) -> _SuitePlan:
     """Concatenate the (member, m, compute_slots) block schedules into one
     block-diagonal replay plan for the whole grid: slot chains and DAG
     edges are offset with their block, per-block augmented levels
     concatenate unchanged (blocks are disconnected), and a single
     ``build_level_partition`` call produces the union ``LevelCSR``.  The
     serial depth of the resulting replay is the *deepest block*, not the
-    sum over members and machine pairs."""
-    K = suite.n_traces
-    n_rows = suite.n_vertices * len(pairs)
+    sum over members and machine pairs.  ``member_idx`` restricts the
+    plan to a subset of members (a replay *group* — see
+    ``_member_groups``); block ``trace`` ids stay global, so results
+    scatter into the full suite grid unchanged."""
+    if member_idx is None:
+        member_idx = range(suite.n_traces)
+    n_rows = sum(suite.members[k].n_vertices
+                 for k in member_idx) * len(pairs)
     qpred_u = np.full(n_rows, n_rows, dtype=np.int64)
     is_mem_rows = np.zeros(n_rows, dtype=bool)
     src_parts, dst_parts, lvl_parts = [], [], []
@@ -273,7 +303,8 @@ def _build_suite_plan(suite: EDagSuite, pairs, unit: float, a0: float,
     seg_ptr = [0]
     off = 0
     for pair, (m, cs) in enumerate(pairs):
-        for k, g in enumerate(suite.members):
+        for k in member_idx:
+            g = suite.members[k]
             n = g.n_vertices
             seg_ptr.append(off + n)
             if n == 0:
@@ -335,25 +366,71 @@ def _memo_suite_plan(suite: EDagSuite, key, plan: _SuitePlan) -> None:
         memo.popitem(last=False)
 
 
+def _member_groups(suite: EDagSuite, n_pairs: int, P: int,
+                   mem_budget: Optional[int]) -> list:
+    """Partition member indices into replay groups under the memory
+    budget — the heterogeneous-suite streaming rule.
+
+    The alpha-chunk divisor of a union replay is the *plan's total row
+    count*, so one million-vertex HPCG block in a union of small
+    PolyBench members would shrink every member's chunks to the big
+    block's streaming size.  A member whose own block rows
+    (``n_vertices x n_pairs``) cannot fit a full-width (rows, P) replay
+    chunk inside the budget is going to stream its alpha axis no matter
+    what, so it replays as its own group; everything else stays batched
+    in one union group with full-width (or near-full) chunks.
+    Grouping only changes how chunks are cut — every block still runs
+    the identical per-member recurrence, so results are unaffected."""
+    budget = _replay_mem_budget(mem_budget)
+    cap_rows = max(budget // max(_REPLAY_BYTES_PER_CELL * P, 1), 1)
+    small: list = []
+    groups: list = []
+    for k, g in enumerate(suite.members):
+        if g.n_vertices * n_pairs > cap_rows:
+            groups.append([k])        # streams alone, own chunk size
+        else:
+            small.append(k)
+    if small:
+        groups.insert(0, small)       # batched together, wide chunks
+    return groups
+
+
 def _suite_grid_batch(suite: EDagSuite, alphas: np.ndarray, pairs,
                       unit: float, backend: Optional[str],
-                      mem_budget: Optional[int],
-                      use_cache: bool) -> np.ndarray:
-    """The whole grid in one union plan + one chunked stacked replay:
-    returns (K, n_alphas, n_pairs) makespans.  ``alphas`` must arrive
-    sorted, unique, finite and positive (``suite_sweep_grid`` guarantees
-    it)."""
+                      mem_budget: Optional[int], use_cache: bool,
+                      replay_dtype: Optional[str] = None) -> np.ndarray:
+    """The whole grid, one union plan + one chunked stacked replay per
+    replay group: returns (K, n_alphas, n_pairs) makespans.  ``alphas``
+    must arrive sorted, unique, finite and positive
+    (``suite_sweep_grid`` guarantees it)."""
     K, P = suite.n_traces, len(alphas)
     out = np.zeros((K, P, len(pairs)))
     if suite.n_vertices == 0 or P == 0 or not pairs:
         return out
-    key = (tuple(pairs), float(unit))
+    for idxs in _member_groups(suite, len(pairs), P, mem_budget):
+        _group_grid_batch(suite, idxs, out, alphas, pairs, unit, backend,
+                          mem_budget, use_cache, replay_dtype)
+    return out
+
+
+def _group_grid_batch(suite: EDagSuite, member_idx, out: np.ndarray,
+                      alphas: np.ndarray, pairs, unit: float,
+                      backend: Optional[str], mem_budget: Optional[int],
+                      use_cache: bool,
+                      replay_dtype: Optional[str]) -> None:
+    """Evaluate one replay group's (member, pair, alpha) product into
+    ``out`` (global trace indexing): one union plan over the group's
+    blocks, one chunked stacked replay, per-block verification, and the
+    per-member fallback for anything the union schedule fails to
+    certify."""
+    P = len(alphas)
+    key = (tuple(member_idx), tuple(pairs), float(unit))
     plan = suite._suite_plans.get(key) if use_cache else None
     if plan is not None:
         suite._suite_plans.move_to_end(key)
     else:
         plan = _build_suite_plan(suite, pairs, unit, float(alphas[0]),
-                                 use_cache)
+                                 use_cache, member_idx=member_idx)
         if use_cache:
             _memo_suite_plan(suite, key, plan)
     B = len(plan.blocks)
@@ -361,7 +438,8 @@ def _suite_grid_batch(suite: EDagSuite, alphas: np.ndarray, pairs,
     chunk = _points_chunk(plan.n, P, mem_budget)
     for c0 in range(0, P, chunk):
         cols = np.arange(c0, min(c0 + chunk, P))
-        F, R = plan.replay(alphas[cols], unit, backend=backend)
+        F, R = plan.replay(alphas[cols], unit, backend=backend,
+                           replay_dtype=replay_dtype)
         mk = _bk.segment_max_rows(F[:-1], plan.seg_ptr)
         for b, blk in enumerate(plan.blocks):
             if blk is None:           # empty member: makespan 0 everywhere
@@ -392,8 +470,8 @@ def _suite_grid_batch(suite: EDagSuite, alphas: np.ndarray, pairs,
                 out[blk.trace, bad, blk.pair] = simulate_batch(
                     blk.g, alphas[bad], m=blk.m, unit=unit,
                     compute_slots=blk.cs, backend=backend,
-                    mem_budget=mem_budget, use_cache=use_cache)
-    return out
+                    mem_budget=mem_budget, use_cache=use_cache,
+                    replay_dtype=replay_dtype)
 
 
 # ------------------------------------------------------------- entry points
@@ -401,7 +479,8 @@ def _suite_grid_batch(suite: EDagSuite, alphas: np.ndarray, pairs,
 def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
                      unit: float = 1.0, backend: Optional[str] = None,
                      mem_budget: Optional[int] = None,
-                     use_cache: bool = True) -> np.ndarray:
+                     use_cache: bool = True,
+                     replay_dtype: Optional[str] = None) -> np.ndarray:
     """Simulated makespans for every member over the full grid, in one
     level pass per (m, compute_slots) pair.
 
@@ -417,7 +496,15 @@ def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
     alpha replay whose serial depth is the *deepest* block, not the sum
     over members and machine pairs — independent blocks interleave
     inside each level of the shared kernel, and the replay streams in
-    alpha chunks under the memory budget.  Duplicate or unsorted alphas
+    alpha chunks under the memory budget.  Heterogeneous suites are
+    chunked *per replay group* (``_member_groups``): a member too big to
+    fit a full-width replay chunk in the budget streams its alpha axis
+    alone, while the small members stay batched with wide chunks —
+    grouping changes chunk shapes only, never results.  ``replay_dtype``
+    selects the jax-backend execution policy (opt-in exact x64, or the
+    default error-bounded f32 mode with per-column f64 demotion); the
+    grid is bit-identical under every policy.  Duplicate or unsorted
+    alphas
     are deduped and sorted internally; the returned alpha axis follows
     caller order.  Degenerate machine parameters (non-positive/
     non-finite alphas or unit, m < 1) delegate to the per-member engine,
@@ -438,7 +525,8 @@ def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
         for k, g in enumerate(suite.members):
             out[k] = sweep_grid(g, alphas, ms=ms_l, compute_slots=css,
                                 unit=unit, backend=backend,
-                                mem_budget=mem_budget, use_cache=use_cache)
+                                mem_budget=mem_budget, use_cache=use_cache,
+                                replay_dtype=replay_dtype)
         return out
     uniq, inv = np.unique(alphas, return_inverse=True)
     pairs = [(mm, cs) for mm in ms_l for cs in css]
@@ -454,7 +542,8 @@ def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
         groups.setdefault(mm, []).append(i)
     for idxs in groups.values():
         sub = _suite_grid_batch(suite, uniq, [pairs[i] for i in idxs],
-                                unit, backend, mem_budget, use_cache)
+                                unit, backend, mem_budget, use_cache,
+                                replay_dtype)
         res[:, :, idxs] = sub
     out[:] = res[:, inv].reshape(K, len(alphas), len(ms_l), len(css))
     return out
@@ -464,10 +553,12 @@ def suite_latency_sweep(suite: EDagSuite, alphas, m: int = 4,
                         unit: float = 1.0, compute_slots: int = 0,
                         backend: Optional[str] = None,
                         mem_budget: Optional[int] = None,
-                        use_cache: bool = True) -> np.ndarray:
+                        use_cache: bool = True,
+                        replay_dtype: Optional[str] = None) -> np.ndarray:
     """Single-axis suite sweep: ``(n_traces, len(alphas))`` makespans,
     row k bit-identical to ``latency_sweep(suite.members[k], ...)``."""
     return suite_sweep_grid(suite, alphas, ms=(m,),
                             compute_slots=(compute_slots,), unit=unit,
                             backend=backend, mem_budget=mem_budget,
-                            use_cache=use_cache)[:, :, 0, 0]
+                            use_cache=use_cache,
+                            replay_dtype=replay_dtype)[:, :, 0, 0]

@@ -242,9 +242,10 @@ def test_segment_reductions():
 
 def test_simulate_batch_jax_backend_exact():
     """The batched simulator stays bit-identical to the reference when the
-    jax backend is requested (the float64 guard routes the replay to the
-    numpy kernel on non-x64 jax; with x64, finish and ready times both
-    come off the accelerator path)."""
+    jax backend is requested (on non-x64 jax the replay runs through the
+    error-bounded float32 device mode with per-column float64 demotion —
+    see tests/test_replay_dtype.py; with x64, finish and ready times both
+    come off the accelerator path in float64)."""
     g = _random_edag(11)
     alphas = [50.0, 125.0, 300.0]
     got = simulate_batch(g, alphas, m=3, compute_slots=2, backend="jax")

@@ -435,3 +435,114 @@ def test_reversed_topo_not_linear_extension():
     O_mem = np.array([0, 1], dtype=np.int64)
     assert _plan_from_cache(g, 2, 0, topo, O_mem,
                             np.zeros(0, dtype=np.int64), None) is None
+
+
+# -------------------------------------------------- concurrent store/prune
+
+def _store_n_entries(g, count):
+    """Persist ``count`` distinct entries for one graph (varying m)."""
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    level = np.zeros(n, dtype=np.int64)
+    for m in range(1, count + 1):
+        assert sc.store(g.trace_digest(), m, 0, n, 1.0, topo, O_mem,
+                        O_alu, level)
+
+
+def test_prune_tolerates_concurrently_vanished_entries(cache_env,
+                                                       monkeypatch):
+    """Deterministic replay of the race: an entry deleted between the
+    pruner's directory listing and its ``stat`` must be skipped — not
+    crash the pruner, and not abort pruning the remaining entries."""
+    import os
+    import pathlib
+
+    g = build_graph(seed=21)
+    _store_n_entries(g, 6)
+    entries = sorted(cache_env.glob("*.npz"))
+    assert len(entries) == 6
+    victim = entries[0]
+    orig_stat = pathlib.Path.stat
+
+    def racy_stat(self, **kw):
+        if self == victim and os.path.exists(str(self)):
+            os.unlink(str(self))     # a concurrent process deletes it now
+        return orig_stat(self, **kw)
+
+    monkeypatch.setattr(pathlib.Path, "stat", racy_stat)
+    gone = sc.prune(cap=2)
+    monkeypatch.undo()
+    # the victim vanished mid-prune; the survivors were still pruned to
+    # the cap (5 statted entries, cap 2 -> 3 unlinked by the pruner)
+    assert gone == 3
+    assert len(list(cache_env.glob("*.npz"))) == 2
+
+
+def test_prune_tolerates_unlink_race(cache_env, monkeypatch):
+    """An entry deleted between ``stat`` and ``unlink`` (a concurrent
+    pruner won) is skipped, and the rest still go."""
+    import os
+    import pathlib
+
+    g = build_graph(seed=22)
+    _store_n_entries(g, 5)
+    victim = sorted(cache_env.glob("*.npz"))[0]
+    orig_unlink = pathlib.Path.unlink
+
+    def racy_unlink(self, **kw):
+        if self == victim and os.path.exists(str(self)):
+            os.unlink(str(self))     # the other pruner got there first
+        return orig_unlink(self, **kw)
+
+    monkeypatch.setattr(pathlib.Path, "unlink", racy_unlink)
+    sc.prune(cap=1)
+    monkeypatch.undo()
+    assert len(list(cache_env.glob("*.npz"))) == 1
+
+
+def test_concurrent_store_prune_two_processes(cache_env, monkeypatch):
+    """Two live processes sharing one cache directory — one storing (and
+    auto-pruning), one aggressively pruning — must both run to completion
+    without an exception, alongside the single-process atomic-write
+    coverage above."""
+    import os
+    import subprocess
+    import sys
+    import time
+
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MAX", "4")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    child_code = (
+        "import sys, time\n"
+        f"sys.path.insert(0, {src!r})\n"
+        "from repro.core import schedule_cache as sc\n"
+        "deadline = time.time() + 3.0\n"
+        "prunes = 0\n"
+        "while time.time() < deadline:\n"
+        "    sc.prune(cap=1)\n"
+        "    prunes += 1\n"
+        "print('PRUNES', prunes)\n")
+    child = subprocess.Popen([sys.executable, "-c", child_code],
+                             env=dict(os.environ),
+                             stdout=subprocess.PIPE,
+                             stderr=subprocess.PIPE, text=True)
+    g = build_graph(seed=23)
+    deadline = time.time() + 2.5
+    stored = 0
+    while time.time() < deadline:
+        _store_n_entries(g, 4)       # each store also prunes to the cap
+        stored += 4
+    out, err = child.communicate(timeout=30)
+    assert child.returncode == 0, err
+    assert "PRUNES" in out
+    assert stored > 0
+    # whatever survived the races is a well-formed, loadable set
+    for p in cache_env.glob("*.npz"):
+        try:
+            with np.load(p) as z:
+                assert int(z["format"]) == sc._FORMAT
+        except OSError:
+            pass                     # deleted between glob and open: fine

@@ -373,3 +373,77 @@ def test_suite_axis_latency_grid_matches_per_step():
     assert suite_axis_latency_grid({}, alphas, ms, {}) == {}
     assert suite_axis_latency_grid({"s": {}}, alphas, ms,
                                    {"s": 1e-3}) == {"s": {}}
+
+
+# --------------------------------------------- heterogeneous-suite chunking
+
+def test_member_groups_partition_streams_big_blocks():
+    """A member too big to fit a full-width replay chunk in the budget
+    becomes its own replay group; small members stay batched together;
+    every member lands in exactly one group."""
+    from repro.core.suite import _member_groups
+
+    members = [rand_edag(40, 20), rand_edag(41, 600, p_edge=0.02),
+               rand_edag(42, 25), rand_edag(43, 30)]
+    suite = EDagSuite(members)
+    P, n_pairs = 8, 2
+    # budget sized so only the 600-vertex member overflows cap_rows
+    budget = 24 * P * 300 * n_pairs
+    groups = _member_groups(suite, n_pairs, P, budget)
+    assert [1] in groups
+    flat = sorted(i for grp in groups for i in grp)
+    assert flat == [0, 1, 2, 3]
+    covered = [i for grp in groups for i in grp]
+    assert len(covered) == len(set(covered))
+    # a huge budget keeps the whole suite in one batched group
+    assert _member_groups(suite, n_pairs, P, 1 << 40) == [[0, 1, 2, 3]]
+
+
+def test_heterogeneous_suite_grid_bit_identical_under_grouping():
+    """Per-block chunking is invisible in the results: one dominant
+    member among small ones, swept under budgets that force (a) the
+    grouped path and (b) the minimum chunk, equals the per-member
+    single-trace grids bit-for-bit."""
+    members = [rand_edag(50, 20), rand_edag(51, 400, p_edge=0.03),
+               rand_edag(52, 15)]
+    suite = EDagSuite(members)
+    alphas = [50.0, 100.0, 150.0, 200.0, 300.0]
+    ms, css = [2, 4], [0, 2]
+    want = [sweep_grid(g, alphas, ms=ms, compute_slots=css)
+            for g in members]
+    for budget in (None, 24 * len(alphas) * 200 * len(ms) * len(css), 1):
+        got = suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css,
+                               mem_budget=budget)
+        for k in range(len(members)):
+            assert np.array_equal(got[k], want[k]), (k, budget)
+
+
+def test_heterogeneous_suite_grouping_on_jax_backend():
+    """Grouped replay through the error-bounded f32 device path (clean
+    and dirty alphas mixed) still equals the numpy f64 grids exactly."""
+    if len(BACKENDS) < 2:
+        pytest.skip("jax not available")
+    import jax
+    from repro.core import backend as bk
+
+    members = [rand_edag(60, 18), rand_edag(61, 300, p_edge=0.03),
+               rand_edag(62, 22)]
+    suite = EDagSuite(members)
+    alphas = [50.0, 0.1, 125.0, 1.0 / 3.0, 300.0]
+    ms, css = [2, 4], [0, 2]
+    budget = 24 * len(alphas) * 150 * len(ms) * len(css)
+    want = suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css,
+                            backend="numpy", mem_budget=budget,
+                            use_cache=False)
+    was = bool(jax.config.jax_enable_x64)
+    jax.config.update("jax_enable_x64", False)  # pin the f32 mode
+    try:
+        bk.reset_stats()
+        got = suite_sweep_grid(suite, alphas, ms=ms, compute_slots=css,
+                               backend="jax", mem_budget=budget,
+                               use_cache=False)
+    finally:
+        jax.config.update("jax_enable_x64", was)
+    assert np.array_equal(got, want)
+    assert bk.stats["jax_chunks"] > 0           # device replay ran
+    assert bk.stats["demoted_columns"] > 0      # dirty columns demoted
