@@ -1,0 +1,158 @@
+"""Analysis-service load test: throughput and latency under faults.
+
+Drives :class:`repro.serve.analysis.AnalysisService` with a mixed stream
+of kernel-analysis requests and measures:
+
+* **clean**      requests/sec and P50/P99 latency with no faults armed —
+                 the batched-admission throughput baseline;
+* **faulty**     the same stream under a recurring transient fault mix
+                 (IO faults at load/store, backend faults at replay,
+                 injected latency) — success rate here is the robustness
+                 acceptance number: every injected *transient* must
+                 recover within the default retry budget, so the CI
+                 smoke asserts ``success_rate == 1.0``;
+* **poisoned**   a stream with one hard-poisoned member per wave —
+                 healthy co-batched members must all complete
+                 (isolation), the poisoned one must fail with a
+                 structured error, so the healthy success rate is
+                 asserted 1.0 and the poisoned one 0.0.
+
+Writes ``BENCH_service.json`` next to the repo root and prints one CSV
+row per scenario.  ``--smoke`` shrinks the stream for CI wall-clock.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_service [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.serve import AnalysisRequest, AnalysisService, faults
+
+KERNELS = ("atax", "bicg", "mvt", "gesummv")
+
+
+def _stream(n_waves: int, wave: int, N: int):
+    """``n_waves`` waves of ``wave`` compatible requests each."""
+    reqs = []
+    for w in range(n_waves):
+        for k in range(wave):
+            reqs.append(AnalysisRequest(
+                kernel=KERNELS[(w * wave + k) % len(KERNELS)], n=N,
+                alphas=(60.0, 120.0, 240.0), ms=(2, 4),
+                deadline_s=300.0))
+    return reqs
+
+
+def _percentiles(lat_s):
+    lat_ms = np.asarray(sorted(lat_s)) * 1e3
+    return (float(np.percentile(lat_ms, 50)),
+            float(np.percentile(lat_ms, 99)))
+
+
+def _drive(reqs_per_wave, n_waves, N, spec: str = ""):
+    """Run the stream through a fresh service; returns the scenario row.
+
+    Latency is per-request wall time from admission (``process`` call)
+    to resolution — the inline path, so the measurement excludes the
+    background batching window and measures the engine itself."""
+    faults.reset()
+    if spec:
+        for s in faults.parse_spec(spec):
+            faults.install(s.stage, s.kind, count=s.count, every=s.every,
+                           delay=s.delay, rid=s.rid,
+                           min_batch=s.min_batch)
+    service = AnalysisService(start=False, backoff_s=0.001)
+    lat, ok_count, results = [], 0, []
+    t0 = time.perf_counter()
+    for w in range(n_waves):
+        wave = _stream(1, reqs_per_wave, N)
+        tw = time.perf_counter()
+        out = service.process(wave)
+        dt = time.perf_counter() - tw
+        lat.extend([dt / len(out)] * len(out))
+        results.extend(out)
+        ok_count += sum(r.ok for r in out)
+    total_s = time.perf_counter() - t0
+    faults.reset()
+    n = n_waves * reqs_per_wave
+    p50, p99 = _percentiles(lat)
+    return {
+        "requests": n, "seconds": total_s, "rps": n / total_s,
+        "p50_ms": p50, "p99_ms": p99,
+        "success_rate": ok_count / n,
+        "retries": sum(r.retries for r in results),
+        "errors": sorted({r.error["code"] for r in results if not r.ok}),
+    }, results
+
+
+# recurring transients at every service stage: the robustness acceptance
+# stream — all of these must recover inside the default retry budget
+TRANSIENT_SPEC = ("load:io:every=5,replay:backend:every=4,"
+                  "store:io:every=3,replay:latency:every=7:delay=0.005")
+
+
+def run(smoke: bool = False) -> dict:
+    n_waves = 4 if smoke else 16
+    wave = 3 if smoke else 6
+    N = 6 if smoke else 12
+
+    clean, _ = _drive(wave, n_waves, N)
+    faulty, _ = _drive(wave, n_waves, N, TRANSIENT_SPEC)
+
+    # poisoned wave: rid 1 of every fresh service is hard-poisoned solo,
+    # the union always fails -> isolation path every wave
+    faults.reset()
+    faults.install("replay", "backend", min_batch=2)
+    faults.install("replay", "backend", rid=1)
+    service = AnalysisService(start=False, backoff_s=0.0)
+    out = service.process(_stream(1, 3, N))
+    faults.reset()
+    healthy = [r for r in out if r.rid != 1]
+    poisoned = [r for r in out if r.rid == 1]
+    poison_row = {
+        "healthy_success_rate":
+            sum(r.ok for r in healthy) / len(healthy),
+        "poisoned_success_rate":
+            sum(r.ok for r in poisoned) / len(poisoned),
+        "poisoned_error": poisoned[0].error["code"],
+    }
+    return {"config": {"n_waves": n_waves, "wave": wave, "N": N,
+                       "transient_spec": TRANSIENT_SPEC},
+            "clean": clean, "faulty": faulty, "poisoned": poison_row}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream for CI wall-clock")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    print("scenario,requests,rps,p50_ms,p99_ms,success_rate,retries")
+    for name in ("clean", "faulty"):
+        row = res[name]
+        print(f"{name},{row['requests']},{row['rps']:.1f},"
+              f"{row['p50_ms']:.1f},{row['p99_ms']:.1f},"
+              f"{row['success_rate']:.3f},{row['retries']}")
+    pz = res["poisoned"]
+    print(f"poisoned,3,,,,healthy={pz['healthy_success_rate']:.3f}/"
+          f"poisoned={pz['poisoned_success_rate']:.3f}"
+          f" ({pz['poisoned_error']})")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.out}")
+    assert res["clean"]["success_rate"] == 1.0, "clean stream must succeed"
+    assert res["faulty"]["success_rate"] == 1.0, \
+        "every injected transient must recover within the retry budget"
+    assert pz["healthy_success_rate"] == 1.0, \
+        "poison isolation must protect co-batched members"
+    assert pz["poisoned_success_rate"] == 0.0
+    print("# acceptance: transients recovered, poison isolated")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,8 @@ from typing import Optional
 
 import numpy as np
 
+from .counters import Stats
+
 _BACKENDS = ("numpy", "jax")
 _AUTO_BACKEND: Optional[str] = None
 _REPLAY_DTYPES = ("float32", "float64")
@@ -60,15 +62,26 @@ _REPLAY_DTYPES = ("float32", "float64")
 #: those the numpy kernel handled end to end (including chunks whose f32
 #: pass certified no column at all); ``certified_columns`` /
 #: ``demoted_columns`` count sweep columns the float32 certificate
-#: accepted / demoted to the float64 numpy kernel.
-stats = dict(chunks=0, jax_chunks=0, jax_f64_chunks=0, numpy_chunks=0,
-             certified_columns=0, demoted_columns=0)
+#: accepted / demoted to the float64 numpy kernel.  Thread-safe: the
+#: analysis service replays concurrent batches, and lost increments here
+#: would skew the very counters its benchmarks and fault-injection gates
+#: assert on.
+stats = Stats(chunks=0, jax_chunks=0, jax_f64_chunks=0, numpy_chunks=0,
+              certified_columns=0, demoted_columns=0)
+
+#: Fault-injection hook (``serve.faults``): when set, called with no
+#: arguments at the top of the jax kernel path.  An exception it raises
+#: is swallowed by the kernel dispatch's existing best-effort fallback,
+#: demoting the pass to the numpy float64 kernel — the hook exists so
+#: the fault-injection suite can *prove* that in-kernel backend failures
+#: degrade through the ladder without changing a bit of any result.
+#: Never set outside tests/fault injection.
+fault_hook = None
 
 
 def reset_stats() -> None:
     """Zero the replay-dispatch counters (tests and benchmarks)."""
-    for k in stats:
-        stats[k] = 0
+    stats.reset()
 
 
 def select_backend(override: Optional[str] = None) -> str:
@@ -452,6 +465,11 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
     import jax
     import jax.numpy as jnp
 
+    if fault_hook is not None:
+        # fault injection (serve.faults): a raising hook is caught by the
+        # callers' best-effort dispatch and demotes this pass to numpy
+        fault_hook()
+
     if F.dtype == np.float64 and not jax.config.jax_enable_x64:
         # without the x64 flag jax would silently truncate to float32 and
         # hand back drifted values in a float64 array; exactness beats
@@ -669,7 +687,7 @@ def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
     quanta = np.asarray(quanta, dtype=np.float64)
     if quanta.shape != (F.shape[1],):
         raise ValueError("quanta must have one entry per column")
-    stats["chunks"] += 1
+    stats.add("chunks")
     b = select_backend(backend)
     # an explicit replay_dtype argument is validated on every backend (a
     # typo'd argument is a caller bug and must not surface only once the
@@ -678,7 +696,7 @@ def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
     pol = (replay_dtype_policy(replay_dtype)
            if (b == "jax" or replay_dtype) else "float64")
     if b != "jax" or F.shape[1] == 0:
-        stats["numpy_chunks"] += 1
+        stats.add("numpy_chunks")
         return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     x64 = False
     try:
@@ -687,18 +705,18 @@ def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
             jax.config.update("jax_enable_x64", True)
         x64 = bool(jax.config.jax_enable_x64)
     except Exception:
-        stats["numpy_chunks"] += 1
+        stats.add("numpy_chunks")
         return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     if x64:
         # exact float64 on device (the opt-in x64 mode, or a process
         # already running jax with the x64 flag)
         try:
             _accumulate_jax(lv, F, clamp=clamp, R_out=R_out)
-            stats["jax_chunks"] += 1
-            stats["jax_f64_chunks"] += 1
+            stats.add("jax_chunks")
+            stats.add("jax_f64_chunks")
             return F
         except Exception:
-            stats["numpy_chunks"] += 1
+            stats.add("numpy_chunks")
             return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     # error-bounded float32 mode.  Pre-screen: only columns whose base
     # costs all sit strictly below the threshold go to the device.  This
@@ -718,8 +736,8 @@ def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
     live = base_mag < thr
     live_idx = np.flatnonzero(live)
     if len(live_idx) == 0:
-        stats["numpy_chunks"] += 1
-        stats["demoted_columns"] += F.shape[1]
+        stats.add("numpy_chunks")
+        stats.add("demoted_columns", F.shape[1])
         return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     F32 = F[:, live_idx].astype(np.float32)
     R32 = (R_out[:, live_idx].astype(np.float32) if R_out is not None
@@ -727,28 +745,28 @@ def replay_accumulate(lv: LevelCSR, F: np.ndarray, quanta: np.ndarray,
     try:
         _accumulate_jax(lv, F32, clamp=clamp, R_out=R32)
     except Exception:
-        stats["numpy_chunks"] += 1
+        stats.add("numpy_chunks")
         return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     okl = _certified_f32(F32, quanta[live_idx], lv.n_levels)
     ok = np.zeros(F.shape[1], dtype=bool)
     ok[live_idx[okl]] = True
     n_ok = int(okl.sum())
-    stats["certified_columns"] += n_ok
+    stats.add("certified_columns", n_ok)
     if n_ok == 0:
         # nothing certified: F still holds the untouched base costs, so
         # the numpy kernel runs in place — no slice copies needed
-        stats["numpy_chunks"] += 1
-        stats["demoted_columns"] += F.shape[1]
+        stats.add("numpy_chunks")
+        stats.add("demoted_columns", F.shape[1])
         return _accumulate_numpy(lv, F, clamp=clamp, R_out=R_out)
     # certified columns are exact multiples of q below 2^24 * q — the
     # float32 values ARE the float64 values, the cast is lossless
     F[:, ok] = F32[:, okl]
     if R_out is not None:
         R_out[:, ok] = R32[:, okl]
-    stats["jax_chunks"] += 1
+    stats.add("jax_chunks")
     bad = ~ok
     if bad.any():
-        stats["demoted_columns"] += int(bad.sum())
+        stats.add("demoted_columns", int(bad.sum()))
         Fb = np.ascontiguousarray(F[:, bad])
         Rb = (np.ascontiguousarray(R_out[:, bad]) if R_out is not None
               else None)

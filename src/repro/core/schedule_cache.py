@@ -42,9 +42,10 @@ This module persists recorded schedules across processes:
   compress far better than raw int64 — the ROADMAP scale target for
   HPCG/LULESH-size traces whose raw entries ran 10-25 MB.  Decoding is
   one ``np.cumsum`` per array.  Entries written by older formats (or
-  whose arrays are not int32) are rejected on load and simply
-  re-recorded — the format version is part of the validation, never
-  migrated in place.
+  whose arrays are not int32) are *quarantined* on load — renamed to
+  ``*.bad`` with a warn-once log — and re-recorded; the format version
+  is part of the validation, never migrated in place, and the rename
+  frees the key path so one re-recording warms every later process.
 
 Writes are atomic (tempfile + ``os.replace``), so concurrent processes
 sharing a cache directory race benignly: last writer wins, readers see
@@ -52,6 +53,7 @@ either a complete entry or none.
 """
 from __future__ import annotations
 
+import logging
 import os
 import tempfile
 import zipfile
@@ -59,6 +61,10 @@ from pathlib import Path
 from typing import Optional, Tuple
 
 import numpy as np
+
+from .counters import Stats
+
+_log = logging.getLogger(__name__)
 
 _FORMAT = 3
 _DEFAULT_MAX_ENTRIES = 256
@@ -91,14 +97,27 @@ def _delta_decode(deltas: np.ndarray) -> Optional[np.ndarray]:
 #: ``memory_hits`` / ``disk_hits`` / ``misses`` count plan lookups in
 #: ``simulate_batch``; ``record_runs`` counts instrumented event-loop
 #: recordings (the cost the cache exists to amortize); ``stores`` counts
-#: successful disk writes.
-stats = dict(memory_hits=0, disk_hits=0, misses=0, stores=0, record_runs=0)
+#: successful disk writes; ``quarantined`` counts corrupt entries moved
+#: aside to ``*.bad`` on load.  Thread-safe (``counters.Stats``): the
+#: analysis service warms this cache from concurrent batches.
+stats = Stats(memory_hits=0, disk_hits=0, misses=0, stores=0,
+              record_runs=0, quarantined=0)
+
+#: Fault-injection hook (``serve.faults``): when set, called with the
+#: point name (``"cache-load"`` / ``"cache-store"``) before disk IO so
+#: the fault layer can inject IO errors or corrupt entries
+#: deterministically.  Never set outside tests/fault injection.
+fault_hook = None
+
+#: Corrupt entries are renamed aside with a warning exactly once per
+#: process — a shared cache directory with a damaged entry would
+#: otherwise log once per load forever.
+_warned_quarantine = False
 
 
 def reset_stats() -> None:
     """Zero the per-process counters (tests and benchmarks)."""
-    for k in stats:
-        stats[k] = 0
+    stats.reset()
 
 
 def cache_dir() -> Optional[Path]:
@@ -153,6 +172,29 @@ def _entry_path(d: Path, digest: str, m: int, cs: int,
     return d / f"{digest[:32]}_m{m}_cs{cs}_u{float(unit):g}.npz"
 
 
+def _quarantine(p: Path, reason: str) -> None:
+    """Move a corrupt/foreign/old-format entry aside as ``<name>.bad``.
+
+    Silently rejecting such an entry would leave it in place, so every
+    process would re-validate, re-record and (for old formats, whose key
+    path is taken) fail to overwrite it forever.  Renaming it frees the
+    key for the fresh recording's store — corruption costs one recording
+    run once, not one per process.  The rename is best-effort (a
+    concurrent process may have quarantined or pruned it first) and
+    warns once per process."""
+    global _warned_quarantine
+    try:
+        os.replace(p, p.with_name(p.name + ".bad"))
+    except OSError:
+        return                         # already gone / already quarantined
+    stats.add("quarantined")
+    if not _warned_quarantine:
+        _warned_quarantine = True
+        _log.warning(
+            "quarantined corrupt schedule-cache entry %s (%s); further "
+            "corrupt entries will be moved aside silently", p, reason)
+
+
 def load(digest: str, m: int, cs: int, n: int,
          unit: float = 1.0) -> Optional[Tuple[np.ndarray, np.ndarray,
                                               np.ndarray, np.ndarray]]:
@@ -168,13 +210,22 @@ def load(digest: str, m: int, cs: int, n: int,
     format's int32 deltas, or an entry whose arrays do not describe
     ``n`` vertices (a truncated or foreign file — never trusted; the
     scheduler re-validates the arrays structurally before replaying
-    them in any case).  Entries written by older formats miss and get
-    re-recorded — there is no in-place migration."""
+    them in any case).  A file that exists at the key path but fails any
+    of these checks is *quarantined* — renamed to ``*.bad`` with a
+    warn-once log — so the key frees up and the fresh recording that
+    replaces it warms every later process, instead of every process
+    silently re-recording against the same damaged file.  Entries
+    written by older formats are quarantined the same way — there is no
+    in-place migration."""
     d = cache_dir()
     if d is None:
         return None
     p = _entry_path(d, digest, m, cs, unit)
     try:
+        if fault_hook is not None:
+            # an injected cache-load fault behaves exactly like a real
+            # unreadable entry: quarantine below, never a crash
+            fault_hook("cache-load")
         with np.load(p) as z:
             if int(z["format"]) != _FORMAT or int(z["n"]) != n or \
                     float(z["unit"]) != float(unit) or \
@@ -182,15 +233,21 @@ def load(digest: str, m: int, cs: int, n: int,
                     int(z["compute_slots"]) != int(cs) or \
                     str(z["digest"]) != digest:
                 # every stored field must corroborate the requested key —
-                # a renamed/copied entry is never trusted
+                # a renamed/copied/old-format entry is never trusted
+                _quarantine(p, "stored fields do not match the key")
                 return None
             arrays = [_delta_decode(np.asarray(z[k])) for k in _ARRAY_KEYS]
-    except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+    except FileNotFoundError:
+        return None                    # a plain miss, nothing to quarantine
+    except (OSError, KeyError, ValueError, zipfile.BadZipFile) as e:
+        _quarantine(p, f"unreadable entry ({type(e).__name__})")
         return None
     if any(arr is None for arr in arrays):
+        _quarantine(p, "stored arrays are not int32 deltas")
         return None
     topo, O_mem, O_alu, level = arrays
     if len(topo) != n or len(level) != n or len(O_mem) + len(O_alu) > n:
+        _quarantine(p, "array lengths do not describe the keyed trace")
         return None
     try:
         os.utime(p)                    # touch: keep hot entries off the
@@ -216,6 +273,10 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
         return False
     tmp = None
     try:
+        if fault_hook is not None:
+            # an injected cache-store fault is a failed write: contained
+            # by the best-effort store contract (returns False)
+            fault_hook("cache-store")
         d.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         with os.fdopen(fd, "wb") as f:
@@ -232,7 +293,7 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
                 os.unlink(tmp)
             except OSError:
                 pass
-    stats["stores"] += 1
+    stats.add("stores")
     prune()
     return True
 
@@ -251,7 +312,10 @@ def prune(cap: Optional[int] = None) -> int:
         return 0
     cap = max_entries() if cap is None else max(int(cap), 0)
     try:
-        names = list(d.glob("*.npz"))
+        # quarantined *.bad entries count against the cap too (they are
+        # never touched, so as the coldest files they are pruned first —
+        # corruption cannot grow the directory without bound)
+        names = list(d.glob("*.npz")) + list(d.glob("*.npz.bad"))
     except OSError:
         return 0
     entries = []

@@ -466,17 +466,17 @@ def _get_plan(g: EDag, m: int, cs: int,
     memo = getattr(g, "_replay_plans", None)
     if memo is not None and key in memo:
         memo.move_to_end(key)
-        _sc.stats["memory_hits"] += 1
+        _sc.stats.add("memory_hits")
         return memo[key]
     if g.n_vertices >= _sc.min_vertices():
         got = _sc.load(g.trace_digest(), m, cs, g.n_vertices, unit)
         if got is not None:
             plan = _plan_from_cache(g, m, cs, *got)
             if plan is not None:
-                _sc.stats["disk_hits"] += 1
+                _sc.stats.add("disk_hits")
                 _memo_plan(g, key, plan)
                 return plan
-    _sc.stats["misses"] += 1
+    _sc.stats.add("misses")
     return None
 
 
@@ -484,7 +484,7 @@ def _record_plan(g: EDag, sim_lists, m: int, cs: int, a0: float,
                  unit: float, persist: bool):
     """One instrumented reference run -> (master makespan, replay plan);
     the plan is memoized and, for large traces, persisted to disk."""
-    _sc.stats["record_runs"] += 1
+    _sc.stats.add("record_runs")
     mk0, topo, O_mem, O_alu = _event_loop(
         g.is_mem, sim_lists, m, a0, unit, cs, record=True)
     plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs)

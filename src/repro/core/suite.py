@@ -261,7 +261,7 @@ def _member_schedule(g: EDag, m: int, cs: int, unit: float, a0: float,
         if memo is not None and key in memo:
             p = memo[key]
             memo.move_to_end(key)
-            _sc.stats["memory_hits"] += 1
+            _sc.stats.add("memory_hits")
             return p.topo, p.O_mem, p.O_alu, p.level_aug, False
         if n >= _sc.min_vertices():
             got = _sc.load(g.trace_digest(), m, cs, n, unit)
@@ -269,10 +269,10 @@ def _member_schedule(g: EDag, m: int, cs: int, unit: float, a0: float,
                 topo, O_mem, O_alu, level = got
                 if _validate_schedule(g, m, cs, topo, O_mem,
                                       O_alu) is not None:
-                    _sc.stats["disk_hits"] += 1
+                    _sc.stats.add("disk_hits")
                     return topo, O_mem, O_alu, level, False
-        _sc.stats["misses"] += 1
-    _sc.stats["record_runs"] += 1
+        _sc.stats.add("misses")
+    _sc.stats.add("record_runs")
     _, topo, O_mem, O_alu = _event_loop(g.is_mem, g._sim_lists(), m, a0,
                                         unit, cs, record=True)
     return topo, O_mem, O_alu, None, True

@@ -1,3 +1,21 @@
-from .engine import ServeEngine, Request
+"""Serving layer: the model-serving engine and the fault-tolerant
+analysis service.
 
-__all__ = ["ServeEngine", "Request"]
+``ServeEngine``/``Request`` (the jax model path) import lazily — the
+analysis service and its fault-injection layer are pure numpy + core
+and must stay importable without pulling the model stack.
+"""
+from .analysis import (AnalysisRequest, AnalysisResult, AnalysisService,
+                       default_deadline_s, default_max_retries)
+from . import faults
+
+__all__ = ["ServeEngine", "Request", "AnalysisRequest", "AnalysisResult",
+           "AnalysisService", "default_deadline_s", "default_max_retries",
+           "faults"]
+
+
+def __getattr__(name):
+    if name in ("ServeEngine", "Request"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -277,3 +277,55 @@ def test_jax_backend_float64_stays_exact():
     F_jx = level_accumulate(lv, base.copy(), backend="jax")
     assert F_jx.dtype == np.float64
     assert np.array_equal(F_np, F_jx)
+
+
+# ------------------------------------------------- thread-safe stat counters
+
+def test_stats_counters_exact_under_concurrency():
+    """The analysis service runs concurrent batches; ``stats[k] += 1`` is
+    a non-atomic read-modify-write, so the counters are a locked Stats
+    map — hammered increments must land exactly."""
+    import threading
+
+    from repro.core.counters import Stats
+
+    s = Stats(a=0, b=0)
+    N, T = 5000, 8
+
+    def worker():
+        for _ in range(N):
+            s.add("a")
+            s.add("b", 2)
+
+    threads = [threading.Thread(target=worker) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert s["a"] == N * T and s["b"] == 2 * N * T
+    s.reset()
+    assert s["a"] == 0 and dict(s) == {"a": 0, "b": 0}
+
+
+def test_stats_keeps_dict_shaped_read_api():
+    from repro.core.counters import Stats
+
+    s = Stats(x=1, y=2)
+    assert dict(s) == {"x": 1, "y": 2} and dict(**s) == {"x": 1, "y": 2}
+    assert sorted(s.keys()) == ["x", "y"] and len(s) == 2 and "x" in s
+    assert s.snapshot() == {"x": 1, "y": 2}
+    s["x"] = 7
+    assert s["x"] == 7
+    with pytest.raises(KeyError):
+        s.add("typo")
+    with pytest.raises(KeyError):
+        s["typo"] = 1
+
+
+def test_backend_and_cache_stats_are_thread_safe_maps():
+    from repro.core import backend as backend_mod
+    from repro.core import schedule_cache as sched_cache
+    from repro.core.counters import Stats
+
+    assert isinstance(backend_mod.stats, Stats)
+    assert isinstance(sched_cache.stats, Stats)

@@ -113,3 +113,76 @@ def test_backend_argument_typo_raises_with_choices():
 def test_backend_env_empty_means_auto(monkeypatch):
     monkeypatch.setenv("EDAN_BACKEND", "   ")
     assert select_backend() in ("numpy", "jax")
+
+
+# --------------------------------------- service knobs (serve.analysis)
+
+@pytest.mark.parametrize("val", BAD_NUMERIC)
+def test_deadline_env_falls_back(monkeypatch, val):
+    from repro.serve import default_deadline_s
+    from repro.serve.analysis import DEFAULT_DEADLINE_S
+    monkeypatch.setenv("EDAN_DEADLINE_S", val)
+    assert default_deadline_s() == DEFAULT_DEADLINE_S
+
+
+def test_deadline_env_valid_zero_and_inf(monkeypatch):
+    from repro.serve import default_deadline_s
+    from repro.serve.analysis import DEFAULT_DEADLINE_S
+    monkeypatch.setenv("EDAN_DEADLINE_S", "2.5")
+    assert default_deadline_s() == 2.5
+    monkeypatch.setenv("EDAN_DEADLINE_S", "0")     # non-positive: fallback
+    assert default_deadline_s() == DEFAULT_DEADLINE_S
+    monkeypatch.setenv("EDAN_DEADLINE_S", "inf")   # non-finite: fallback
+    assert default_deadline_s() == DEFAULT_DEADLINE_S
+
+
+@pytest.mark.parametrize("val", BAD_NUMERIC)
+def test_max_retries_env_falls_back(monkeypatch, val):
+    from repro.serve import default_max_retries
+    from repro.serve.analysis import DEFAULT_MAX_RETRIES
+    monkeypatch.setenv("EDAN_MAX_RETRIES", val)
+    assert default_max_retries() == DEFAULT_MAX_RETRIES
+
+
+def test_max_retries_env_zero_is_valid(monkeypatch):
+    from repro.serve import default_max_retries
+    monkeypatch.setenv("EDAN_MAX_RETRIES", "0")
+    assert default_max_retries() == 0              # retries disabled
+    monkeypatch.setenv("EDAN_MAX_RETRIES", "5")
+    assert default_max_retries() == 5
+
+
+# ------------------------------------------------- $EDAN_FAULTS (mode knob)
+
+def test_faults_env_typo_raises_with_choices(monkeypatch):
+    """$EDAN_FAULTS selects *behaviour*, so like $EDAN_BACKEND a typo
+    must raise with the valid choices — silently disarming the fault
+    layer would un-test every degradation path."""
+    from repro.serve import faults
+    faults.reset()
+    try:
+        monkeypatch.setenv("EDAN_FAULTS", "reply:io")
+        with pytest.raises(ValueError) as ei:
+            faults.check("load")
+        assert "replay" in str(ei.value) and "EDAN_FAULTS" in str(ei.value)
+        monkeypatch.setenv("EDAN_FAULTS", "load:oi")
+        with pytest.raises(ValueError) as ei:
+            faults.check("load")
+        assert "io" in str(ei.value) and "backend" in str(ei.value)
+        monkeypatch.setenv("EDAN_FAULTS", "load:io:conut=1")
+        with pytest.raises(ValueError) as ei:
+            faults.check("load")
+        assert "count" in str(ei.value)
+    finally:
+        faults.reset()
+
+
+def test_faults_env_empty_means_disarmed(monkeypatch):
+    from repro.serve import faults
+    faults.reset()
+    try:
+        monkeypatch.setenv("EDAN_FAULTS", "   ")
+        faults.check("load")                       # no fault armed
+        assert faults.active() == []
+    finally:
+        faults.reset()

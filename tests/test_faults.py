@@ -1,0 +1,172 @@
+"""Deterministic fault-injection layer (serve.faults).
+
+The fault layer is itself load-bearing test infrastructure — the service
+robustness suite trusts its schedules — so its determinism, spec
+grammar, restriction matching and hook wiring get tested directly.
+"""
+import pytest
+
+from repro.core import backend as bk
+from repro.core import schedule_cache as sc
+from repro.serve import faults
+
+
+@pytest.fixture(autouse=True)
+def clean_faults(monkeypatch):
+    monkeypatch.delenv("EDAN_FAULTS", raising=False)
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# ------------------------------------------------------------------ grammar
+
+def test_parse_spec_basic():
+    (s,) = faults.parse_spec("replay:backend:every=3")
+    assert (s.stage, s.kind, s.every) == ("replay", "backend", 3)
+    a, b = faults.parse_spec(
+        "load:io:count=1, store:latency:delay=0.25:rid=7")
+    assert (a.stage, a.kind, a.count) == ("load", "io", 1)
+    assert (b.stage, b.kind, b.delay, b.rid) == ("store", "latency",
+                                                 0.25, 7)
+    assert faults.parse_spec("") == []
+    assert faults.parse_spec(" , ,") == []
+
+
+def test_parse_spec_typos_raise_with_choices():
+    with pytest.raises(ValueError) as ei:
+        faults.parse_spec("reply:backend")
+    assert "reply" in str(ei.value) and "replay" in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        faults.parse_spec("replay:backnd")
+    assert "io" in str(ei.value) and "latency" in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        faults.parse_spec("replay:backend:evry=3")
+    assert "every" in str(ei.value)
+    with pytest.raises(ValueError):
+        faults.parse_spec("replay")                  # missing kind
+    with pytest.raises(ValueError):
+        faults.parse_spec("replay:backend:every")    # missing =value
+    with pytest.raises(ValueError):
+        faults.parse_spec("replay:backend:every=x")  # bad value
+
+
+def test_install_validates_like_parse():
+    with pytest.raises(ValueError):
+        faults.install("reply", "backend")
+    with pytest.raises(ValueError):
+        faults.install("replay", "backnd")
+    with pytest.raises(ValueError):
+        faults.install("replay", "backend", evry=3)
+
+
+# ---------------------------------------------------------------- schedules
+
+def test_count_fires_first_n_then_stops():
+    faults.install("load", "io", count=2)
+    for _ in range(2):
+        with pytest.raises(faults.InjectedIOError):
+            faults.check("load")
+    for _ in range(10):
+        faults.check("load")         # transient is over
+
+
+def test_every_fires_deterministically():
+    faults.install("replay", "backend", every=3)
+    fired = []
+    for i in range(1, 10):
+        try:
+            faults.check("replay")
+            fired.append(False)
+        except faults.InjectedBackendError:
+            fired.append(True)
+    assert fired == [False, False, True] * 3
+
+
+def test_unbounded_spec_is_a_hard_fault():
+    faults.install("report", "io")
+    for _ in range(5):
+        with pytest.raises(faults.InjectedIOError):
+            faults.check("report")
+
+
+def test_rid_and_min_batch_restrictions():
+    faults.install("replay", "backend", rid=3)
+    faults.check("replay")                    # rid unknown: no match
+    faults.check("replay", rid=2)
+    with pytest.raises(faults.InjectedBackendError):
+        faults.check("replay", rid=3)
+    faults.reset()
+    faults.install("replay", "backend", min_batch=2)
+    faults.check("replay", batch=1)
+    with pytest.raises(faults.InjectedBackendError):
+        faults.check("replay", batch=2)
+
+
+def test_latency_sleeps_and_returns():
+    import time
+    faults.install("load", "latency", delay=0.05)
+    t0 = time.monotonic()
+    faults.check("load")
+    assert time.monotonic() - t0 >= 0.04
+
+
+# -------------------------------------------------------------- environment
+
+def test_env_spec_armed_and_reparsed_on_change(monkeypatch):
+    monkeypatch.setenv("EDAN_FAULTS", "load:io")
+    with pytest.raises(faults.InjectedIOError):
+        faults.check("load")
+    monkeypatch.setenv("EDAN_FAULTS", "")     # value change: re-parsed
+    faults.check("load")
+    monkeypatch.setenv("EDAN_FAULTS", "finalize:backend:count=1")
+    with pytest.raises(faults.InjectedBackendError):
+        faults.check("finalize")
+    faults.check("finalize")
+
+
+def test_env_typo_raises_at_check(monkeypatch):
+    monkeypatch.setenv("EDAN_FAULTS", "reply:io")
+    with pytest.raises(ValueError) as ei:
+        faults.check("load")
+    assert "reply" in str(ei.value)
+
+
+# -------------------------------------------------------------------- hooks
+
+def test_core_hooks_attach_only_while_needed():
+    assert bk.fault_hook is None and sc.fault_hook is None
+    faults.install("kernel", "backend")
+    assert bk.fault_hook is not None and sc.fault_hook is None
+    faults.reset()
+    assert bk.fault_hook is None
+    faults.install("cache-load", "io")
+    assert sc.fault_hook is not None and bk.fault_hook is None
+    faults.reset()
+    assert sc.fault_hook is None
+
+
+def test_cache_load_hook_fires_inside_schedule_cache(tmp_path,
+                                                     monkeypatch):
+    import numpy as np
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE", str(tmp_path))
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MIN", "0")
+    faults.install("cache-store", "io")
+    # an injected store failure is contained by the cache's best-effort
+    # store (returns False), never raised at the caller
+    assert not sc.store("d" * 64, 4, 0, 4, 1.0,
+                        np.arange(4, dtype=np.int64),
+                        np.arange(4, dtype=np.int64),
+                        np.zeros(0, dtype=np.int64),
+                        np.zeros(4, dtype=np.int64))
+    assert faults.fire_log[("cache-store", "io")] == 1
+
+
+def test_fire_log_counts(monkeypatch):
+    faults.install("load", "io", every=2)
+    for _ in range(4):
+        try:
+            faults.check("load")
+        except faults.InjectedIOError:
+            pass
+    assert faults.fire_log[("load", "io")] == 2

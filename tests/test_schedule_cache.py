@@ -546,3 +546,135 @@ def test_concurrent_store_prune_two_processes(cache_env, monkeypatch):
                 assert int(z["format"]) == sc._FORMAT
         except OSError:
             pass                     # deleted between glob and open: fine
+
+
+# ----------------------------------------------------- quarantine-on-load
+
+def test_corrupt_entry_quarantined_then_warm(cache_env):
+    """A corrupt entry is renamed to *.bad on load (freeing the key), the
+    re-recording persists a replacement, and a later fresh process gets a
+    disk hit — one recording warms everyone, instead of every process
+    re-recording against the same damaged file forever."""
+    alphas = [50.0, 100.0, 200.0]
+    want = latency_sweep(build_graph(seed=30), alphas, m=3)
+    (entry,) = list(cache_env.glob("*.npz"))
+    entry.write_bytes(b"definitely not a zip archive")
+    sc.reset_stats()
+    got = latency_sweep(build_graph(seed=30), alphas, m=3)
+    assert np.array_equal(got, want)
+    assert sc.stats["quarantined"] == 1 and sc.stats["record_runs"] == 1
+    assert (cache_env / (entry.name + ".bad")).exists()  # moved aside...
+    assert len(list(cache_env.glob("*.npz"))) == 1       # ...re-recorded
+    assert entry.exists()       # the key path now holds the fresh entry
+    sc.reset_stats()
+    warm = latency_sweep(build_graph(seed=30), alphas, m=3)
+    assert np.array_equal(warm, want)
+    assert sc.stats["disk_hits"] == 1 and sc.stats["record_runs"] == 0
+
+
+def test_old_format_entry_quarantined(cache_env):
+    """Old-format entries take the same quarantine path as corrupt ones:
+    renamed aside, never migrated in place."""
+    g = build_graph(seed=31)
+    n = g.n_vertices
+    path = sc._entry_path(cache_env, g.trace_digest(), 4, 0, 1.0)
+    np.savez_compressed(
+        path, format=2, digest=g.trace_digest(), n=n, unit=1.0, m=4,
+        compute_slots=0, topo=np.arange(n, dtype=np.int64),
+        O_mem=np.flatnonzero(g.is_mem).astype(np.int64),
+        O_alu=np.zeros(0, dtype=np.int64),
+        level=np.zeros(n, dtype=np.int64))
+    sc.reset_stats()
+    assert sc.load(g.trace_digest(), 4, 0, n, 1.0) is None
+    assert sc.stats["quarantined"] == 1
+    assert not path.exists()
+    assert path.with_name(path.name + ".bad").exists()
+
+
+def test_plain_miss_quarantines_nothing(cache_env):
+    sc.reset_stats()
+    assert sc.load("f" * 64, 4, 0, 10, 1.0) is None
+    assert sc.stats["quarantined"] == 0
+    assert list(cache_env.glob("*.bad")) == []
+
+
+def test_quarantine_warns_once(cache_env, caplog, monkeypatch):
+    import logging
+
+    monkeypatch.setattr(sc, "_warned_quarantine", False)
+    g1, g2 = build_graph(seed=32), build_graph(seed=33)
+    for g in (g1, g2):
+        latency_sweep(g, [50.0, 100.0], m=2)
+    for p in cache_env.glob("*.npz"):
+        p.write_bytes(b"garbage")
+    with caplog.at_level(logging.WARNING, logger="repro.core.schedule_cache"):
+        assert sc.load(g1.trace_digest(), 2, 0, g1.n_vertices, 1.0) is None
+        assert sc.load(g2.trace_digest(), 2, 0, g2.n_vertices, 1.0) is None
+    warned = [r for r in caplog.records if "quarantined" in r.message]
+    assert len(warned) == 1
+    assert sc.stats["quarantined"] >= 2
+
+
+def test_bad_files_counted_against_prune_cap(cache_env, monkeypatch):
+    """Quarantined *.bad files are bounded by the same cap as live
+    entries — corruption must not grow the directory without limit."""
+    g = build_graph(seed=34)
+    _store_n_entries(g, 4)
+    for p in list(cache_env.glob("*.npz"))[:3]:
+        p.write_bytes(b"garbage")
+        assert sc.load("x" * 64, 99, 0, 1, 1.0) is None  # unrelated miss
+    # quarantine all three corrupted entries via keyed loads
+    n = g.n_vertices
+    for m in range(1, 5):
+        sc.load(g.trace_digest(), m, 0, n, 1.0)
+    assert len(list(cache_env.glob("*.npz.bad"))) == 3
+    assert sc.prune(cap=2) >= 1
+    survivors = (list(cache_env.glob("*.npz")) +
+                 list(cache_env.glob("*.npz.bad")))
+    assert len(survivors) <= 2
+
+
+def test_crash_mid_store_leaves_nothing_or_valid(cache_env):
+    """SIGKILL while the store's tempfile is being written: a survivor
+    process sees either no entry (tmp debris only, which prune bounds) or
+    a complete loadable one — never a torn keyed file."""
+    import os
+    import signal
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    child_code = (
+        "import os, sys, time\n"
+        f"sys.path.insert(0, {src!r})\n"
+        "import numpy as np\n"
+        "from repro.core import schedule_cache as sc\n"
+        "real_replace = os.replace\n"
+        "def slow_replace(a, b):\n"
+        "    print('REPLACING', flush=True)\n"
+        "    time.sleep(30)\n"
+        "    real_replace(a, b)\n"
+        "os.replace = slow_replace\n"
+        "n = 50\n"
+        "sc.store('a' * 64, 4, 0, n, 1.0,\n"
+        "         np.arange(n, dtype=np.int64),\n"
+        "         np.arange(n, dtype=np.int64),\n"
+        "         np.zeros(0, dtype=np.int64),\n"
+        "         np.zeros(n, dtype=np.int64))\n")
+    child = subprocess.Popen([sys.executable, "-c", child_code],
+                             env=dict(os.environ),
+                             stdout=subprocess.PIPE, text=True)
+    assert child.stdout.readline().strip() == "REPLACING"
+    os.kill(child.pid, signal.SIGKILL)   # tmp written, replace pending
+    child.wait(timeout=30)
+    assert list(cache_env.glob("*.npz")) == []       # nothing keyed
+    assert sc.load("a" * 64, 4, 0, 50, 1.0) is None  # survivor: clean miss
+    # and the survivor can store + load the same key normally
+    n = 50
+    assert sc.store("a" * 64, 4, 0, n, 1.0,
+                    np.arange(n, dtype=np.int64),
+                    np.arange(n, dtype=np.int64),
+                    np.zeros(0, dtype=np.int64),
+                    np.zeros(n, dtype=np.int64))
+    assert sc.load("a" * 64, 4, 0, n, 1.0) is not None
