@@ -56,6 +56,40 @@ import time
 
 import numpy as np
 
+try:
+    import resource
+except ImportError:                  # pragma: no cover - non-POSIX hosts
+    resource = None
+
+
+def _mem_probe() -> dict:
+    """Point-in-time memory/allocation counters: peak RSS (MB, process
+    high-water mark), cumulative minor page faults (fresh-page demand —
+    the allocation-behavior signal wall clock hides) and live Python
+    allocator blocks."""
+    out = dict(alloc_blocks=sys.getallocatedblocks())
+    if resource is not None:
+        ru = resource.getrusage(resource.RUSAGE_SELF)
+        out["peak_rss_mb"] = ru.ru_maxrss / 1024.0  # Linux: KB -> MB
+        out["minor_faults"] = ru.ru_minflt
+    return out
+
+
+def _mem_cols(before: dict) -> dict:
+    """Bench-row memory columns relative to a ``_mem_probe`` snapshot.
+
+    ``peak_rss_mb`` is absolute (the kernel keeps one high-water mark per
+    process, so per-bench deltas are only meaningful when they grow);
+    the fault/allocation deltas are per-bench."""
+    after = _mem_probe()
+    cols = dict(alloc_blocks_delta=after["alloc_blocks"]
+                - before["alloc_blocks"])
+    if "peak_rss_mb" in after:
+        cols["peak_rss_mb"] = round(after["peak_rss_mb"], 1)
+        cols["minor_faults_delta"] = (after["minor_faults"]
+                                      - before["minor_faults"])
+    return cols
+
 from repro.apps import hpcg, polybench, reference
 from repro.configs.paper_suite import SIM_COMPUTE_SLOTS
 from repro.core import (EDagSuite, Tracer, cost_matrix, latency_sweep,
@@ -91,12 +125,13 @@ def bench_tracing(N: int, repeats: int) -> dict:
                                                 np.random.default_rng(0))
         return tr.edag
 
+    mem0 = _mem_probe()
     nv = run_block().n_vertices
     t_blk = _best_of(run_block, repeats)
     t_ref = _best_of(run_ref, repeats)
     return dict(name=f"trace_gemm_N{N}", n_vertices=nv,
                 block_vps=nv / t_blk, scalar_vps=nv / t_ref,
-                speedup=t_ref / t_blk)
+                speedup=t_ref / t_blk, **_mem_cols(mem0))
 
 
 def bench_tracing_hpcg(n: int, iters: int, repeats: int) -> dict:
@@ -110,6 +145,7 @@ def bench_tracing_hpcg(n: int, iters: int, repeats: int) -> dict:
 
 
 def bench_accumulate(N: int, repeats: int) -> dict:
+    mem0 = _mem_probe()
     g = polybench.trace_kernel("gemm", N)
     g._finalize()
     ne = g.n_edges
@@ -119,10 +155,11 @@ def bench_accumulate(N: int, repeats: int) -> dict:
     assert np.array_equal(g._accumulate(g.cost), g._accumulate_scalar(g.cost))
     return dict(name=f"accumulate_gemm_N{N}", n_edges=ne,
                 vector_eps=ne / t_vec, scalar_eps=ne / t_ref,
-                speedup=t_ref / t_vec)
+                speedup=t_ref / t_vec, **_mem_cols(mem0))
 
 
 def bench_sweep(N: int, n_points: int, repeats: int) -> dict:
+    mem0 = _mem_probe()
     g = polybench.trace_kernel("gemm", N)
     g._finalize()
     alphas = np.linspace(50, 300, n_points)
@@ -140,7 +177,7 @@ def bench_sweep(N: int, n_points: int, repeats: int) -> dict:
     assert np.array_equal(run_batch(), run_scalar())
     return dict(name=f"sweep_gemm_N{N}x{n_points}", n_points=n_points,
                 batch_pps=n_points / t_vec, scalar_pps=n_points / t_ref,
-                speedup=t_ref / t_vec)
+                speedup=t_ref / t_vec, **_mem_cols(mem0))
 
 
 def bench_sweep_chunks(N: int, n_points: int, repeats: int) -> list:
@@ -168,6 +205,7 @@ def bench_sim(names, N: int, n_points: int, repeats: int,
     alphas = np.linspace(50.0, 300.0, n_points)
     rows = []
     tot_b = tot_r = 0.0
+    mem0 = _mem_probe()
     for name in names:
         g = polybench.trace_kernel(name, N)
         g._finalize()
@@ -188,7 +226,7 @@ def bench_sim(names, N: int, n_points: int, repeats: int,
                          n_vertices=g.n_vertices, n_points=n_points,
                          batch_s=t_b, ref_s=t_r, speedup=t_r / t_b))
     return dict(kernels=rows, total_batch_s=tot_b, total_ref_s=tot_r,
-                total_speedup=tot_r / tot_b,
+                total_speedup=tot_r / tot_b, **_mem_cols(mem0),
                 config=dict(N=N, n_points=n_points, m=m,
                             compute_slots=compute_slots))
 
@@ -410,47 +448,77 @@ def _cache_child(cfg: dict) -> None:
         n_vertices=g.n_vertices, **sc.stats)))
 
 
-def bench_schedule_cache(name: str, N: int, alphas, ms, css) -> dict:
-    """Persistent-cache proof across two successive *processes*: the cold
+def bench_schedule_cache(name: str, N: int, alphas, ms, css,
+                         repeats: int = 2) -> dict:
+    """Persistent-cache proof across successive *processes*: a cold
     child records one schedule per (m, compute_slots) pair and persists
-    them; the warm child, sharing only the on-disk cache directory, must
-    record zero and produce the identical grid."""
+    it; warm children, sharing only the on-disk cache directory, must
+    record zero and produce the identical grid.
+
+    Cold and warm sides each run ``repeats`` times (cold reps against
+    fresh cache directories, warm reps against the seeded one) and the
+    reported ``speedup`` is best-of/best-of — a single cold/warm shot is
+    subprocess start-up plus one short grid, whose timing noise has
+    historically swamped the real effect (a snapshot once published
+    0.38x for a workload that measures ~1.5x under repeats).  The
+    structural proof (``record_runs`` cold > 0, warm == 0, and the warm
+    ``record_seconds`` = 0) is noise-free either way; the warm children
+    also report how many cold-recorded seconds the cache saved them."""
     cfg = dict(kernel=name, N=N, alphas=list(map(float, alphas)),
                ms=list(ms), compute_slots=list(css))
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
-    out = {}
+
+    def child(env: dict, label: str) -> dict:
+        p = subprocess.run(
+            [sys.executable, "-m", "benchmarks.perf_core",
+             "--cache-child", json.dumps(cfg)],
+            env=env, capture_output=True, text=True,
+            cwd=os.path.dirname(src))
+        if p.returncode != 0:
+            # surface the child's traceback in the CI log before dying
+            sys.stderr.write(p.stdout + p.stderr)
+            raise RuntimeError(f"{label} cache child exited {p.returncode}")
+        line = next((ln for ln in p.stdout.splitlines()
+                     if ln.startswith("CACHE_CHILD ")), None)
+        if line is None:
+            sys.stderr.write(p.stdout + p.stderr)
+            raise RuntimeError(
+                f"{label} cache child produced no CACHE_CHILD line")
+        return json.loads(line[len("CACHE_CHILD "):])
+
+    cold_runs, warm_runs = [], []
     with tempfile.TemporaryDirectory() as td:
-        env = dict(os.environ, EDAN_SCHEDULE_CACHE=td,
-                   # self-contained: don't inherit caller floors/caps
-                   EDAN_SCHEDULE_CACHE_MIN="0",
-                   EDAN_SCHEDULE_CACHE_MAX=str(10 ** 6),
-                   PYTHONPATH=src + os.pathsep +
-                   os.environ.get("PYTHONPATH", ""))
-        for label in ("cold", "warm"):
-            p = subprocess.run(
-                [sys.executable, "-m", "benchmarks.perf_core",
-                 "--cache-child", json.dumps(cfg)],
-                env=env, capture_output=True, text=True,
-                cwd=os.path.dirname(src))
-            if p.returncode != 0:
-                # surface the child's traceback in the CI log before dying
-                sys.stderr.write(p.stdout + p.stderr)
-                raise RuntimeError(
-                    f"{label} cache child exited {p.returncode}")
-            line = next((ln for ln in p.stdout.splitlines()
-                         if ln.startswith("CACHE_CHILD ")), None)
-            if line is None:
-                sys.stderr.write(p.stdout + p.stderr)
-                raise RuntimeError(
-                    f"{label} cache child produced no CACHE_CHILD line")
-            out[label] = json.loads(line[len("CACHE_CHILD "):])
-    assert out["cold"]["record_runs"] > 0
-    assert out["warm"]["record_runs"] == 0, \
+        base = dict(os.environ,
+                    # self-contained: don't inherit caller floors/caps
+                    EDAN_SCHEDULE_CACHE_MIN="0",
+                    EDAN_SCHEDULE_CACHE_MAX=str(10 ** 6),
+                    PYTHONPATH=src + os.pathsep +
+                    os.environ.get("PYTHONPATH", ""))
+        shared = os.path.join(td, "shared")
+        for rep in range(max(repeats, 1)):
+            # rep 0 seeds the shared dir the warm side reads; later cold
+            # reps get fresh dirs so they genuinely re-record
+            cdir = shared if rep == 0 else os.path.join(td, f"cold{rep}")
+            cold_runs.append(child(dict(base, EDAN_SCHEDULE_CACHE=cdir),
+                                   f"cold[{rep}]"))
+        for rep in range(max(repeats, 1)):
+            warm_runs.append(child(dict(base, EDAN_SCHEDULE_CACHE=shared),
+                                   f"warm[{rep}]"))
+    cold = min(cold_runs, key=lambda r: r["seconds"])
+    warm = min(warm_runs, key=lambda r: r["seconds"])
+    assert all(r["record_runs"] > 0 for r in cold_runs)
+    assert all(r["record_runs"] == 0 for r in warm_runs), \
         "warm process re-recorded despite a persistent schedule cache"
-    assert out["warm"]["makespan_sum"] == out["cold"]["makespan_sum"]
-    return dict(config=cfg, cold=out["cold"], warm=out["warm"],
-                speedup=out["cold"]["seconds"] / out["warm"]["seconds"])
+    assert all(r["record_seconds"] == 0 for r in warm_runs), \
+        "warm process spent time recording despite a persistent cache"
+    assert all(r["makespan_sum"] == cold["makespan_sum"]
+               for r in cold_runs + warm_runs)
+    return dict(config=cfg, cold=cold, warm=warm, repeats=repeats,
+                cold_seconds=[r["seconds"] for r in cold_runs],
+                warm_seconds=[r["seconds"] for r in warm_runs],
+                record_s_saved=cold["record_seconds"],
+                speedup=cold["seconds"] / warm["seconds"])
 
 
 def run(smoke: bool = False) -> dict:
@@ -563,6 +631,15 @@ def main() -> None:
           f"{cache['cold']['seconds']:.3f}s,{cache['speedup']:.2f}x "
           f"(records cold={cache['cold']['record_runs']} "
           f"warm={cache['warm']['record_runs']})")
+    # read-modify-write: perf_scale owns the "scale" section of the same
+    # file — carry foreign sections over instead of clobbering them
+    if os.path.exists(args.out_sim):
+        try:
+            with open(args.out_sim) as f:
+                prev = json.load(f)
+            sim = {**{k: v for k, v in prev.items() if k == "scale"}, **sim}
+        except (OSError, ValueError):
+            pass
     with open(args.out_sim, "w") as f:
         json.dump(sim, f, indent=2)
     print(f"# wrote {args.out_sim}")

@@ -6,7 +6,7 @@ Three trace frontends over one analysis core:
   * HLO     (``hlo``)    — post-SPMD compiled module (collectives = remote
     memory accesses), powering the multi-pod latency-sensitivity analysis.
 """
-from .graph import EDag, MemLayering, concat_edags
+from .graph import EDag, IndexOverflowError, MemLayering, concat_edags
 from .cache import NoCache, SetAssociativeCache, make_cache
 from .trace import Tracer, Value, build_edag_from_trace
 from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
@@ -23,6 +23,8 @@ from .scheduler import (simulate, simulate_reference, simulate_batch,
 from .suite import (EDagSuite, suite_latency_sweep, suite_sweep_grid,
                     suite_t_inf_sweep)
 from . import schedule_cache
+from .trace_store import (save_edag, load_edag, put_trace, get_trace,
+                          trace_store_dir)
 from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
                   hlo_flops_estimate, hlo_hbm_bytes_estimate,
                   axis_signature_table)
@@ -32,7 +34,9 @@ from .sensitivity import (collective_sensitivity, AxisSensitivity,
                           suite_axis_latency_grid)
 
 __all__ = [
-    "EDag", "MemLayering", "NoCache", "SetAssociativeCache", "make_cache",
+    "EDag", "IndexOverflowError", "MemLayering", "NoCache",
+    "SetAssociativeCache", "make_cache",
+    "save_edag", "load_edag", "put_trace", "get_trace", "trace_store_dir",
     "Tracer", "Value", "build_edag_from_trace", "CostModelParams",
     "memory_cost_bounds", "total_cost_bounds", "layered_upper_bound",
     "non_memory_cost", "analyze", "lambda_abs", "lambda_rel",

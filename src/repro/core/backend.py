@@ -211,31 +211,37 @@ class LevelCSR:
 
 def build_level_partition(src: np.ndarray, dst: np.ndarray,
                           level: np.ndarray, n: int) -> LevelCSR:
-    """Partition edges by destination level (the _finalize invariant)."""
+    """Partition edges by destination level (the _finalize invariant).
+
+    Every output index array is int32 (the engine-wide index discipline:
+    edge counts and vertex ids are guarded below 2^31 at eDAG build time),
+    halving the partition's memory and device transfer."""
     n_levels = int(level.max()) + 1 if n else 0
     if len(dst):
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
         elevel = level[dst]
         order = np.lexsort((dst, elevel))
         esrc = src[order]
         edst = dst[order]
         counts = np.bincount(elevel, minlength=n_levels)
-        elevel_ptr = np.concatenate(([0], np.cumsum(counts))).astype(np.int64)
+        elevel_ptr = np.concatenate(([0], np.cumsum(counts))).astype(np.int32)
         run_mask = np.empty(len(dst), dtype=bool)
         run_mask[0] = True
         np.not_equal(edst[1:], edst[:-1], out=run_mask[1:])
-        run_starts = np.nonzero(run_mask)[0]
+        run_starts = np.nonzero(run_mask)[0].astype(np.int32)
         run_dst = edst[run_starts]
-        run_lens = np.diff(np.append(run_starts, len(dst)))
+        run_lens = np.diff(np.append(run_starts, len(dst))).astype(np.int32)
         rcounts = np.bincount(level[run_dst], minlength=n_levels)
-        run_ptr = np.concatenate(([0], np.cumsum(rcounts))).astype(np.int64)
+        run_ptr = np.concatenate(([0], np.cumsum(rcounts))).astype(np.int32)
     else:
-        esrc = np.zeros(0, dtype=np.int64)
+        esrc = np.zeros(0, dtype=np.int32)
         edst = esrc
-        elevel_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int64)
-        run_starts = np.zeros(0, dtype=np.int64)
-        run_dst = np.zeros(0, dtype=np.int64)
-        run_lens = np.zeros(0, dtype=np.int64)
-        run_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int64)
+        elevel_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int32)
+        run_starts = np.zeros(0, dtype=np.int32)
+        run_dst = np.zeros(0, dtype=np.int32)
+        run_lens = np.zeros(0, dtype=np.int32)
+        run_ptr = np.zeros(max(n_levels, 0) + 1, dtype=np.int32)
     return LevelCSR(n=n, n_levels=n_levels, esrc=esrc, run_dst=run_dst,
                     run_starts=run_starts, run_lens=run_lens, run_ptr=run_ptr,
                     elevel_ptr=elevel_ptr)
@@ -290,15 +296,28 @@ def levelize(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     Runs the per-edge scalar recurrence over edges sorted by destination —
     a strict left-fold that is O(E) regardless of depth, which beats the
     level-synchronous Kahn sweep on the deep, skinny graphs the simulator
-    replay builds (slot chains make depth ~ W/m)."""
-    level = [0] * n
+    replay builds (slot chains make depth ~ W/m).  Already-sorted edges
+    (the ``_finalize`` invariant) skip the argsort; the accumulator is a
+    memoryview over a flat int32 buffer and the edge stream is boxed in
+    bounded chunks — a boxed-int list of a million-vertex level vector
+    (or a full ``tolist()`` of its edges) holds hundreds of MB of int
+    objects at once."""
+    out = np.zeros(n, dtype=np.int32)
     if len(dst):
-        order = np.argsort(dst, kind="stable")
-        for s, d in zip(src[order].tolist(), dst[order].tolist()):
-            v = level[s] + 1
-            if v > level[d]:
-                level[d] = v
-    return np.asarray(level, dtype=np.int64)
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        if len(dst) > 1 and not bool((dst[1:] >= dst[:-1]).all()):
+            order = np.argsort(dst, kind="stable")
+            src, dst = src[order], dst[order]
+        level = memoryview(out)
+        chunk = 1 << 16
+        for e0 in range(0, len(dst), chunk):
+            for s, d in zip(src[e0:e0 + chunk].tolist(),
+                            dst[e0:e0 + chunk].tolist()):
+                v = level[s] + 1
+                if v > level[d]:
+                    level[d] = v
+    return out
 
 
 # --------------------------------------------------------------------- numpy
@@ -479,7 +498,8 @@ def _accumulate_jax(lv: LevelCSR, F: np.ndarray, clamp: bool = True,
     gather, dsts = _jax_padded(lv)
     has_q = lv.qpred is not None
     want_r = R_out is not None
-    qp = (lv.qpred if has_q else np.zeros(1, dtype=np.int64)).astype(np.int32)
+    qp = np.asarray(lv.qpred if has_q else np.zeros(1, dtype=np.int32),
+                    dtype=np.int32)
     # the traced function depends only on these flags (the graph arrays
     # are arguments, so jax.jit re-specializes per shape on its own); the
     # dtype and x64 flag are part of the key so f32 replays, f64 analytic

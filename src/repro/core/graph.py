@@ -15,10 +15,35 @@ Python-level per-edge loop at all.  The longest-path recurrence
 (``_accumulate``) and generalizes to a whole matrix of cost vectors processed
 in a single level sweep (``_accumulate_batch``) — the kernel behind one-pass
 latency sweeps.
+
+Storage discipline (million-vertex traces):
+
+* The default build path is *streaming*: scalar appends batch into small
+  pending buffers and block appends (``add_vertex_block`` /
+  ``add_edge_block``, the tracer's bulk path) land directly as typed numpy
+  chunks — no per-element Python objects are ever created.  ``_finalize``
+  then runs a counting-sort merge: each edge chunk is stable-sorted by dst
+  on its own and chunks whose dst ranges do not interleave (the tracer's
+  natural output — every emitted block's edges target the new block's
+  vertex range) are simply concatenated, which equals the global stable
+  sort without argsorting the full edge stream.  The original list-based
+  build (``EDag(legacy_build=True)`` or ``$EDAN_LEGACY_BUILD=1``) is
+  retained verbatim as the bit-identical reference the streaming path is
+  property-tested against.
+* All index arrays (edges, CSR pointers, levels) are stored as **int32** —
+  half the memory and device transfer of int64 at paper scale.  Growth past
+  the int32 boundary raises ``IndexOverflowError`` (never a silent
+  wraparound); ``trace_digest`` hashes a canonical int64 byte encoding, so
+  digests — and the persistent schedule cache keyed by them — are identical
+  across index widths and build paths.
+* ``EDag.from_arrays`` adopts already-finalized (dst-sorted) arrays
+  zero-copy — the entry point ``core.trace_store`` uses to memory-map
+  traces from disk; adopted graphs are immutable.
 """
 from __future__ import annotations
 
 import hashlib
+import os
 from collections import OrderedDict
 
 import numpy as np
@@ -39,6 +64,44 @@ _SWEEP_CACHE_BUDGET = 16 * 1024 * 1024
 _SWEEP_CHUNK_MIN = 4
 _SWEEP_CHUNK_MAX = 24
 
+#: Storage dtype of every index array (edges, CSR pointers, levels).  int32
+#: halves index memory and device transfer versus int64; the engine-wide
+#: invariant is that every vertex id, edge count and CSR pointer value fits,
+#: which `_check_index_limit` enforces at insertion time.
+_INDEX_DTYPE = np.int32
+
+#: First count that no longer fits the int32 index space.  Vertex and edge
+#: counts must stay strictly below it: CSR pointer values run up to n_edges,
+#: and the replay engine's slot chains use the vertex count itself as the
+#: zero-sentinel row index.  Tests monkeypatch this module attribute to a
+#: small value to exercise the guard wiring without 2^31-element arrays.
+_INDEX_LIMIT = 2 ** 31
+
+# Scalar appends batch into pending Python lists of at most this many
+# elements before being flushed into a typed numpy chunk.
+_CHUNK_FLUSH = 4096
+
+
+class IndexOverflowError(OverflowError):
+    """An eDAG grew past the int32 index space (2^31 - 1 vertices/edges).
+
+    Raised by the build APIs *before* any array could wrap around.  Traces
+    at this scale should be split into an ``EDagSuite`` of smaller members
+    (``core/suite.py``) or traced at a coarser granularity.
+    """
+
+
+def _check_index_limit(count: int, what: str) -> None:
+    """Raise ``IndexOverflowError`` if ``count`` no longer fits the int32
+    index discipline (``count >= 2**31``)."""
+    if count >= _INDEX_LIMIT:
+        raise IndexOverflowError(
+            f"eDAG {what} count {count} exceeds the int32 index space "
+            f"(max {_INDEX_LIMIT - 1}); indices are stored as int32 and "
+            f"silent wraparound would corrupt the CSR.  Split the workload "
+            f"into an EDagSuite of smaller traces (core/suite.py) or trace "
+            f"at a coarser block granularity.")
+
 
 def _auto_sweep_chunk(n_vertices: int) -> int:
     """Trace-size-aware chunk for multi-point sweeps: small traces take the
@@ -48,6 +111,148 @@ def _auto_sweep_chunk(n_vertices: int) -> int:
         return _SWEEP_CHUNK_MAX
     chunk = _SWEEP_CACHE_BUDGET // (8 * n_vertices)
     return int(max(_SWEEP_CHUNK_MIN, min(_SWEEP_CHUNK_MAX, chunk)))
+
+
+class _ChunkedArray:
+    """Append-only growable typed array used by the streaming build path.
+
+    Scalar appends batch into a small pending Python list (flushed to a
+    numpy chunk every ``_CHUNK_FLUSH`` elements); block appends land as one
+    chunk each.  ``concat`` materializes the single flat array and
+    collapses the chunk list onto it, so a later append + re-finalize only
+    concatenates the new tail."""
+
+    __slots__ = ("_dtype", "_chunks", "_pend", "_n")
+
+    def __init__(self, dtype) -> None:
+        self._dtype = np.dtype(dtype)
+        self._chunks: list = []
+        self._pend: list = []
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, x) -> None:
+        self._pend.append(x)
+        self._n += 1
+        if len(self._pend) >= _CHUNK_FLUSH:
+            self._flush()
+
+    def extend(self, arr) -> None:
+        arr = np.array(arr, dtype=self._dtype, copy=True)  # never alias
+        if not len(arr):
+            return
+        self._flush()
+        self._chunks.append(arr)
+        self._n += len(arr)
+
+    def _flush(self) -> None:
+        if self._pend:
+            self._chunks.append(np.asarray(self._pend, dtype=self._dtype))
+            self._pend = []
+
+    def concat(self) -> np.ndarray:
+        self._flush()
+        if not self._chunks:
+            return np.zeros(0, dtype=self._dtype)
+        out = (self._chunks[0] if len(self._chunks) == 1
+               else np.concatenate(self._chunks))
+        self._chunks = [out]
+        return out
+
+
+class _EdgeChunks:
+    """Chunked CSR-friendly edge storage for the streaming build path.
+
+    Each chunk keeps int32 (src, dst) arrays plus dst-range metadata
+    (internal sortedness, min, max).  ``collect`` produces the canonical
+    dst-sorted edge arrays via a counting-sort merge: chunks are
+    stable-sorted by dst individually and concatenated whenever consecutive
+    dst ranges do not interleave (``max(dst_i) <= min(dst_{i+1})``), which
+    equals the global stable sort — equal dst values across the boundary
+    keep insertion order either way.  Interleaved ranges fall back to one
+    global stable (radix) argsort over the original stream, which is the
+    legacy reference's exact permutation."""
+
+    __slots__ = ("_chunks", "_pend_src", "_pend_dst", "_n")
+
+    def __init__(self) -> None:
+        self._chunks: list = []     # (src, dst, dst_sorted, dmin, dmax)
+        self._pend_src: list = []
+        self._pend_dst: list = []
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, u: int, v: int) -> None:
+        self._pend_src.append(u)
+        self._pend_dst.append(v)
+        self._n += 1
+        if len(self._pend_src) >= _CHUNK_FLUSH:
+            self._flush()
+
+    def extend(self, src, dst) -> None:
+        self._flush()
+        s = np.array(src, dtype=_INDEX_DTYPE, copy=True)   # never alias
+        self._add_chunk(s, np.array(dst, dtype=_INDEX_DTYPE, copy=True))
+        self._n += len(s)
+
+    def _flush(self) -> None:
+        # pending elements were already counted by append: _add_chunk
+        # only stores, it never touches _n
+        if self._pend_src:
+            self._add_chunk(
+                np.asarray(self._pend_src, dtype=_INDEX_DTYPE),
+                np.asarray(self._pend_dst, dtype=_INDEX_DTYPE))
+            self._pend_src = []
+            self._pend_dst = []
+
+    def _add_chunk(self, s: np.ndarray, d: np.ndarray) -> None:
+        if not len(d):
+            return
+        srt = bool((d[1:] >= d[:-1]).all())
+        self._chunks.append((s, d, srt, int(d.min()), int(d.max())))
+
+    def collect(self):
+        """Return the (src, dst) edge arrays in canonical dst-sorted order
+        (the exact permutation of a global stable sort by dst)."""
+        self._flush()
+        chunks = self._chunks
+        if not chunks:
+            z = np.zeros(0, dtype=_INDEX_DTYPE)
+            return z, z.copy()
+        merge_ok = all(chunks[i][4] <= chunks[i + 1][3]
+                       for i in range(len(chunks) - 1))
+        if merge_ok:
+            ss, ds = [], []
+            for s, d, srt, _, _ in chunks:
+                if not srt:
+                    o = np.argsort(d, kind="stable")
+                    s, d = s[o], d[o]
+                ss.append(s)
+                ds.append(d)
+            src = ss[0] if len(ss) == 1 else np.concatenate(ss)
+            dst = ds[0] if len(ds) == 1 else np.concatenate(ds)
+        else:
+            src = np.concatenate([c[0] for c in chunks])
+            dst = np.concatenate([c[1] for c in chunks])
+            o = np.argsort(dst, kind="stable")
+            src, dst = src[o], dst[o]
+        # collapse to one sorted chunk: a later append + re-finalize merges
+        # against this prefix instead of re-sorting it (stable-sorting a
+        # prefix preserves the insertion order of equal dst values, so the
+        # collapsed form sorts to the same global permutation)
+        self._chunks = [(src, dst, True,
+                         int(dst[0]) if len(dst) else 0,
+                         int(dst[-1]) if len(dst) else 0)]
+        return src, dst
+
+
+def _legacy_build_default() -> bool:
+    v = os.environ.get("EDAN_LEGACY_BUILD", "").strip().lower()
+    return v in ("1", "true", "yes", "on")
 
 
 @dataclass
@@ -76,27 +281,64 @@ class MemLayering:
 
 
 class EDag:
-    """Append-only execution DAG with topological-order analyses."""
+    """Append-only execution DAG with topological-order analyses.
 
-    def __init__(self) -> None:
-        self._cost: list = []
-        self._is_mem: list = []
-        self._nbytes: list = []
-        self._label: list = []
-        self._src: list = []
-        self._dst: list = []
+    ``legacy_build=True`` (or ``$EDAN_LEGACY_BUILD=1``) selects the
+    retained Python-list build path — the bit-identical reference the
+    default streaming/chunked path is property-tested against."""
+
+    def __init__(self, *, legacy_build: Optional[bool] = None) -> None:
+        self._legacy = (_legacy_build_default() if legacy_build is None
+                        else bool(legacy_build))
+        if self._legacy:
+            self._cost: list = []
+            self._is_mem: list = []
+            self._nbytes: list = []
+            self._label: list = []
+            self._src: list = []
+            self._dst: list = []
+        else:
+            self._cost = _ChunkedArray(np.float64)
+            self._is_mem = _ChunkedArray(bool)
+            self._nbytes = _ChunkedArray(np.float64)
+            self._label_runs: list = []   # (count, str) tuples | label lists
+            self._labels_cache: Optional[list] = None
+            self._edges = _EdgeChunks()
+        self._adopted = False
         self._finalized = False
         self._indptr: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------ build
+    def _mutable(self) -> None:
+        if self._adopted:
+            raise ValueError(
+                "this EDag adopted finalized arrays (EDag.from_arrays / "
+                "trace_store) and is immutable")
+
+    def _push_label(self, label: str, count: int) -> None:
+        self._labels_cache = None
+        runs = self._label_runs
+        if runs and isinstance(runs[-1], tuple) and runs[-1][1] == label:
+            runs[-1] = (runs[-1][0] + count, label)
+        else:
+            runs.append((count, label))
+
     def add_vertex(self, cost: float = 1.0, is_mem: bool = False,
                    nbytes: float = 0.0, label: str = "") -> int:
         """Add a vertex; returns its id.  Ids are assigned in insertion order."""
+        self._mutable()
         vid = len(self._cost)
-        self._cost.append(float(cost))
-        self._is_mem.append(bool(is_mem))
-        self._nbytes.append(float(nbytes))
-        self._label.append(label)
+        _check_index_limit(vid + 1, "vertex")
+        if self._legacy:
+            self._cost.append(float(cost))
+            self._is_mem.append(bool(is_mem))
+            self._nbytes.append(float(nbytes))
+            self._label.append(label)
+        else:
+            self._cost.append(float(cost))
+            self._is_mem.append(bool(is_mem))
+            self._nbytes.append(float(nbytes))
+            self._push_label(label, 1)
         self._finalized = False
         return vid
 
@@ -108,6 +350,7 @@ class EDag:
         an array of length ``n``; ``label`` is one string shared by the whole
         block or a length-``n`` sequence of per-vertex labels.
         """
+        self._mutable()
         if n is None:
             for arr in (cost, is_mem, nbytes):
                 if np.ndim(arr):
@@ -116,31 +359,57 @@ class EDag:
             else:
                 raise ValueError("block size not inferable from scalars")
         base = len(self._cost)
-        self._cost.extend(np.broadcast_to(
-            np.asarray(cost, dtype=np.float64), (n,)).tolist())
-        self._is_mem.extend(np.broadcast_to(
-            np.asarray(is_mem, dtype=bool), (n,)).tolist())
-        self._nbytes.extend(np.broadcast_to(
-            np.asarray(nbytes, dtype=np.float64), (n,)).tolist())
-        if isinstance(label, str):
-            self._label.extend([label] * n)
+        _check_index_limit(base + n, "vertex")
+        if not isinstance(label, str) and len(label) != n:
+            raise ValueError("label sequence length mismatch")
+        cost_b = np.broadcast_to(np.asarray(cost, dtype=np.float64), (n,))
+        mem_b = np.broadcast_to(np.asarray(is_mem, dtype=bool), (n,))
+        nb_b = np.broadcast_to(np.asarray(nbytes, dtype=np.float64), (n,))
+        if self._legacy:
+            self._cost.extend(cost_b.tolist())
+            self._is_mem.extend(mem_b.tolist())
+            self._nbytes.extend(nb_b.tolist())
+            if isinstance(label, str):
+                self._label.extend([label] * n)
+            else:
+                self._label.extend(label)
         else:
-            if len(label) != n:
-                raise ValueError("label sequence length mismatch")
-            self._label.extend(label)
+            self._cost.extend(cost_b)
+            self._is_mem.extend(mem_b)
+            self._nbytes.extend(nb_b)
+            if isinstance(label, str):
+                self._push_label(label, n)
+            else:
+                self._labels_cache = None
+                arr = np.asarray(label)
+                if arr.ndim == 1 and arr.dtype.kind in "US":
+                    # Per-vertex label lists dominate resident Python-object
+                    # overhead at million-vertex scale (one str per vertex);
+                    # store them as int32 codes into a tiny palette instead.
+                    pal, codes = np.unique(arr, return_inverse=True)
+                    self._label_runs.append((codes.astype(np.int32),
+                                             pal.tolist()))
+                else:
+                    self._label_runs.append(list(label))
         self._finalized = False
         return np.arange(base, base + n, dtype=np.int64)
 
     def add_edge(self, u: int, v: int) -> None:
         """Add the true-dependency edge u -> v.  Requires u < v (topo insert)."""
+        self._mutable()
         if not (0 <= u < v < len(self._cost)):
             raise ValueError(f"edge ({u},{v}) violates topological insertion order")
-        self._src.append(u)
-        self._dst.append(v)
+        _check_index_limit(self.n_edges + 1, "edge")
+        if self._legacy:
+            self._src.append(u)
+            self._dst.append(v)
+        else:
+            self._edges.append(int(u), int(v))
         self._finalized = False
 
     def add_edge_block(self, src, dst) -> None:
         """Bulk-append edges.  Every edge must satisfy 0 <= src < dst < n."""
+        self._mutable()
         src = np.asarray(src, dtype=np.int64)
         dst = np.asarray(dst, dtype=np.int64)
         if src.shape != dst.shape:
@@ -152,62 +421,95 @@ class EDag:
             bad = np.nonzero(~((src >= 0) & (src < dst) & (dst < n)))[0][0]
             raise ValueError(
                 f"edge ({src[bad]},{dst[bad]}) violates topological insertion order")
-        self._src.extend(src.tolist())
-        self._dst.extend(dst.tolist())
+        _check_index_limit(self.n_edges + len(src), "edge")
+        if self._legacy:
+            self._src.extend(src.tolist())
+            self._dst.extend(dst.tolist())
+        else:
+            self._edges.extend(src, dst)
         self._finalized = False
 
     # --------------------------------------------------------------- finalize
     def _finalize(self) -> None:
         if self._finalized:
             return
-        self.cost = np.asarray(self._cost, dtype=np.float64)
-        self.is_mem = np.asarray(self._is_mem, dtype=bool)
-        self.nbytes = np.asarray(self._nbytes, dtype=np.float64)
-        src = np.asarray(self._src, dtype=np.int64)
-        dst = np.asarray(self._dst, dtype=np.int64)
-        if len(dst) and np.any(np.diff(dst) < 0):       # keep CSR by dst
-            order = np.argsort(dst, kind="stable")
-            src, dst = src[order], dst[order]
+        if self._legacy:
+            cost = np.asarray(self._cost, dtype=np.float64)
+            is_mem = np.asarray(self._is_mem, dtype=bool)
+            nbytes = np.asarray(self._nbytes, dtype=np.float64)
+            src = np.asarray(self._src, dtype=np.int64)
+            dst = np.asarray(self._dst, dtype=np.int64)
+            if len(dst) and np.any(np.diff(dst) < 0):   # keep CSR by dst
+                order = np.argsort(dst, kind="stable")
+                src, dst = src[order], dst[order]
+            src = src.astype(_INDEX_DTYPE)
+            dst = dst.astype(_INDEX_DTYPE)
+        else:
+            cost = self._cost.concat()
+            is_mem = self._is_mem.concat()
+            nbytes = self._nbytes.concat()
+            src, dst = self._edges.collect()
+        self._install(cost, is_mem, nbytes, src, dst)
+
+    def _install(self, cost, is_mem, nbytes, src, dst,
+                 derived: Optional[dict] = None) -> None:
+        """Install finalized arrays and compute (or adopt) every derived
+        structure: CSRs, in-degrees, levels and the level partition.
+        ``src``/``dst`` must already be in canonical dst-sorted order."""
+        self.cost = cost
+        self.is_mem = is_mem
+        self.nbytes = nbytes
         self.src, self.dst = src, dst
-        n = len(self.cost)
-        self._indptr = np.zeros(n + 1, dtype=np.int64)
-        if len(dst):
-            np.add.at(self._indptr, dst + 1, 1)
-        np.cumsum(self._indptr, out=self._indptr)
+        n = len(cost)
+        d = derived or {}
+        if "indptr" in d:
+            self._indptr = d["indptr"]
+        else:
+            counts = (np.bincount(dst, minlength=n) if len(dst)
+                      else np.zeros(n, dtype=np.int64))
+            self._indptr = np.concatenate(
+                ([0], np.cumsum(counts))).astype(_INDEX_DTYPE)
 
         # successor CSR (edges sorted by src) — hoisted here from the
         # scheduler so repeated `simulate` calls share one build
-        order = np.argsort(src, kind="stable")
-        self.succ_dst = dst[order]
-        self.succ_indptr = np.zeros(n + 1, dtype=np.int64)
-        if len(src):
-            np.add.at(self.succ_indptr, src[order] + 1, 1)
-        np.cumsum(self.succ_indptr, out=self.succ_indptr)
+        if "succ_dst" in d:
+            self.succ_dst = d["succ_dst"]
+            self.succ_indptr = d["succ_indptr"]
+        else:
+            order = np.argsort(src, kind="stable")
+            self.succ_dst = dst[order]
+            scounts = (np.bincount(src, minlength=n) if len(src)
+                       else np.zeros(n, dtype=np.int64))
+            self.succ_indptr = np.concatenate(
+                ([0], np.cumsum(scounts))).astype(_INDEX_DTYPE)
         self.indeg = np.diff(self._indptr)
         self._sim_lists_cache = None
 
         # topological levels via level-synchronous Kahn: level[v] = length of
         # the longest edge path ending at v; all preds of a level-l vertex
         # live in levels < l, which is what licenses the segmented updates.
-        level = np.zeros(n, dtype=np.int64)
-        indeg = self.indeg.copy()
-        frontier = np.nonzero(indeg == 0)[0]
-        lvl = 0
-        while frontier.size:
-            level[frontier] = lvl
-            starts = self.succ_indptr[frontier]
-            counts = self.succ_indptr[frontier + 1] - starts
-            total = int(counts.sum())
-            if total == 0:
-                break
-            # gather the concatenated out-edge ranges of the frontier
-            offs = np.repeat(np.cumsum(counts) - counts, counts)
-            idx = np.repeat(starts, counts) + np.arange(total) - offs
-            targets = self.succ_dst[idx]
-            cand, cnt = np.unique(targets, return_counts=True)
-            indeg[cand] -= cnt
-            frontier = cand[indeg[cand] == 0]
-            lvl += 1
+        if "level" in d:
+            level = d["level"]
+        else:
+            level = np.zeros(n, dtype=_INDEX_DTYPE)
+            indeg = self.indeg.copy()
+            frontier = np.nonzero(indeg == 0)[0]
+            lvl = 0
+            while frontier.size:
+                level[frontier] = lvl
+                starts = self.succ_indptr[frontier]
+                counts = self.succ_indptr[frontier + 1] - starts
+                total = int(counts.sum())
+                if total == 0:
+                    break
+                # gather the concatenated out-edge ranges of the frontier
+                offs = np.repeat(np.cumsum(counts) - counts, counts)
+                idx = np.repeat(starts, counts) + np.arange(total) - offs
+                targets = self.succ_dst[idx]
+                cand, cnt = np.unique(targets, return_counts=True)
+                indeg[cand] -= cnt
+                frontier = cand[indeg[cand] == 0]
+                lvl += 1
         self.level = level
         self.n_levels = int(level.max()) + 1 if n else 0
 
@@ -216,8 +518,14 @@ class EDag:
         # vertex's own level slice, so one segmented max per run of equal
         # dst fully resolves F[dst] for the level.  The same partition
         # builder serves the simulator's order-augmented replay graphs.
-        from .backend import build_level_partition
-        lv = build_level_partition(src, dst, level, n)
+        from .backend import LevelCSR, build_level_partition
+        if "esrc" in d:
+            lv = LevelCSR(n=n, n_levels=self.n_levels, esrc=d["esrc"],
+                          run_dst=d["run_dst"], run_starts=d["run_starts"],
+                          run_lens=d["run_lens"], run_ptr=d["run_ptr"],
+                          elevel_ptr=d["elevel_ptr"])
+        else:
+            lv = build_level_partition(src, dst, level, n)
         self._level_csr_cache = lv
         self._trace_digest: Optional[str] = None
         self._replay_plans: OrderedDict = OrderedDict()
@@ -229,6 +537,49 @@ class EDag:
         self._run_ptr = lv.run_ptr
         self._finalized = True
 
+    @classmethod
+    def from_arrays(cls, cost, is_mem, nbytes, src, dst, *,
+                    labels: Optional[Sequence[str]] = None,
+                    derived: Optional[dict] = None) -> "EDag":
+        """Adopt finalized arrays without going through the append path.
+
+        The arrays are adopted as-is — memory-mapped inputs stay
+        memory-mapped, so a trace loaded from ``core.trace_store`` is never
+        resident twice.  ``src``/``dst`` must be in canonical dst-sorted
+        order (verified; out-of-order inputs are stable-sorted, which
+        materializes a copy).  ``derived`` may carry precomputed derived
+        arrays (``level``, ``indptr``, ``succ_dst``/``succ_indptr``,
+        ``esrc``/``elevel_ptr``/``run_starts``/``run_dst``/``run_lens``/
+        ``run_ptr``) to skip their recomputation.  The resulting graph is
+        finalized and immutable (the build APIs raise)."""
+        cost = np.asarray(cost, dtype=np.float64)
+        is_mem = np.asarray(is_mem, dtype=bool)
+        nbytes = np.asarray(nbytes, dtype=np.float64)
+        src = np.asarray(src, dtype=_INDEX_DTYPE)
+        dst = np.asarray(dst, dtype=_INDEX_DTYPE)
+        n = len(cost)
+        _check_index_limit(n, "vertex")
+        _check_index_limit(len(src), "edge")
+        if len(is_mem) != n or len(nbytes) != n:
+            raise ValueError("vertex array length mismatch")
+        if src.shape != dst.shape or src.ndim != 1:
+            raise ValueError("src/dst shape mismatch")
+        if labels is not None and len(labels) != n:
+            raise ValueError("label sequence length mismatch")
+        if len(src):
+            if not ((src >= 0).all() and (src < dst).all()
+                    and (int(dst.max()) < n)):
+                raise ValueError("edges violate topological insertion order")
+            if np.any(np.diff(dst) < 0):
+                order = np.argsort(dst, kind="stable")
+                src, dst = src[order], dst[order]
+        g = cls()
+        g._adopted = True
+        g._labels: Optional[list] = list(labels) if labels is not None \
+            else None
+        g._install(cost, is_mem, nbytes, src, dst, derived=derived)
+        return g
+
     def _level_csr(self):
         """The finalize-time edge partition as a ``backend.LevelCSR`` view
         (the structure the shared numpy/jax accumulate kernel consumes)."""
@@ -236,26 +587,57 @@ class EDag:
         return self._level_csr_cache
 
     def _sim_lists(self):
-        """Python-list views of the successor CSR + in-degrees, cached for
-        the discrete-event simulator's inner loop."""
+        """Successor CSR + in-degrees as C-contiguous int32 memoryviews,
+        cached for the discrete-event simulator's inner loop.  Scalar
+        indexing of a memoryview returns plain Python ints at near-list
+        speed with none of the ~28 bytes/element Python-object overhead of
+        ``.tolist()`` — the difference between ~13 MB and ~100 MB of loop
+        state on a million-vertex trace.  The in-degree entry is the
+        numpy array itself; the event loop copies it per run (it is
+        mutated)."""
         self._finalize()
         if self._sim_lists_cache is None:
-            self._sim_lists_cache = (self.succ_dst.tolist(),
-                                     self.succ_indptr.tolist(),
-                                     self.indeg.tolist())
+            self._sim_lists_cache = (
+                memoryview(np.ascontiguousarray(self.succ_dst,
+                                                dtype=_INDEX_DTYPE)),
+                memoryview(np.ascontiguousarray(self.succ_indptr,
+                                                dtype=_INDEX_DTYPE)),
+                np.ascontiguousarray(self.indeg, dtype=_INDEX_DTYPE))
         return self._sim_lists_cache
 
     # ------------------------------------------------------------- properties
     @property
     def n_vertices(self) -> int:
+        if self._adopted:
+            return len(self.cost)
         return len(self._cost)
 
     @property
     def n_edges(self) -> int:
-        return len(self._src)
+        if self._adopted:
+            return len(self.src)
+        return len(self._src) if self._legacy else len(self._edges)
 
     def labels(self) -> Sequence[str]:
-        return self._label
+        if self._adopted:
+            if self._labels is None:
+                self._labels = [""] * self.n_vertices
+            return self._labels
+        if self._legacy:
+            return self._label
+        if self._labels_cache is None:
+            out: list = []
+            for r in self._label_runs:
+                if isinstance(r, tuple):
+                    if isinstance(r[1], str):       # (count, str) run
+                        out.extend([r[1]] * r[0])
+                    else:                           # (codes, palette) block
+                        pal = r[1]
+                        out.extend(pal[c] for c in r[0].tolist())
+                else:
+                    out.extend(r)
+            self._labels_cache = out
+        return self._labels_cache
 
     def preds(self, v: int) -> np.ndarray:
         self._finalize()
@@ -273,13 +655,18 @@ class EDag:
         mutation through ``add_vertex*`` / ``add_edge*`` invalidates the
         memo and yields a new digest — this is the key the persistent
         schedule cache (``core/schedule_cache``) is invalidated by.
+
+        Edges are hashed through a canonical int64 byte encoding
+        regardless of storage dtype, so digests are identical across the
+        int32 index discipline, the legacy build path and memory-mapped
+        loads — existing cache entries stay valid.
         """
         self._finalize()
         if self._trace_digest is None:
             h = hashlib.sha256()
             h.update(np.int64(self.n_vertices).tobytes())
-            h.update(self.src.tobytes())
-            h.update(self.dst.tobytes())
+            h.update(np.ascontiguousarray(self.src, dtype=np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.dst, dtype=np.int64).tobytes())
             h.update(np.packbits(self.is_mem).tobytes())
             self._trace_digest = h.hexdigest()
         return self._trace_digest
@@ -290,11 +677,14 @@ class EDag:
 
         Retained as the ground truth the vectorized kernels are property-
         tested against, and as the fast path for deep, skinny DAGs.
+        Processes the canonical dst-sorted edges: every in-edge of ``s``
+        precedes every out-edge of ``s`` (dst order ≥ topological order),
+        so each F[s] is final when read.
         """
         self._finalize()
         F = np.asarray(base, dtype=np.float64).tolist()
         base_l = np.asarray(base, dtype=np.float64).tolist()
-        for s, d in zip(self._src, self._dst):
+        for s, d in zip(self.src.tolist(), self.dst.tolist()):
             nf = F[s] + base_l[d]
             if nf > F[d]:
                 F[d] = nf
@@ -483,6 +873,21 @@ class EDag:
                     n_mem=int(self.is_mem.sum()),
                     bytes_total=float(self.nbytes.sum()))
 
+    def array_nbytes(self) -> dict:
+        """Bytes of every finalized/derived array — the graph's theoretical
+        CSR footprint (what ``benchmarks/perf_scale.py`` measures peak RSS
+        against)."""
+        self._finalize()
+        lv = self._level_csr_cache
+        arrs = dict(cost=self.cost, is_mem=self.is_mem, nbytes=self.nbytes,
+                    src=self.src, dst=self.dst, indptr=self._indptr,
+                    succ_dst=self.succ_dst, succ_indptr=self.succ_indptr,
+                    indeg=self.indeg, level=self.level, esrc=lv.esrc,
+                    elevel_ptr=lv.elevel_ptr, run_starts=lv.run_starts,
+                    run_dst=lv.run_dst, run_lens=lv.run_lens,
+                    run_ptr=lv.run_ptr)
+        return {k: int(v.nbytes) for k, v in arrs.items()}
+
 
 def concat_edags(graphs: Sequence[EDag]) -> EDag:
     """Block-diagonal union of K eDAGs: member k's vertex ``v`` becomes
@@ -510,5 +915,5 @@ def concat_edags(graphs: Sequence[EDag]) -> EDag:
         base = u.add_vertex_block(g.cost, g.is_mem, g.nbytes,
                                   label=list(g.labels()), n=n)[0]
         if len(g.src):
-            u.add_edge_block(g.src + base, g.dst + base)
+            u.add_edge_block(g.src + np.int64(base), g.dst + np.int64(base))
     return u

@@ -47,6 +47,16 @@ This module persists recorded schedules across processes:
   is part of the validation, never migrated in place, and the rename
   frees the key path so one re-recording warms every later process.
 
+* **Memory-mapped entries** — traces of at least
+  ``$EDAN_SCHEDULE_CACHE_MMAP_MIN`` vertices (default 2^19) use format
+  4: a ``<key>.d/`` directory holding a ``meta.npz`` plus one raw int32
+  ``.npy`` per schedule array, loaded with ``np.load(mmap_mode="r")``.
+  A million-vertex schedule (~16 MB of int32 arrays) is then paged in
+  on demand by the replay-plan build instead of being decompressed into
+  a second resident copy — the trace and its cache entry never need to
+  be in memory twice.  Directory writes are atomic too (tempdir +
+  ``os.replace``); quarantine renames the whole directory.
+
 Writes are atomic (tempfile + ``os.replace``), so concurrent processes
 sharing a cache directory race benignly: last writer wins, readers see
 either a complete entry or none.
@@ -55,6 +65,7 @@ from __future__ import annotations
 
 import logging
 import os
+import shutil
 import tempfile
 import zipfile
 from pathlib import Path
@@ -67,10 +78,21 @@ from .counters import Stats
 _log = logging.getLogger(__name__)
 
 _FORMAT = 3
+#: Directory entries (one raw int32 ``.npy`` per array, memory-mapped on
+#: load) carry their own format number so a compressed-format reader
+#: never half-understands one.
+_DIR_FORMAT = 4
 _DEFAULT_MAX_ENTRIES = 256
 _DEFAULT_MIN_VERTICES = 4096
+#: Vertex count at which entries switch to the memory-mapped directory
+#: layout.  Below it the compressed single-file format wins (smaller,
+#: one syscall); above it decompression would materialize a second
+#: resident copy of arrays the replay-plan build only streams through.
+_DEFAULT_MMAP_MIN = 1 << 19
 #: Delta-encoded schedule arrays, stored int32: (archive key, load dtype).
 _ARRAY_KEYS = ("topo_d", "O_mem_d", "O_alu_d", "level_d")
+#: Raw per-array file names inside a format-4 directory entry.
+_RAW_NAMES = ("topo", "O_mem", "O_alu", "level")
 
 
 def _delta_encode(arr: np.ndarray) -> Optional[np.ndarray]:
@@ -88,20 +110,30 @@ def _delta_encode(arr: np.ndarray) -> Optional[np.ndarray]:
 
 def _delta_decode(deltas: np.ndarray) -> Optional[np.ndarray]:
     """Inverse of ``_delta_encode``; None for malformed stored arrays
-    (anything but 1-D int32 is a corrupt or foreign entry)."""
+    (anything but 1-D int32, or decoded values outside ``[0, 2^31)`` —
+    a corrupt or foreign entry either way).  Returns int32: decoded
+    values are vertex ids / levels and feed straight into the int32
+    replay-plan arrays, so handing back int64 here would force a
+    second full-size copy at every adoption site."""
     if deltas.ndim != 1 or deltas.dtype != np.int32:
         return None
-    return np.cumsum(deltas.astype(np.int64))
+    arr = np.cumsum(deltas.astype(np.int64))
+    if len(arr) and (arr.min() < 0 or arr.max() >= 2 ** 31):
+        return None
+    return arr.astype(np.int32)
 
 #: Cumulative per-process counters, for benchmarks and tests:
 #: ``memory_hits`` / ``disk_hits`` / ``misses`` count plan lookups in
 #: ``simulate_batch``; ``record_runs`` counts instrumented event-loop
 #: recordings (the cost the cache exists to amortize); ``stores`` counts
 #: successful disk writes; ``quarantined`` counts corrupt entries moved
-#: aside to ``*.bad`` on load.  Thread-safe (``counters.Stats``): the
-#: analysis service warms this cache from concurrent batches.
+#: aside to ``*.bad`` on load; ``record_seconds`` accumulates wall-clock
+#: seconds spent inside instrumented recordings — the quantity a warm
+#: cache amortizes (benchmarks assert it is 0.0 in warm processes).
+#: Thread-safe (``counters.Stats``): the analysis service warms this
+#: cache from concurrent batches.
 stats = Stats(memory_hits=0, disk_hits=0, misses=0, stores=0,
-              record_runs=0, quarantined=0)
+              record_runs=0, quarantined=0, record_seconds=0.0)
 
 #: Fault-injection hook (``serve.faults``): when set, called with the
 #: point name (``"cache-load"`` / ``"cache-store"``) before disk IO so
@@ -164,12 +196,32 @@ def max_entries() -> int:
     return max(env, 1)
 
 
+def mmap_min_vertices() -> int:
+    """Vertex count at which entries use the memory-mapped directory
+    layout (format 4) instead of a compressed ``.npz``.
+
+    ``$EDAN_SCHEDULE_CACHE_MMAP_MIN`` values that are empty, unparseable
+    or negative fall back to the default instead of raising mid-sweep
+    (0 is valid: memory-map everything)."""
+    try:
+        env = int(os.environ.get("EDAN_SCHEDULE_CACHE_MMAP_MIN", ""))
+    except (TypeError, ValueError):
+        return _DEFAULT_MMAP_MIN
+    return env if env >= 0 else _DEFAULT_MMAP_MIN
+
+
 def _entry_path(d: Path, digest: str, m: int, cs: int,
                 unit: float) -> Path:
     # unit is part of the name so workloads sweeping the same trace at
     # different unit costs get separate entries instead of evicting each
     # other on every run
     return d / f"{digest[:32]}_m{m}_cs{cs}_u{float(unit):g}.npz"
+
+
+def _dir_entry_path(d: Path, digest: str, m: int, cs: int,
+                    unit: float) -> Path:
+    """Format-4 sibling of ``_entry_path``: same key, ``.d`` directory."""
+    return d / f"{digest[:32]}_m{m}_cs{cs}_u{float(unit):g}.d"
 
 
 def _quarantine(p: Path, reason: str) -> None:
@@ -184,6 +236,8 @@ def _quarantine(p: Path, reason: str) -> None:
     warns once per process."""
     global _warned_quarantine
     try:
+        # works for format-4 directory entries too: rename moves the
+        # whole directory aside in one shot
         os.replace(p, p.with_name(p.name + ".bad"))
     except OSError:
         return                         # already gone / already quarantined
@@ -238,12 +292,55 @@ def load(digest: str, m: int, cs: int, n: int,
                 return None
             arrays = [_delta_decode(np.asarray(z[k])) for k in _ARRAY_KEYS]
     except FileNotFoundError:
-        return None                    # a plain miss, nothing to quarantine
+        # no compressed entry at the key: large traces store the
+        # memory-mapped directory layout instead
+        return _load_dir(d, digest, m, cs, n, unit)
     except (OSError, KeyError, ValueError, zipfile.BadZipFile) as e:
         _quarantine(p, f"unreadable entry ({type(e).__name__})")
         return None
     if any(arr is None for arr in arrays):
         _quarantine(p, "stored arrays are not int32 deltas")
+        return None
+    topo, O_mem, O_alu, level = arrays
+    if len(topo) != n or len(level) != n or len(O_mem) + len(O_alu) > n:
+        _quarantine(p, "array lengths do not describe the keyed trace")
+        return None
+    try:
+        os.utime(p)                    # touch: keep hot entries off the
+    except OSError:                    # prune list
+        pass
+    return topo, O_mem, O_alu, level
+
+
+def _load_dir(d: Path, digest: str, m: int, cs: int, n: int,
+              unit: float) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]]:
+    """Load a format-4 directory entry; arrays come back as read-only
+    ``np.memmap`` views paged in on demand, so a million-vertex schedule
+    is never decompressed into a second resident copy.  Same
+    validate-or-quarantine contract as the compressed path."""
+    p = _dir_entry_path(d, digest, m, cs, unit)
+    if not p.is_dir():
+        return None                    # a plain miss, nothing to quarantine
+    try:
+        with np.load(p / "meta.npz") as z:
+            if int(z["format"]) != _DIR_FORMAT or int(z["n"]) != n or \
+                    float(z["unit"]) != float(unit) or \
+                    int(z["m"]) != int(m) or \
+                    int(z["compute_slots"]) != int(cs) or \
+                    str(z["digest"]) != digest:
+                _quarantine(p, "stored fields do not match the key")
+                return None
+        # a vanished .npy inside an existing directory is a torn entry
+        # (atomic writes never produce one): FileNotFoundError is an
+        # OSError, so it quarantines below rather than reading as a miss
+        arrays = [np.load(p / f"{name}.npy", mmap_mode="r")
+                  for name in _RAW_NAMES]
+    except (OSError, KeyError, ValueError, zipfile.BadZipFile) as e:
+        _quarantine(p, f"unreadable entry ({type(e).__name__})")
+        return None
+    if any(a.ndim != 1 or a.dtype != np.int32 for a in arrays):
+        _quarantine(p, "stored arrays are not 1-D int32")
         return None
     topo, O_mem, O_alu, level = arrays
     if len(topo) != n or len(level) != n or len(O_mem) + len(O_alu) > n:
@@ -268,6 +365,9 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
     d = cache_dir()
     if d is None or n < min_vertices():
         return False
+    if n >= mmap_min_vertices():
+        return _store_dir(d, digest, m, cs, n, unit,
+                          topo, O_mem, O_alu, level)
     encoded = [_delta_encode(a) for a in (topo, O_mem, O_alu, level)]
     if any(e is None for e in encoded):
         return False
@@ -298,6 +398,57 @@ def store(digest: str, m: int, cs: int, n: int, unit: float,
     return True
 
 
+def _store_dir(d: Path, digest: str, m: int, cs: int, n: int, unit: float,
+               topo: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
+               level: np.ndarray) -> bool:
+    """Write a format-4 directory entry: ``meta.npz`` plus one raw int32
+    ``.npy`` per array, built in a tempdir and published with a single
+    ``os.replace`` so readers never see a torn entry.  Same refusal
+    contract as the compressed path (1-D, values in ``[0, 2^31)``)."""
+    arrays = []
+    for a in (topo, O_mem, O_alu, level):
+        arr = np.asarray(a)
+        if arr.ndim != 1 or \
+                (len(arr) and (arr.min() < 0 or arr.max() >= 2 ** 31)):
+            return False
+        arrays.append(np.ascontiguousarray(arr, dtype=np.int32))
+    final = _dir_entry_path(d, digest, m, cs, unit)
+    tmp = None
+    try:
+        if fault_hook is not None:
+            # an injected cache-store fault is a failed write: contained
+            # by the best-effort store contract (returns False)
+            fault_hook("cache-store")
+        d.mkdir(parents=True, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=d, suffix=".tmpdir")
+        np.savez(os.path.join(tmp, "meta.npz"), format=_DIR_FORMAT,
+                 digest=digest, n=n, unit=float(unit), m=m,
+                 compute_slots=cs)
+        for name, arr in zip(_RAW_NAMES, arrays):
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+        if final.exists():
+            # rename cannot replace a non-empty directory; last writer
+            # wins, and a concurrent recreate between these two calls
+            # just fails this store (best-effort contract)
+            shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        tmp = None
+    except OSError:
+        return False
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+    try:
+        # a stale compressed sibling at the same key would shadow the
+        # fresh directory entry on load
+        os.unlink(_entry_path(d, digest, m, cs, unit))
+    except OSError:
+        pass
+    stats.add("stores")
+    prune()
+    return True
+
+
 def prune(cap: Optional[int] = None) -> int:
     """Drop the oldest entries beyond the cap; returns how many went.
 
@@ -314,8 +465,10 @@ def prune(cap: Optional[int] = None) -> int:
     try:
         # quarantined *.bad entries count against the cap too (they are
         # never touched, so as the coldest files they are pruned first —
-        # corruption cannot grow the directory without bound)
-        names = list(d.glob("*.npz")) + list(d.glob("*.npz.bad"))
+        # corruption cannot grow the directory without bound); format-4
+        # directory entries are listed alongside the compressed files
+        names = (list(d.glob("*.npz")) + list(d.glob("*.npz.bad"))
+                 + list(d.glob("*.d")) + list(d.glob("*.d.bad")))
     except OSError:
         return 0
     entries = []
@@ -328,7 +481,10 @@ def prune(cap: Optional[int] = None) -> int:
     gone = 0
     for _, p in entries[:max(len(entries) - cap, 0)]:
         try:
-            p.unlink()
+            if p.is_dir():
+                shutil.rmtree(p)
+            else:
+                p.unlink()
             gone += 1
         except OSError:
             pass                  # already gone: a concurrent pruner won

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import heapq
 import os
+import time
 from typing import Optional
 
 import numpy as np
@@ -92,10 +93,19 @@ _PLAN_MEMO_CAP = 8
 def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
                 compute_slots: int, record: bool = False):
     """The §3.3.1 greedy event loop (the seed engine), optionally recording
-    the schedule: per-vertex finish times and the per-class issue orders."""
+    the schedule: per-vertex finish times and the per-class issue orders.
+
+    ``sim_lists`` carries the successor CSR + in-degrees as int32
+    memoryviews/arrays (``EDag._sim_lists``): scalar memoryview indexing
+    returns plain Python ints at near-list speed without materializing
+    ~28-bytes-per-element ``tolist()`` copies, and the recorded issue
+    orders land in preallocated int32 arrays — together this keeps the
+    loop's footprint at a few bytes per vertex even on million-vertex
+    traces.  The event semantics are the frozen seed reference and must
+    never change."""
     sdst_l, sptr_l, indeg0 = sim_lists
     n = len(indeg0)
-    indeg_l = list(indeg0)
+    indeg_l = memoryview(np.array(indeg0, dtype=np.int32))
 
     events: list = []       # (finish_time, vid)
     mem_wait: list = []     # (ready_time, vid) heap, FIFO by readiness
@@ -105,11 +115,13 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
     if alu:
         heapq.heapify(alu)
     if record:
-        pops: list = []
-        O_mem: list = []
-        O_alu: list = []
+        pops = np.empty(n, dtype=np.int32)
+        O_mem = np.empty(n, dtype=np.int32)
+        O_alu = np.empty(n if compute_slots else 0, dtype=np.int32)
+        n_pops = n_mem = n_alu = 0
 
     def start(v: int, t: float) -> None:
+        nonlocal n_alu
         if is_mem[v]:
             heapq.heappush(mem_wait, (t, v))
         elif alu is not None:
@@ -117,7 +129,8 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
             heapq.heapreplace(alu, st + unit)
             heapq.heappush(events, (st + unit, v))
             if record:
-                O_alu.append(v)
+                O_alu[n_alu] = v
+                n_alu += 1
         else:
             heapq.heappush(events, (t + unit, v))
 
@@ -126,6 +139,7 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
             start(v, 0.0)
 
     def drain_mem(now: float) -> None:
+        nonlocal n_mem
         # issue every waiting memory access onto the earliest-free slot
         while mem_wait:
             rt, v = mem_wait[0]
@@ -134,7 +148,8 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
             heapq.heapreplace(slots, st + alpha)
             heapq.heappush(events, (st + alpha, v))
             if record:
-                O_mem.append(v)
+                O_mem[n_mem] = v
+                n_mem += 1
 
     drain_mem(0.0)
     makespan = 0.0
@@ -142,7 +157,8 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
         t, v = heapq.heappop(events)
         makespan = max(makespan, t)
         if record:
-            pops.append(v)
+            pops[n_pops] = v
+            n_pops += 1
         for ei in range(sptr_l[v], sptr_l[v + 1]):
             d = sdst_l[ei]
             indeg_l[d] -= 1
@@ -150,9 +166,8 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
                 start(d, t)
         drain_mem(t)
     if record:
-        return makespan, np.asarray(pops, dtype=np.int64), \
-            np.asarray(O_mem, dtype=np.int64), \
-            np.asarray(O_alu, dtype=np.int64)
+        return makespan, pops[:n_pops], O_mem[:n_mem].copy(), \
+            O_alu[:n_alu].copy()
     return makespan
 
 
@@ -190,8 +205,10 @@ def _slot_qpred(rank: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
     earlier on the same resource class; vertices without one point at the
     zero sentinel row ``n`` (a slot that is free at t=0).  Chains are
     built per issue order, so in a multi-trace union (one order per
-    member trace) they can never cross block boundaries."""
-    qpred = np.full(n, n, dtype=np.int64)
+    member trace) they can never cross block boundaries.  int32 like
+    every other index array — the sentinel ``n`` fits because eDAG
+    growth is guarded at the 2^31 boundary."""
+    qpred = np.full(n, n, dtype=np.int32)
     if len(O_mem) > m:
         qpred[rank[O_mem[m:]]] = rank[O_mem[:-m]]
     if cs and len(O_alu) > cs:
@@ -224,8 +241,8 @@ def _attach_queue_partition(lv, dst_r: np.ndarray, qpred: np.ndarray,
         qonly = qonly[np.argsort(level[qonly], kind="stable")]
         counts = np.bincount(level[qonly], minlength=lv.n_levels)
         lv.qonly_ptr = np.concatenate(
-            ([0], np.cumsum(counts))).astype(np.int64)
-        lv.qonly_dst = qonly
+            ([0], np.cumsum(counts))).astype(np.int32)
+        lv.qonly_dst = qonly.astype(np.int32)
 
 
 class _ReplayPlan:
@@ -251,12 +268,12 @@ class _ReplayPlan:
         self.n, self.m, self.cs = n, m, cs
         # the recorded pop order (finish time, vid) is a linear extension
         # of the augmented DAG: slot chains strictly increase finish times
-        rank = np.empty(n, dtype=np.int64)
-        rank[topo] = np.arange(n)
+        rank = np.empty(n, dtype=np.int32)
+        rank[topo] = np.arange(n, dtype=np.int32)
         self.topo, self.rank = topo, rank
         self.O_mem, self.O_alu = O_mem, O_alu
         self.Om_rel = rank[O_mem]
-        self.Oa_rel = rank[O_alu] if cs else np.zeros(0, dtype=np.int64)
+        self.Oa_rel = rank[O_alu] if cs else np.zeros(0, dtype=np.int32)
         self.is_mem_topo = g.is_mem[topo]
 
         # queue predecessors point at the zero sentinel row n when absent
@@ -264,13 +281,14 @@ class _ReplayPlan:
         qpred = _slot_qpred(rank, O_mem, O_alu, m, cs, n)
         src_r, dst_r = rank[g.src], rank[g.dst]
 
-        qdst = np.nonzero(qpred < n)[0]
+        qdst = np.nonzero(qpred < n)[0].astype(np.int32)
         asrc = np.concatenate([src_r, qpred[qdst]])
         adst = np.concatenate([dst_r, qdst])
         if level is not None and not _aug_level_valid(level, asrc, adst, n):
             level = None              # invalid persisted levels: recompute
         if level is None:
             level = _bk.levelize(asrc, adst, n)
+        del asrc, adst                # only levelize needs the augmented list
         self.level_aug = level
         lv = _bk.build_level_partition(src_r, dst_r, level, n)
         _attach_queue_partition(lv, dst_r, qpred, level)
@@ -295,6 +313,27 @@ class _ReplayPlan:
                               clamp=False, R_out=R, backend=backend,
                               replay_dtype=replay_dtype)
         return F, R
+
+    def array_nbytes(self) -> dict:
+        """Byte sizes of the plan's live arrays, keyed by name.
+
+        A recorded plan is part of the pipeline's theoretical working
+        set — the augmented-graph partition it holds is the same order
+        of size as the trace's own CSR — so the scale benchmark adds
+        these to ``EDag.array_nbytes`` when bounding peak RSS."""
+        lv = self.lv
+        arrs = dict(topo=self.topo, rank=self.rank, O_mem=self.O_mem,
+                    O_alu=self.O_alu, Om_rel=self.Om_rel,
+                    Oa_rel=self.Oa_rel, is_mem_topo=self.is_mem_topo,
+                    level_aug=self.level_aug, esrc=lv.esrc,
+                    run_dst=lv.run_dst, run_starts=lv.run_starts,
+                    run_lens=lv.run_lens, run_ptr=lv.run_ptr,
+                    elevel_ptr=lv.elevel_ptr)
+        for name in ("qpred", "qonly_ptr", "qonly_dst"):
+            a = getattr(lv, name, None)
+            if a is not None:
+                arrs[name] = a
+        return {k: int(np.asarray(v).nbytes) for k, v in arrs.items()}
 
 
 def _enabler_pass(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
@@ -379,8 +418,12 @@ def _replay_mem_budget(override: Optional[int] = None) -> int:
 def _points_chunk(n: int, k: int, mem_budget: Optional[int] = None) -> int:
     """Balanced point chunk under the replay memory budget: the level loop
     pays per-level dispatch once per chunk, so fewer, equal-sized chunks
-    beat one full chunk plus a sliver."""
-    cap = max(4, int(_replay_mem_budget(mem_budget) //
+    beat one full chunk plus a sliver.
+
+    The floor is a single point — at million-vertex scale even one
+    (n, 4) float64 pair is ~70 MB, so a higher floor would silently
+    break the budget exactly where it matters."""
+    cap = max(1, int(_replay_mem_budget(mem_budget) //
                      max(_REPLAY_BYTES_PER_CELL * n, 1)))
     n_chunks = -(-k // cap)
     return -(-k // n_chunks)
@@ -425,8 +468,8 @@ def _validate_schedule(g: EDag, m: int, cs: int, topo, O_mem,
     # topo a permutation that linearizes the DAG edges
     if (np.bincount(topo, minlength=n) != 1).any():
         return None
-    rank = np.empty(n, dtype=np.int64)
-    rank[topo] = np.arange(n)
+    rank = np.empty(n, dtype=np.int32)
+    rank[topo] = np.arange(n, dtype=np.int32)
     if len(g.src) and not (rank[g.src] < rank[g.dst]).all():
         return None                   # not a linear extension of the eDAG
     # the slot chains the orders imply must also run forward in rank —
@@ -483,11 +526,17 @@ def _get_plan(g: EDag, m: int, cs: int,
 def _record_plan(g: EDag, sim_lists, m: int, cs: int, a0: float,
                  unit: float, persist: bool):
     """One instrumented reference run -> (master makespan, replay plan);
-    the plan is memoized and, for large traces, persisted to disk."""
+    the plan is memoized and, for large traces, persisted to disk.  The
+    serial recording cost (event loop + plan build) is accumulated into
+    ``schedule_cache.stats["record_seconds"]`` — the number a warm cache
+    amortizes, reported by the cache bench and asserted zero for warm
+    processes in CI."""
     _sc.stats.add("record_runs")
+    t0 = time.perf_counter()
     mk0, topo, O_mem, O_alu = _event_loop(
         g.is_mem, sim_lists, m, a0, unit, cs, record=True)
     plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs)
+    _sc.stats.add("record_seconds", time.perf_counter() - t0)
     if persist:
         _memo_plan(g, (m, cs, float(unit)), plan)
         if g.n_vertices >= _sc.min_vertices():

@@ -335,9 +335,14 @@ class AnalysisService:
 
     def _pack(self, members: List[_Pending]) -> List[List[_Pending]]:
         """Greedy highest-priority-first packing under the replay budget:
-        a batch's stacked replay footprint is ``sum(n_vertices) * n_pairs
-        * n_alphas(union) * bytes-per-cell``.  An oversized request rides
-        alone — ``_member_groups`` inside the suite replay streams it."""
+        a batch's stacked working set is ``sum(n_vertices) * n_pairs *
+        n_alphas(union) * bytes-per-cell`` for the replay matrices *plus*
+        every member trace's finalized-array footprint
+        (``EDag.array_nbytes`` — union construction copies the member
+        CSRs, so at million-vertex scale the traces themselves, not the
+        replay cells, can dominate the batch's memory).  An oversized
+        request rides alone — ``_member_groups`` inside the suite replay
+        streams it."""
         members = sorted(members,
                          key=lambda p: (-p.req.priority, p.rid))
         budget = _replay_mem_budget(self.mem_budget)
@@ -345,19 +350,24 @@ class AnalysisService:
         cur: List[_Pending] = []
         cur_alphas: set = set()
         cur_rows = 0
+        cur_trace_bytes = 0
         for p in members:
             r = p.req
             n_pairs = max(len(r.ms) * len(r.compute_slots), 1)
             rows = p.g.n_vertices * n_pairs
+            tb = sum(p.g.array_nbytes().values())
             alphas = cur_alphas | set(float(a) for a in r.alphas)
             cells = (cur_rows + rows) * len(alphas)
-            if cur and cells * _REPLAY_BYTES_PER_CELL > budget:
+            if cur and (cells * _REPLAY_BYTES_PER_CELL
+                        + cur_trace_bytes + tb) > budget:
                 batches.append(cur)
                 cur, cur_alphas, cur_rows = [], set(), 0
+                cur_trace_bytes = 0
                 alphas = set(float(a) for a in r.alphas)
             cur.append(p)
             cur_alphas = alphas
             cur_rows += rows
+            cur_trace_bytes += tb
         if cur:
             batches.append(cur)
         return batches

@@ -142,10 +142,18 @@ def test_incompatible_grids_do_not_batch():
 
 
 def test_memory_budget_splits_batches_and_priority_packs_first():
-    # budget fits exactly two 40-vertex graphs on this grid
+    # budget fits exactly two 40-vertex graphs on this grid: their
+    # stacked replay cells plus their trace footprints (packing charges
+    # member CSRs too — union construction copies them)
+    def trace_bytes(seed):
+        g = rand_edag(seed)
+        g._finalize()
+        return sum(g.array_nbytes().values())
+
     n_pairs = len(GRID["ms"]) * len(GRID["compute_slots"])
     rows2 = 2 * 40 * n_pairs
-    budget = rows2 * len(ALPHAS) * _REPLAY_BYTES_PER_CELL
+    budget = (rows2 * len(ALPHAS) * _REPLAY_BYTES_PER_CELL
+              + trace_bytes(1) + trace_bytes(2))
     reqs = [req(0, priority=0), req(1, priority=5), req(2, priority=5)]
     out = svc(mem_budget=budget).process(reqs)
     assert all(r.ok for r in out)

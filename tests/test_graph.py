@@ -139,3 +139,112 @@ def test_lambda_rel_bounded(W, D, m, alpha0, C):
     lam = lambda_abs(W, D, m)
     Lam = lambda_rel(lam, alpha0, C)
     assert 0.0 <= Lam <= 1.0 or C == 0
+
+
+# --------------------------------------------------- int32 index discipline
+
+def test_index_overflow_exported_and_typed():
+    from repro.core import IndexOverflowError
+    from repro.core import graph as graph_mod
+    assert issubclass(IndexOverflowError, OverflowError)
+    assert IndexOverflowError is graph_mod.IndexOverflowError
+
+
+def test_check_index_limit_boundary():
+    from repro.core.graph import _check_index_limit, IndexOverflowError
+    _check_index_limit(2 ** 31 - 1, "vertex")     # last representable count
+    with pytest.raises(IndexOverflowError, match="vertex count"):
+        _check_index_limit(2 ** 31, "vertex")
+    with pytest.raises(IndexOverflowError, match="EDagSuite"):
+        _check_index_limit(2 ** 31 + 5, "edge")
+
+
+@pytest.fixture
+def tiny_index_limit(monkeypatch):
+    """Shrink the guard so the boundary is testable without 2^31-element
+    arrays; the guard reads the module global at call time."""
+    from repro.core import graph as graph_mod
+    monkeypatch.setattr(graph_mod, "_INDEX_LIMIT", 64)
+
+
+def test_add_vertex_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    g = EDag()
+    for _ in range(63):
+        g.add_vertex()
+    with pytest.raises(IndexOverflowError):
+        g.add_vertex()
+    assert g.n_vertices == 63                     # nothing was appended
+
+
+def test_add_vertex_block_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    g = EDag()
+    g.add_vertex_block(1.0, False, 0.0, n=60)
+    with pytest.raises(IndexOverflowError):
+        g.add_vertex_block(1.0, False, 0.0, n=10)
+    assert g.n_vertices == 60
+
+
+def test_add_edge_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    g = EDag()
+    g.add_vertex_block(1.0, False, 0.0, n=40)
+    for v in range(1, 40):
+        g.add_edge(0, v)                          # 39 edges
+    for v in range(2, 26):
+        g.add_edge(1, v)                          # 63 edges total
+    with pytest.raises(IndexOverflowError):
+        g.add_edge(1, 30)
+    assert g.n_edges == 63
+
+
+def test_add_edge_block_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    g = EDag()
+    g.add_vertex_block(1.0, False, 0.0, n=40)
+    src = np.zeros(60, dtype=np.int64)
+    dst = np.arange(60) % 39 + 1
+    g.add_edge_block(src, dst)
+    with pytest.raises(IndexOverflowError):
+        g.add_edge_block(np.zeros(10, dtype=np.int64),
+                         np.arange(10) + 1)
+    assert g.n_edges == 60
+
+
+def test_from_arrays_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    with pytest.raises(IndexOverflowError):
+        EDag.from_arrays(np.ones(70), np.zeros(70, dtype=bool),
+                         np.zeros(70), np.zeros(0, dtype=np.int32),
+                         np.zeros(0, dtype=np.int32))
+
+
+def test_legacy_build_overflow_guard(tiny_index_limit):
+    from repro.core import IndexOverflowError
+    g = EDag(legacy_build=True)
+    for _ in range(63):
+        g.add_vertex()
+    with pytest.raises(IndexOverflowError):
+        g.add_vertex()
+
+
+def test_finalized_arrays_are_int32():
+    g = chain(10)
+    g._finalize()
+    for arr in (g.src, g.dst, g._indptr, g.succ_dst, g.succ_indptr,
+                g.indeg, g.level):
+        assert arr.dtype == np.int32, arr.dtype
+    # sentinel-bearing replay structures are exercised in test_scheduler
+
+
+def test_digest_stable_across_builds_and_widths():
+    a = chain(20)
+    b = EDag(legacy_build=True)
+    for i in range(20):
+        v = b.add_vertex(is_mem=True, nbytes=8.0)
+        if i:
+            b.add_edge(v - 1, v)
+    assert a.trace_digest() == b.trace_digest()
+    c = EDag.from_arrays(a.cost, a.is_mem, a.nbytes, a.src, a.dst)
+    assert c.trace_digest() == a.trace_digest()

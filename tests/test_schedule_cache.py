@@ -109,7 +109,9 @@ def test_delta_encoding_roundtrip_nonmonotone(cache_env):
     got = sc.load(g.trace_digest(), 4, 2, n, 1.0)
     assert got is not None
     for want, have in zip((topo, O_mem, O_alu, level), got):
-        assert have.dtype == np.int64 and np.array_equal(want, have)
+        # decoded arrays stay int32 (the engine-wide index discipline —
+        # adopting them costs no second full-width copy)
+        assert have.dtype == np.int32 and np.array_equal(want, have)
     (entry,) = list(cache_env.glob("*.npz"))
     with np.load(entry) as z:
         assert int(z["format"]) == 3
@@ -678,3 +680,119 @@ def test_crash_mid_store_leaves_nothing_or_valid(cache_env):
                     np.zeros(0, dtype=np.int64),
                     np.zeros(n, dtype=np.int64))
     assert sc.load("a" * 64, 4, 0, n, 1.0) is not None
+
+
+# ------------------------------------------- memory-mapped entries (format 4)
+
+@pytest.fixture
+def mmap_env(cache_env, monkeypatch):
+    """Force every entry onto the format-4 directory layout."""
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MMAP_MIN", "0")
+    return cache_env
+
+
+def test_mmap_dir_roundtrip_and_backing(mmap_env):
+    g = build_graph(seed=40)
+    n = g.n_vertices
+    rng = np.random.default_rng(1)
+    topo = rng.permutation(n).astype(np.int64)
+    O_mem = rng.permutation(np.flatnonzero(g.is_mem)).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    level = rng.integers(0, n, size=n).astype(np.int64)
+    assert sc.store(g.trace_digest(), 4, 0, n, 1.0, topo, O_mem, O_alu,
+                    level)
+    assert list(mmap_env.glob("*.npz")) == []       # no compressed sibling
+    (entry,) = list(mmap_env.glob("*.d"))
+    assert entry.is_dir() and (entry / "meta.npz").exists()
+    got = sc.load(g.trace_digest(), 4, 0, n, 1.0)
+    assert got is not None
+    for want, have in zip((topo, O_mem, O_alu, level), got):
+        assert np.array_equal(want, have)
+        base = have
+        while base is not None and not isinstance(base, np.memmap):
+            base = getattr(base, "base", None)
+        if len(have):
+            assert isinstance(base, np.memmap)      # zero-copy load
+    # wrong key dimensions still miss
+    assert sc.load(g.trace_digest(), 3, 0, n, 1.0) is None
+    assert sc.load(g.trace_digest(), 4, 0, n + 1, 1.0) is None
+
+
+def test_mmap_warm_sweep_bitexact(mmap_env):
+    alphas = [50.0, 100.0, 200.0]
+    cold = latency_sweep(build_graph(seed=41), alphas, m=3)
+    assert sc.stats["record_runs"] == 1 and sc.stats["stores"] == 1
+    assert list(mmap_env.glob("*.d")) != []
+    sc.reset_stats()
+    warm = latency_sweep(build_graph(seed=41), alphas, m=3)
+    assert sc.stats["disk_hits"] == 1 and sc.stats["record_runs"] == 0
+    assert sc.stats["record_seconds"] == 0.0
+    assert np.array_equal(cold, warm)
+    want = np.array([simulate_reference(build_graph(seed=41), m=3, alpha=a)
+                     for a in alphas])
+    assert np.array_equal(warm, want)
+
+
+def test_mmap_corrupt_dir_quarantined_then_warm(mmap_env):
+    alphas = [50.0, 100.0, 200.0]
+    want = latency_sweep(build_graph(seed=42), alphas, m=2)
+    (entry,) = list(mmap_env.glob("*.d"))
+    (entry / "meta.npz").write_bytes(b"definitely not a zip archive")
+    sc.reset_stats()
+    got = latency_sweep(build_graph(seed=42), alphas, m=2)
+    assert np.array_equal(got, want)
+    assert sc.stats["quarantined"] == 1 and sc.stats["record_runs"] == 1
+    assert (entry.parent / (entry.name + ".bad")).is_dir()
+    assert entry.is_dir()             # key path holds the fresh entry
+    sc.reset_stats()
+    assert np.array_equal(latency_sweep(build_graph(seed=42), alphas, m=2),
+                          want)
+    assert sc.stats["disk_hits"] == 1 and sc.stats["record_runs"] == 0
+
+
+def test_mmap_truncated_array_rejected(mmap_env):
+    g = build_graph(seed=43)
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    assert sc.store(g.trace_digest(), 4, 0, n, 1.0, topo, O_mem,
+                    np.zeros(0, dtype=np.int64),
+                    np.zeros(n, dtype=np.int64))
+    (entry,) = list(mmap_env.glob("*.d"))
+    np.save(entry / "topo.npy", topo[: n // 2].astype(np.int32))
+    assert sc.load(g.trace_digest(), 4, 0, n, 1.0) is None
+
+
+def test_mmap_prune_removes_directories(mmap_env, monkeypatch):
+    g = build_graph(seed=44)
+    _store_n_entries(g, 5)
+    assert len(list(mmap_env.glob("*.d"))) == 5
+    assert sc.prune(cap=2) == 3
+    assert len(list(mmap_env.glob("*.d"))) == 2
+    assert sc.clear() == 2
+    assert list(mmap_env.glob("*.d")) == []
+
+
+def test_mmap_threshold_selects_format(cache_env, monkeypatch):
+    """Below the threshold entries stay compressed .npz; at or above it
+    they switch to the directory layout — same key, same contents."""
+    g = build_graph(seed=45)
+    n = g.n_vertices
+    topo = np.arange(n, dtype=np.int64)
+    O_mem = np.flatnonzero(g.is_mem).astype(np.int64)
+    O_alu = np.zeros(0, dtype=np.int64)
+    level = np.zeros(n, dtype=np.int64)
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MMAP_MIN", str(n + 1))
+    assert sc.store(g.trace_digest(), 4, 0, n, 1.0, topo, O_mem, O_alu,
+                    level)
+    assert list(cache_env.glob("*.d")) == []
+    assert len(list(cache_env.glob("*.npz"))) == 1
+    monkeypatch.setenv("EDAN_SCHEDULE_CACHE_MMAP_MIN", str(n))
+    assert sc.store(g.trace_digest(), 5, 0, n, 1.0, topo, O_mem, O_alu,
+                    level)
+    assert len(list(cache_env.glob("*.d"))) == 1
+    a = sc.load(g.trace_digest(), 4, 0, n, 1.0)
+    b = sc.load(g.trace_digest(), 5, 0, n, 1.0)
+    assert a is not None and b is not None
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)

@@ -229,7 +229,7 @@ def test_sweep_grid_memory_budget_invariant():
     alphas = np.linspace(40.0, 300.0, 14)
     full = sweep_grid(g, alphas, ms=[1, 4], compute_slots=[0, 3])
     tiny = sweep_grid(g, alphas, ms=[1, 4], compute_slots=[0, 3],
-                      mem_budget=1)     # forces the minimum chunk of 4
+                      mem_budget=1)     # forces single-point chunks
     assert np.array_equal(full, tiny)
 
 

@@ -1,0 +1,256 @@
+"""Streaming chunked build vs the retained legacy reference, plus the
+memory-mapped trace store.
+
+The default streaming/chunked build path must be **bit-identical** to
+the legacy Python-list build it replaced — same digest, same arrays,
+same levels, same simulated makespans — under every append pattern:
+scalar/bulk mixes, multi-chunk edge streams, out-of-order edge blocks
+(the counting-sort merge fallback), pending-buffer flush boundaries and
+incremental re-finalization.  ``trace_store`` roundtrips must hand back
+the same graph through a read-only memory map.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (EDag, latency_sweep, load_edag, put_trace,
+                        get_trace, save_edag)
+from repro.core import graph as graph_mod
+from repro.core import trace_store
+
+
+_ALPHAS = [3.0, 50.0, 200.0]
+
+
+def _random_stream(g: EDag, seed: int, n_ops: int, p_block: float,
+                   p_unsorted: float) -> None:
+    """Append a deterministic random vertex/edge stream to ``g``.
+
+    The same (seed, params) always produces the same stream, so applying
+    it to a streaming and a legacy graph builds the same eDAG through
+    two different storage disciplines.
+    """
+    rng = np.random.default_rng(seed)
+    while g.n_vertices < 3:
+        g.add_vertex(is_mem=bool(rng.random() < 0.5), nbytes=8.0)
+    for _ in range(n_ops):
+        r = rng.random()
+        n = g.n_vertices
+        if r < p_block:
+            k = int(rng.integers(2, 12))
+            if rng.random() < 0.5:        # per-vertex arrays + label list
+                g.add_vertex_block(rng.random(k), rng.random(k) < 0.4,
+                                   8.0 * rng.random(k),
+                                   label=[f"l{i % 3}" for i in range(k)])
+            else:                         # broadcast scalars, one label
+                g.add_vertex_block(1.0, bool(rng.random() < 0.5), 8.0,
+                                   label="blk", n=k)
+            base = n
+            n = g.n_vertices
+            dst = rng.integers(base, n, size=min(2 * k, n - 1))
+            src = (rng.random(len(dst)) * dst).astype(np.int64)
+            if rng.random() < p_unsorted:
+                # deliberately interleave dst ranges across blocks so
+                # consecutive chunks overlap and collect() must fall
+                # back to the global stable argsort
+                dst = dst[::-1].copy()
+                src = src[::-1].copy()
+                order = np.argsort(src, kind="stable")
+                src, dst = src[order], dst[order]
+            g.add_edge_block(src, dst)
+        else:
+            v = g.add_vertex(cost=float(rng.random()),
+                             is_mem=bool(rng.random() < 0.5),
+                             nbytes=float(rng.integers(0, 64)),
+                             label=f"v{int(rng.integers(0, 4))}")
+            for _ in range(int(rng.integers(0, 3))):
+                g.add_edge(int(rng.integers(0, v)), v)
+
+
+def _assert_bit_identical(gs: EDag, gl: EDag) -> None:
+    gs._finalize()
+    gl._finalize()
+    assert gs.trace_digest() == gl.trace_digest()
+    assert np.array_equal(gs.src, gl.src)
+    assert np.array_equal(gs.dst, gl.dst)
+    assert np.array_equal(gs.level, gl.level)
+    assert np.array_equal(gs.cost, gl.cost)
+    assert np.array_equal(gs.is_mem, gl.is_mem)
+    assert np.array_equal(gs.nbytes, gl.nbytes)
+    assert list(gs.labels()) == list(gl.labels())
+    assert np.array_equal(latency_sweep(gs, _ALPHAS, use_cache=False),
+                          latency_sweep(gl, _ALPHAS, use_cache=False))
+
+
+@given(st.integers(0, 2 ** 31), st.integers(4, 40), st.floats(0.1, 0.9))
+def test_streaming_equals_legacy(seed, n_ops, p_block):
+    gs = EDag()
+    gl = EDag(legacy_build=True)
+    assert not gs._legacy and gl._legacy
+    for g in (gs, gl):
+        _random_stream(g, seed, n_ops, p_block, p_unsorted=0.0)
+    _assert_bit_identical(gs, gl)
+
+
+@given(st.integers(0, 2 ** 31), st.integers(4, 30))
+def test_unsorted_chunks_equal_legacy(seed, n_ops):
+    """Overlapping per-chunk dst ranges defeat the counting-sort merge
+    precondition; the global-argsort fallback must still be exact."""
+    gs = EDag()
+    gl = EDag(legacy_build=True)
+    for g in (gs, gl):
+        _random_stream(g, seed, n_ops, p_block=0.8, p_unsorted=0.9)
+    _assert_bit_identical(gs, gl)
+
+
+@given(st.integers(0, 2 ** 31), st.integers(3, 20), st.integers(3, 20))
+def test_incremental_refinalize_equals_oneshot(seed, ops_a, ops_b):
+    """finalize -> append more -> re-finalize must equal the one-shot
+    build of the whole stream (the collapsed-chunk merge path)."""
+    gs = EDag()
+    gl = EDag(legacy_build=True)
+    for g in (gs, gl):
+        _random_stream(g, seed, ops_a, p_block=0.5, p_unsorted=0.2)
+    gs._finalize()                    # collapse to one sorted chunk
+    mid_digest = gs.trace_digest()
+    for g in (gs, gl):
+        _random_stream(g, seed + 1, ops_b, p_block=0.5, p_unsorted=0.2)
+    assert gs.trace_digest() != mid_digest or gl.n_edges == gs.n_edges
+    _assert_bit_identical(gs, gl)
+
+
+def test_pending_buffer_flush_boundary(monkeypatch):
+    """Scalar appends crossing the pending-buffer flush threshold land in
+    numpy chunks without losing or duplicating elements."""
+    monkeypatch.setattr(graph_mod, "_CHUNK_FLUSH", 7)
+    gs = EDag()
+    gl = EDag(legacy_build=True)
+    for g in (gs, gl):
+        for i in range(40):           # crosses the patched boundary often
+            g.add_vertex(is_mem=(i % 3 == 0), nbytes=float(i))
+            if i:
+                g.add_edge(i - 1, i)
+        g.add_edge_block([0, 1], [5, 7])
+    assert gs.n_vertices == 40 and gs.n_edges == 41
+    _assert_bit_identical(gs, gl)
+
+
+def test_legacy_env_knob(monkeypatch):
+    monkeypatch.setenv("EDAN_LEGACY_BUILD", "1")
+    assert EDag()._legacy
+    monkeypatch.setenv("EDAN_LEGACY_BUILD", "0")
+    assert not EDag()._legacy
+    monkeypatch.delenv("EDAN_LEGACY_BUILD")
+    assert not EDag()._legacy
+    assert EDag(legacy_build=True)._legacy
+
+
+def test_traced_app_identical_under_both_builds(monkeypatch):
+    from repro.apps import polybench
+
+    g = polybench.trace_kernel("gemm", 6)
+    monkeypatch.setenv("EDAN_LEGACY_BUILD", "1")
+    gl = polybench.trace_kernel("gemm", 6)
+    assert gl._legacy and not g._legacy
+    _assert_bit_identical(g, gl)
+
+
+# ------------------------------------------------------------- trace store
+
+def _traced(seed: int = 0, n: int = 50) -> EDag:
+    g = EDag()
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        g.add_vertex(cost=float(rng.random()),
+                     is_mem=bool(rng.random() < 0.5), nbytes=8.0,
+                     label=f"v{i % 4}")
+        for j in range(max(0, i - 4), i):
+            if rng.random() < 0.4:
+                g.add_edge(j, i)
+    g._finalize()
+    return g
+
+
+def _mmap_backed(a: np.ndarray) -> bool:
+    while a is not None:
+        if isinstance(a, np.memmap):
+            return True
+        a = getattr(a, "base", None)
+    return False
+
+
+def test_store_roundtrip_mmap(tmp_path):
+    g = _traced()
+    p = save_edag(g, tmp_path / "t")
+    assert (p / "meta.json").exists()
+    g2 = load_edag(p)
+    assert g2.trace_digest() == g.trace_digest()
+    assert np.array_equal(g2.src, g.src)
+    assert np.array_equal(g2.level, g.level)
+    assert np.array_equal(g2.cost, g.cost)
+    assert _mmap_backed(np.asarray(g2.src))
+    assert np.array_equal(latency_sweep(g2, _ALPHAS, use_cache=False),
+                          latency_sweep(g, _ALPHAS, use_cache=False))
+    # an adopted graph is immutable: the append API must refuse
+    with pytest.raises(ValueError):
+        g2.add_vertex()
+    with pytest.raises(ValueError):
+        g2.add_edge(0, 1)
+
+
+def test_store_roundtrip_eager(tmp_path):
+    g = _traced(seed=1)
+    p = save_edag(g, tmp_path / "t")
+    g2 = load_edag(p, mmap=False)
+    assert not _mmap_backed(np.asarray(g2.src))
+    assert g2.trace_digest() == g.trace_digest()
+    assert np.array_equal(g2.dst, g.dst)
+
+
+def test_store_missing_derived_recomputed(tmp_path):
+    g = _traced(seed=2)
+    p = save_edag(g, tmp_path / "t", include_derived=False)
+    for name in trace_store._DERIVED:
+        assert not (p / f"{name}.npy").exists()
+    g2 = load_edag(p)
+    assert np.array_equal(g2.level, g.level)
+    assert np.array_equal(latency_sweep(g2, _ALPHAS, use_cache=False),
+                          latency_sweep(g, _ALPHAS, use_cache=False))
+
+
+def test_store_digest_verification_catches_corruption(tmp_path):
+    g = _traced(seed=3)
+    p = save_edag(g, tmp_path / "t")
+    meta = json.loads((p / "meta.json").read_text())
+    meta["digest"] = "0" * len(meta["digest"])
+    (p / "meta.json").write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="digest"):
+        load_edag(p)
+    g3 = load_edag(p, verify=False)   # explicit opt-out still loads
+    assert np.array_equal(g3.src, g.src)
+
+
+def test_put_get_trace_digest_addressed(tmp_path, monkeypatch):
+    monkeypatch.setenv("EDAN_TRACE_STORE", str(tmp_path))
+    g = _traced(seed=4)
+    p = put_trace(g)
+    assert p is not None and str(p).startswith(str(tmp_path))
+    g2 = get_trace(g.trace_digest())
+    assert g2 is not None
+    assert g2.trace_digest() == g.trace_digest()
+    assert get_trace("f" * 64) is None
+    monkeypatch.setenv("EDAN_TRACE_STORE", "off")
+    assert put_trace(g) is None and get_trace(g.trace_digest()) is None
+
+
+def test_store_save_requires_no_prior_finalize(tmp_path):
+    g = EDag()
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex()
+    g.add_edge(a, b)
+    p = save_edag(g, tmp_path / "t")   # save finalizes internally
+    g2 = load_edag(p)
+    assert g2.n_vertices == 2 and g2.n_edges == 1
