@@ -632,12 +632,14 @@ def main() -> None:
           f"(records cold={cache['cold']['record_runs']} "
           f"warm={cache['warm']['record_runs']})")
     # read-modify-write: perf_scale owns the "scale" section of the same
-    # file — carry foreign sections over instead of clobbering them
+    # file and perf_placement the "placement" section — carry foreign
+    # sections over instead of clobbering them
     if os.path.exists(args.out_sim):
         try:
             with open(args.out_sim) as f:
                 prev = json.load(f)
-            sim = {**{k: v for k, v in prev.items() if k == "scale"}, **sim}
+            sim = {**{k: v for k, v in prev.items()
+                      if k in ("scale", "placement")}, **sim}
         except (OSError, ValueError):
             pass
     with open(args.out_sim, "w") as f:

@@ -18,8 +18,12 @@ from .metrics import (lambda_abs, lambda_rel, bandwidth_utilization,
 from .backend import (LevelCSR, column_quanta, level_accumulate, levelize,
                       replay_accumulate, replay_dtype_policy,
                       segment_max_rows, segment_sum_rows, select_backend)
-from .scheduler import (simulate, simulate_reference, simulate_batch,
+from .scheduler import (simulate, simulate_reference,
+                        simulate_reference_classes, simulate_batch,
                         latency_sweep, sweep_grid)
+from .placement import (PlacementObject, PlacementReport,
+                        objects_from_edag, object_class_map,
+                        placement_rows, search_placement)
 from .suite import (EDagSuite, suite_latency_sweep, suite_sweep_grid,
                     suite_t_inf_sweep)
 from . import schedule_cache
@@ -31,7 +35,7 @@ from .hlo import (parse_hlo, analyze_collectives, shape_bytes,
 from .jaxpr import edag_from_fn, edag_from_jaxpr
 from .sensitivity import (collective_sensitivity, AxisSensitivity,
                           axis_latency_sweep, axis_latency_grid,
-                          suite_axis_latency_grid)
+                          object_sensitivity, suite_axis_latency_grid)
 
 __all__ = [
     "EDag", "IndexOverflowError", "MemLayering", "NoCache",
@@ -43,9 +47,13 @@ __all__ = [
     "bandwidth_utilization", "bandwidth_sweep", "cost_matrix",
     "data_movement_over_time", "cost_vector", "report", "Report",
     "sweep_report", "t_inf_sweep", "grid_report", "suite_grid_report",
-    "simulate", "simulate_reference", "simulate_batch", "latency_sweep",
+    "simulate", "simulate_reference", "simulate_reference_classes",
+    "simulate_batch", "latency_sweep",
     "sweep_grid", "concat_edags", "EDagSuite", "suite_latency_sweep",
     "suite_sweep_grid", "suite_t_inf_sweep",
+    "PlacementObject", "PlacementReport", "objects_from_edag",
+    "object_class_map", "placement_rows", "search_placement",
+    "object_sensitivity",
     "LevelCSR", "column_quanta", "level_accumulate", "levelize",
     "replay_accumulate", "replay_dtype_policy", "segment_max_rows",
     "segment_sum_rows", "select_backend", "schedule_cache", "parse_hlo",

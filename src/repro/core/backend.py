@@ -627,10 +627,17 @@ def column_quanta(alphas, unit: float) -> np.ndarray:
     ``replay_accumulate`` is measured against: clean paper-protocol
     grids (integer alphas, unit 1.0) have large ``q``; an alpha needing
     all 52 significand bits has a tiny ``q`` and its column simply
-    demotes to the float64 kernel."""
+    demotes to the float64 kernel.
+
+    ``alphas`` may be 1-D (one scalar alpha per column) or 2-D
+    ``(k, n_classes)`` (one latency-class vector per column): a class
+    column's values are integer combinations of *all* its class alphas
+    plus ``unit``, so its quantum is the minimum over the row."""
     alphas = np.atleast_1d(np.asarray(alphas, dtype=np.float64))
-    return np.minimum(_lsb_quantum(alphas),
-                      float(_lsb_quantum(float(unit))))
+    q = _lsb_quantum(alphas)
+    if q.ndim == 2:
+        q = q.min(axis=1) if q.shape[1] else np.zeros(len(q))
+    return np.minimum(q, float(_lsb_quantum(float(unit))))
 
 
 def _certified_f32(F32: np.ndarray, quanta: np.ndarray,

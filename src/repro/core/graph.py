@@ -307,6 +307,12 @@ class EDag:
         self._adopted = False
         self._finalized = False
         self._indptr: Optional[np.ndarray] = None
+        # per-vertex latency-class overlay (disaggregation planning): not
+        # part of the finalized arrays or the trace digest — a class map
+        # re-prices vertices, it never changes the graph
+        self._mem_class: Optional[np.ndarray] = None
+        self._mem_class_names: Optional[list] = None
+        self._mem_class_digest_memo: Optional[str] = None
 
     # ------------------------------------------------------------------ build
     def _mutable(self) -> None:
@@ -671,6 +677,92 @@ class EDag:
             self._trace_digest = h.hexdigest()
         return self._trace_digest
 
+    # ------------------------------------------------------- latency classes
+    def set_mem_classes(self, classes, names: Optional[Sequence[str]] = None
+                        ) -> None:
+        """Tag every vertex with a latency class id (local/remote/pooled…).
+
+        ``classes`` is a length-``n_vertices`` integer array (``None``
+        clears the overlay — scalar-alpha semantics).  Class ids of
+        non-memory vertices are ignored (they always cost ``unit``), but
+        memory vertices must stay below the number of columns of any
+        class-vector alpha row later swept over this graph.  ``names``
+        optionally labels the classes (e.g. ``["local", "remote"]``) for
+        reports.  The overlay is *orthogonal to the trace digest*: it
+        re-prices vertices without changing the graph, so scalar-alpha
+        schedule-cache entries stay valid; class-vector replay plans are
+        keyed by ``mem_class_digest`` instead and memoized in-process
+        only."""
+        if classes is None:
+            self._mem_class = None
+            self._mem_class_names = None
+            self._mem_class_digest_memo = None
+            return
+        classes = np.ascontiguousarray(
+            np.asarray(classes, dtype=_INDEX_DTYPE))
+        if classes.ndim != 1 or len(classes) != self.n_vertices:
+            raise ValueError(
+                f"class map must be a ({self.n_vertices},) integer array, "
+                f"got shape {classes.shape}")
+        if len(classes) and int(classes.min()) < 0:
+            raise ValueError("class ids must be >= 0")
+        self._mem_class = classes
+        self._mem_class_names = list(names) if names is not None else None
+        self._mem_class_digest_memo = None
+
+    @property
+    def mem_classes(self) -> Optional[np.ndarray]:
+        """The per-vertex latency-class overlay, or ``None`` (scalar)."""
+        return self._mem_class
+
+    @property
+    def mem_class_names(self) -> Optional[list]:
+        return self._mem_class_names
+
+    def n_mem_classes(self) -> int:
+        """Number of latency classes the overlay uses (1 when unset)."""
+        c = self._mem_class
+        if c is None or not len(c):
+            return 1
+        return int(c.max()) + 1
+
+    def mem_class_digest(self) -> str:
+        """Stable hash of the class overlay (the in-process key for
+        class-vector replay plans).  ``"scalar"`` when no overlay is set —
+        distinct from every sha256 hex digest."""
+        if self._mem_class is None:
+            return "scalar"
+        if self._mem_class_digest_memo is None:
+            h = hashlib.sha256()
+            h.update(np.ascontiguousarray(self._mem_class,
+                                          dtype=np.int64).tobytes())
+            self._mem_class_digest_memo = h.hexdigest()
+        return self._mem_class_digest_memo
+
+    def mem_class_column(self, n_classes: int) -> np.ndarray:
+        """Per-vertex gather index for class-vector cost columns.
+
+        Validates the overlay against alpha rows of width ``n_classes``
+        and zeroes the (ignored) class ids of non-memory vertices so the
+        gather ``alphas.T[cls]`` is always in range.  An unset overlay
+        maps every vertex to class 0 — a one-class alpha row then prices
+        exactly like the scalar path."""
+        self._finalize()
+        cls = self._mem_class
+        if cls is None:
+            return np.zeros(self.n_vertices, dtype=_INDEX_DTYPE)
+        if len(cls) != self.n_vertices:
+            raise ValueError(
+                f"class map length {len(cls)} no longer matches the eDAG "
+                f"({self.n_vertices} vertices); call set_mem_classes again")
+        cls = np.where(self.is_mem, cls, 0).astype(_INDEX_DTYPE)
+        hi = int(cls.max()) if len(cls) else 0
+        if hi >= n_classes:
+            raise ValueError(
+                f"alpha rows carry {n_classes} class columns but the "
+                f"class map uses id {hi}")
+        return cls
+
     # -------------------------------------------------------------- analyses
     def _accumulate_scalar(self, base: np.ndarray) -> np.ndarray:
         """Reference scalar kernel for F[v] = base[v] + max(F[u], default 0).
@@ -797,19 +889,30 @@ class EDag:
         default, exact x64 on opt-in) and the result is bit-identical to
         the float64 numpy kernel either way.  Generic cost matrices
         (``finish_times_batch``) keep the plain ``level_accumulate``
-        path."""
+        path.
+
+        ``alphas`` may also be an ``(n_sweep, n_classes)`` matrix of
+        latency-class vectors: each memory vertex is then priced by its
+        class's alpha (``set_mem_classes``) via a per-vertex gather —
+        same stacked level kernel, same dtype policy, one more gather."""
         self._finalize()
         from .backend import column_quanta, replay_accumulate
         alphas = np.asarray(alphas, dtype=np.float64)
         if self.n_vertices == 0 or len(alphas) == 0:
             return np.zeros(len(alphas))
+        cls = (self.mem_class_column(alphas.shape[1])
+               if alphas.ndim == 2 else None)
         chunk = (_auto_sweep_chunk(self.n_vertices) if chunk is None
                  else max(int(chunk), 1))
         lv = self._level_csr()
         out = []
         for i in range(0, len(alphas), chunk):
-            F = np.where(self.is_mem[:, None],
-                         alphas[None, i:i + chunk], float(unit))
+            if cls is not None:
+                F = np.where(self.is_mem[:, None],
+                             alphas[i:i + chunk].T[cls], float(unit))
+            else:
+                F = np.where(self.is_mem[:, None],
+                             alphas[None, i:i + chunk], float(unit))
             replay_accumulate(lv, F,
                               column_quanta(alphas[i:i + chunk], unit),
                               clamp=True, backend=backend,

@@ -28,16 +28,30 @@ def lambda_rel(lam: float, alpha0: float, C: float) -> float:
 
 # --------------------------------------------------------------------- Eq 5
 
-def cost_vector(g: EDag, alpha: float, unit: float = 1.0) -> np.ndarray:
-    """Per-vertex execution times: alpha for RAM accesses, unit otherwise."""
+def cost_vector(g: EDag, alpha, unit: float = 1.0) -> np.ndarray:
+    """Per-vertex execution times: alpha for RAM accesses, unit otherwise.
+
+    ``alpha`` may be a 1-D latency-class vector: memory vertex ``v``
+    then costs ``alpha[classes[v]]`` per the eDAG's ``set_mem_classes``
+    overlay (vertices without an overlay price as class 0)."""
     g._finalize()
+    a = np.asarray(alpha, dtype=np.float64)
+    if a.ndim == 1:
+        cls = g.mem_class_column(len(a))
+        return np.where(g.is_mem, a[cls], float(unit))
     return np.where(g.is_mem, float(alpha), float(unit))
 
 
 def cost_matrix(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
-    """(n_sweep, n) cost matrix: row i is ``cost_vector(g, alphas[i])``."""
+    """(n_sweep, n) cost matrix: row i is ``cost_vector(g, alphas[i])``.
+
+    A 2-D ``(n_sweep, n_classes)`` input prices each row as a
+    latency-class vector against the eDAG's class overlay."""
     g._finalize()
     alphas = np.asarray(alphas, dtype=np.float64)
+    if alphas.ndim == 2:
+        cls = g.mem_class_column(alphas.shape[1])
+        return np.where(g.is_mem[None, :], alphas[:, cls], float(unit))
     return np.where(g.is_mem[None, :], alphas[:, None], float(unit))
 
 
@@ -211,6 +225,13 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     Returns ``dict(alphas, ms, compute_slots, W, D, C, lam (n_ms,),
     t_inf (n_alphas,), t_lower/t_upper/Lam (n_alphas, n_ms), and
     simulated (n_alphas, n_ms, n_compute_slots) when requested)``.
+
+    A 2-D ``(P, n_classes)`` alpha matrix evaluates latency-class
+    vectors against the eDAG's ``set_mem_classes`` overlay: ``t_inf``
+    and ``simulated`` price each vertex by its own class exactly, while
+    the closed-form Eq 1-2 bounds bracket *any* per-vertex assignment —
+    ``t_lower`` uses each row's smallest class alpha, ``t_upper`` (and
+    the Eq 4 Lambda built on it) its largest.
     """
     from .cost import non_memory_cost
     from .scheduler import sweep_grid as _sim_grid
@@ -226,9 +247,18 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     lam = lambda_abs(W, D, ms_arr)                         # Eq 3, per m
     t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend,
                         replay_dtype=replay_dtype)
+    if alphas.ndim == 2:
+        # class rows: the scalar bounds hold at the extreme class alphas
+        # of each row, bracketing every per-vertex class assignment
+        if alphas.shape[1]:
+            a_lo, a_hi = alphas.min(axis=1), alphas.max(axis=1)
+        else:
+            a_lo = a_hi = np.zeros(len(alphas))
+    else:
+        a_lo = a_hi = alphas
     # Eq 1-2 bounds and Eq 4 Lambda over the (alpha, m) grid in one shot
-    mem_lo = np.maximum(D, W / ms_arr)[None, :] * alphas[:, None]
-    mem_hi = lam[None, :] * alphas[:, None]
+    mem_lo = np.maximum(D, W / ms_arr)[None, :] * a_lo[:, None]
+    mem_hi = lam[None, :] * a_hi[:, None]
     denom = mem_hi + C
     Lam = np.divide(lam[None, :], denom,
                     out=np.zeros_like(denom), where=denom > 0)
@@ -288,10 +318,18 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
         C = np.zeros(K)
         t_inf = np.zeros((K, len(alphas)))
     lam = lambda_abs(W[:, None].astype(np.float64), D[:, None], ms_arr)
+    if alphas.ndim == 2:
+        # class rows bracket per-vertex assignments (see grid_report)
+        if alphas.shape[1]:
+            a_lo, a_hi = alphas.min(axis=1), alphas.max(axis=1)
+        else:
+            a_lo = a_hi = np.zeros(len(alphas))
+    else:
+        a_lo = a_hi = alphas
     # Eq 1-2 bounds and Eq 4 Lambda over the (trace, alpha, m) grid
     mem_lo = np.maximum(D[:, None], W[:, None] / ms_arr)[:, None, :] * \
-        alphas[None, :, None]
-    mem_hi = lam[:, None, :] * alphas[None, :, None]
+        a_lo[None, :, None]
+    mem_hi = lam[:, None, :] * a_hi[None, :, None]
     denom = mem_hi + C[:, None, None]
     Lam = np.divide(lam[:, None, :], denom,
                     out=np.zeros_like(denom), where=denom > 0)

@@ -171,6 +171,102 @@ def _event_loop(is_mem, sim_lists, m: int, alpha: float, unit: float,
     return makespan
 
 
+def _event_loop_classes(is_mem, sim_lists, m: int, alpha_vec, classes,
+                        unit: float, compute_slots: int,
+                        record: bool = False):
+    """Class-vector twin of ``_event_loop``: memory vertex ``v`` occupies
+    its slot for ``alpha_vec[classes[v]]`` cycles.
+
+    Same machine model and event semantics, one extra record: with
+    per-vertex service times the homogeneous slot-chain identity
+    ``S_j = max(R_j, F_{j-m})`` no longer holds, so the recording tracks
+    *slot provenance* instead — ``prov[j]`` is the issue index of the job
+    whose finish time was popped off the replace-min slot heap when job
+    ``j`` entered service (-1 for a slot still free at t=0).  The replay
+    plan wires ``O_mem[prov[j]] -> O_mem[j]`` queue edges through the
+    unchanged level kernel and ``_verify_slots`` certifies per column
+    that the recorded provenance is a greedy execution for the replayed
+    alphas.  The seed loop above stays frozen; this twin only runs in
+    class mode.  When every class shares one alpha the popped slot
+    *values* coincide with the seed loop's at every step (tuple
+    tie-breaks pick a slot, never a value), so makespans collapse
+    bit-identically to the scalar engine."""
+    sdst_l, sptr_l, indeg0 = sim_lists
+    n = len(indeg0)
+    indeg_l = memoryview(np.array(indeg0, dtype=np.int32))
+    alpha_l = [float(a) for a in alpha_vec]
+    cls_l = memoryview(np.ascontiguousarray(classes, dtype=np.int32))
+
+    events: list = []       # (finish_time, vid)
+    mem_wait: list = []     # (ready_time, vid) heap, FIFO by readiness
+    # (next free time, issue index of the job that freed it; -1 = a slot
+    # still free at t=0)
+    slots: list = [(0.0, -1)] * m
+    heapq.heapify(slots)
+    alu: list = [0.0] * compute_slots if compute_slots else None
+    if alu:
+        heapq.heapify(alu)
+    n_mem = 0
+    if record:
+        pops = np.empty(n, dtype=np.int32)
+        O_mem = np.empty(n, dtype=np.int32)
+        O_alu = np.empty(n if compute_slots else 0, dtype=np.int32)
+        prov = np.empty(n, dtype=np.int32)
+        n_pops = n_alu = 0
+
+    def start(v: int, t: float) -> None:
+        nonlocal n_alu
+        if is_mem[v]:
+            heapq.heappush(mem_wait, (t, v))
+        elif alu is not None:
+            st = max(t, alu[0])
+            heapq.heapreplace(alu, st + unit)
+            heapq.heappush(events, (st + unit, v))
+            if record:
+                O_alu[n_alu] = v
+                n_alu += 1
+        else:
+            heapq.heappush(events, (t + unit, v))
+
+    for v in range(n):
+        if not indeg_l[v]:
+            start(v, 0.0)
+
+    def drain_mem(now: float) -> None:
+        nonlocal n_mem
+        while mem_wait:
+            rt, v = mem_wait[0]
+            ft, creator = slots[0]
+            st = max(rt, ft)
+            heapq.heappop(mem_wait)
+            f = st + alpha_l[cls_l[v]]
+            heapq.heapreplace(slots, (f, n_mem))
+            heapq.heappush(events, (f, v))
+            if record:
+                O_mem[n_mem] = v
+                prov[n_mem] = creator
+            n_mem += 1
+
+    drain_mem(0.0)
+    makespan = 0.0
+    while events:
+        t, v = heapq.heappop(events)
+        makespan = max(makespan, t)
+        if record:
+            pops[n_pops] = v
+            n_pops += 1
+        for ei in range(sptr_l[v], sptr_l[v + 1]):
+            d = sdst_l[ei]
+            indeg_l[d] -= 1
+            if indeg_l[d] == 0:
+                start(d, t)
+        drain_mem(t)
+    if record:
+        return makespan, pops[:n_pops], O_mem[:n_mem].copy(), \
+            O_alu[:n_alu].copy(), prov[:n_mem].copy()
+    return makespan
+
+
 def simulate_reference(g: EDag, m: int = 4, alpha: float = 200.0,
                        unit: float = 1.0, compute_slots: int = 0) -> float:
     """Simulated makespan via the retained per-event heapq engine.
@@ -182,6 +278,24 @@ def simulate_reference(g: EDag, m: int = 4, alpha: float = 200.0,
         return 0.0
     return _event_loop(g.is_mem, g._sim_lists(), m, float(alpha),
                        float(unit), compute_slots)
+
+
+def simulate_reference_classes(g: EDag, alphas, m: int = 4,
+                               unit: float = 1.0,
+                               compute_slots: int = 0) -> float:
+    """Per-vertex latency-class makespan via the per-event reference loop.
+
+    ``alphas`` is one latency vector indexed by the eDAG's class tags
+    (``EDag.set_mem_classes``); vertices without a class map price as
+    class 0.  This is the exact-equality oracle the class-mode batched
+    engine is property-tested against."""
+    g._finalize()
+    if g.n_vertices == 0:
+        return 0.0
+    alphas = np.asarray(alphas, dtype=np.float64)
+    cls = g.mem_class_column(len(alphas))
+    return _event_loop_classes(g.is_mem, g._sim_lists(), int(m), alphas,
+                               cls, float(unit), int(compute_slots))
 
 
 def simulate(g: EDag, m: int = 4, alpha: float = 200.0,
@@ -211,6 +325,26 @@ def _slot_qpred(rank: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
     qpred = np.full(n, n, dtype=np.int32)
     if len(O_mem) > m:
         qpred[rank[O_mem[m:]]] = rank[O_mem[:-m]]
+    if cs and len(O_alu) > cs:
+        qpred[rank[O_alu[cs:]]] = rank[O_alu[:-cs]]
+    return qpred
+
+
+def _prov_qpred(rank: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
+                prov: np.ndarray, m: int, cs: int, n: int) -> np.ndarray:
+    """Queue predecessors from recorded slot provenance (class mode).
+
+    With per-vertex service times the memory chain is no longer
+    ``O[j-m] -> O[j]``: job ``j``'s slot edge points at the job whose
+    finish was popped when ``j`` issued (``prov[j]``; -1 means an
+    initially-free slot, i.e. the zero sentinel).  The edge is always
+    topologically forward in pop order — the popped finish is strictly
+    below ``j``'s own (service times are positive past the degenerate
+    screen).  ALU jobs keep the homogeneous ``cs``-chain."""
+    qpred = np.full(n, n, dtype=np.int32)
+    has = np.nonzero(prov >= 0)[0]
+    if len(has):
+        qpred[rank[O_mem[has]]] = rank[O_mem[prov[has]]]
     if cs and len(O_alu) > cs:
         qpred[rank[O_alu[cs:]]] = rank[O_alu[:-cs]]
     return qpred
@@ -259,11 +393,14 @@ class _ReplayPlan:
     wrong evaluation order."""
 
     __slots__ = ("n", "m", "cs", "topo", "rank", "lv", "is_mem_topo",
-                 "O_mem", "O_alu", "Om_rel", "Oa_rel", "level_aug")
+                 "O_mem", "O_alu", "Om_rel", "Oa_rel", "level_aug",
+                 "prov", "cls_topo", "prov_ok", "t_chk", "need_chk")
 
     def __init__(self, g: EDag, topo: np.ndarray, O_mem: np.ndarray,
                  O_alu: np.ndarray, m: int, cs: int,
-                 level: Optional[np.ndarray] = None):
+                 level: Optional[np.ndarray] = None,
+                 prov: Optional[np.ndarray] = None,
+                 classes: Optional[np.ndarray] = None):
         n = g.n_vertices
         self.n, self.m, self.cs = n, m, cs
         # the recorded pop order (finish time, vid) is a linear extension
@@ -276,9 +413,40 @@ class _ReplayPlan:
         self.Oa_rel = rank[O_alu] if cs else np.zeros(0, dtype=np.int32)
         self.is_mem_topo = g.is_mem[topo]
 
+        # class mode: per-vertex class gather column (pop-order space) and
+        # the slot-provenance record plus its verification scaffolding
+        self.prov = prov
+        self.cls_topo = (np.ascontiguousarray(classes[topo])
+                         if classes is not None else None)
+        if prov is not None:
+            W = len(O_mem)
+            k0 = min(m, W)
+            # greedy pops the m initial zeros first (every finish is
+            # positive), then only real finishes — checked once per plan
+            self.prov_ok = bool(
+                (prov[:k0] == -1).all() and
+                (W <= k0 or ((prov[k0:] >= 0).all() and
+                             (prov[k0:] < np.arange(k0, W)).all())))
+            # pop_step[i] = issue step whose service popped i's finish
+            # (W if never popped); a finish sits in the slot heap from
+            # step i+1 through t_chk[i], so it must dominate the popped
+            # value at t_chk[i] (pops are nondecreasing per column)
+            pop_step = np.full(W, W, dtype=np.int64)
+            has = np.nonzero(prov >= 0)[0]
+            pop_step[prov[has]] = has
+            self.t_chk = np.minimum(pop_step - 1, W - 1)
+            self.need_chk = np.nonzero(
+                self.t_chk > np.arange(W))[0].astype(np.int64)
+        else:
+            self.prov_ok = True
+            self.t_chk = self.need_chk = None
+
         # queue predecessors point at the zero sentinel row n when absent
         # (a slot that is free at t=0)
-        qpred = _slot_qpred(rank, O_mem, O_alu, m, cs, n)
+        if prov is not None:
+            qpred = _prov_qpred(rank, O_mem, O_alu, prov, m, cs, n)
+        else:
+            qpred = _slot_qpred(rank, O_mem, O_alu, m, cs, n)
         src_r, dst_r = rank[g.src], rank[g.dst]
 
         qdst = np.nonzero(qpred < n)[0].astype(np.int32)
@@ -303,10 +471,19 @@ class _ReplayPlan:
         pass runs through ``backend.replay_accumulate`` under the dtype
         policy (x64 on device / error-bounded f32 with per-column
         demotion / numpy f64), so the returned matrices are always
-        bit-identical to the float64 numpy kernel."""
+        bit-identical to the float64 numpy kernel.
+
+        ``alphas`` may be 2-D ``(k, n_classes)`` on a class-mode plan:
+        each memory vertex then gathers its own class's alpha — one more
+        gather, same stacked kernel."""
         k = len(alphas)
         F = np.empty((self.n + 1, k))
-        F[:-1] = np.where(self.is_mem_topo[:, None], alphas[None, :], unit)
+        if alphas.ndim == 2:
+            F[:-1] = np.where(self.is_mem_topo[:, None],
+                              alphas.T[self.cls_topo], unit)
+        else:
+            F[:-1] = np.where(self.is_mem_topo[:, None],
+                              alphas[None, :], unit)
         F[-1] = 0.0
         R = np.zeros_like(F)
         _bk.replay_accumulate(self.lv, F, _bk.column_quanta(alphas, unit),
@@ -331,6 +508,10 @@ class _ReplayPlan:
                     elevel_ptr=lv.elevel_ptr)
         for name in ("qpred", "qonly_ptr", "qonly_dst"):
             a = getattr(lv, name, None)
+            if a is not None:
+                arrs[name] = a
+        for name in ("prov", "cls_topo", "t_chk", "need_chk"):
+            a = getattr(self, name)
             if a is not None:
                 arrs[name] = a
         return {k: int(np.asarray(v).nbytes) for k, v in arrs.items()}
@@ -395,6 +576,42 @@ def _verify_class(g: EDag, rank: np.ndarray, F: np.ndarray, R: np.ndarray,
             pair_ok = less.copy()
             pair_ok[tie] = np.where(eqt, tie_ok, less[tie])
     return pair_ok.all(axis=0)
+
+
+def _verify_slots(plan: _ReplayPlan, F: np.ndarray) -> np.ndarray:
+    """Check per point that the recorded slot provenance is a greedy
+    replace-min execution for this point's finish times (class mode).
+
+    Let ``Fo`` be the memory finishes in issue order and ``Vo[j]`` the
+    value provenance says was popped when job ``j`` issued (0 for an
+    initially-free slot).  The recorded pops are *the* greedy pops iff:
+    the m initial zeros pop first (structural, checked at plan build —
+    finishes are positive), ``Vo`` is nondecreasing (replace-min pops
+    never decrease: each pop is replaced by a strictly larger finish),
+    and no finish is skipped — every ``Fo[i]`` still in the heap at step
+    ``t`` dominates the popped ``Vo[t]``; with ``Vo`` nondecreasing it
+    suffices to check each finish against its last resident step
+    ``t_chk[i]``.  Ties are interchangeable: equal slot values yield the
+    same pop-value sequence whichever slot pops, and makespans depend
+    only on the values.  Combined with the ``(R, E, vid)`` issue-order
+    check this makes class-mode replay arithmetic bit-identical to
+    ``_event_loop_classes`` (same IEEE max/add per vertex)."""
+    k = F.shape[1]
+    W = len(plan.O_mem)
+    if W == 0:
+        return np.ones(k, dtype=bool)
+    if not plan.prov_ok:
+        return np.zeros(k, dtype=bool)
+    Fo = F[plan.Om_rel]                      # (W, k), issue order
+    Vo = np.zeros_like(Fo)
+    has = plan.prov >= 0
+    Vo[has] = Fo[plan.prov[has]]
+    ok = (np.diff(Vo, axis=0) >= 0).all(axis=0) if W > 1 \
+        else np.ones(k, dtype=bool)
+    nc = plan.need_chk
+    if len(nc):
+        ok &= (Fo[nc] >= Vo[plan.t_chk[nc]]).all(axis=0)
+    return ok
 
 
 def _replay_mem_budget(override: Optional[int] = None) -> int:
@@ -575,9 +792,21 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     (duplicates would waste replay columns and an unsorted first point
     would pick an arbitrary recording master); results always come back
     in caller order.
+
+    ``alphas`` may also be a 2-D ``(P, n_classes)`` matrix of
+    latency-class vectors (class mode): each point prices memory vertex
+    ``v`` at ``alphas[i, classes[v]]`` per the eDAG's
+    ``set_mem_classes`` overlay, and every point is bit-identical to
+    ``simulate_reference_classes`` — the class engine verifies the
+    recorded issue order *and* the recorded slot provenance per point.
     """
     g._finalize()
     alphas = np.asarray(alphas, dtype=np.float64)
+    if alphas.ndim == 2:
+        return _simulate_batch_classes(
+            g, alphas, int(m), float(unit), int(compute_slots),
+            backend=backend, mem_budget=mem_budget,
+            use_cache=use_cache, replay_dtype=replay_dtype)
     P = len(alphas)
     out = np.zeros(P)
     n = g.n_vertices
@@ -648,6 +877,96 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     return out
 
 
+def _simulate_batch_classes(g: EDag, alphas: np.ndarray, m: int,
+                            unit: float, cs: int,
+                            backend: Optional[str] = None,
+                            mem_budget: Optional[int] = None,
+                            use_cache: bool = True,
+                            replay_dtype: Optional[str] = None
+                            ) -> np.ndarray:
+    """Class-mode ``simulate_batch``: one recorded provenance schedule,
+    stacked class-vector replay, per-point order + slot verification.
+
+    Mirrors the scalar engine's structure (record → chunked replay →
+    verify → re-record stragglers) with two differences: the recording
+    runs ``_event_loop_classes`` (slot provenance instead of the
+    homogeneous chain) and plans are memoized in-process only, keyed by
+    the class overlay's digest — the on-disk schedule format carries no
+    provenance field, and the overlay is not part of the trace digest."""
+    P = len(alphas)
+    out = np.zeros(P)
+    n = g.n_vertices
+    if n == 0 or P == 0:
+        return out
+    cls = g.mem_class_column(alphas.shape[1])
+    sim_lists = g._sim_lists()
+    if m < 1 or unit <= 0 or not np.isfinite(unit) or \
+            (alphas <= 0).any() or not np.isfinite(alphas).all():
+        # degenerate machine models keep the reference semantics exactly
+        for i in range(P):
+            out[i] = _event_loop_classes(g.is_mem, sim_lists, m,
+                                         alphas[i], cls, unit, cs)
+        return out
+
+    uniq, inv = np.unique(alphas, axis=0, return_inverse=True)
+    if len(uniq) != P or not np.array_equal(uniq, alphas):
+        # dedupe + lexsort rows once, scatter back to caller order
+        return _simulate_batch_classes(
+            g, uniq, m, unit, cs, backend=backend, mem_budget=mem_budget,
+            use_cache=use_cache,
+            replay_dtype=replay_dtype)[np.asarray(inv).reshape(-1)]
+
+    remaining = np.arange(P)
+    key = ("classes", m, cs, float(unit), g.mem_class_digest())
+    plan = None
+    memo = getattr(g, "_replay_plans", None)
+    if use_cache and memo is not None and key in memo:
+        memo.move_to_end(key)
+        _sc.stats.add("memory_hits")
+        plan = memo[key]
+    mk0: Optional[float] = None
+    persist = use_cache and plan is None
+    while remaining.size:
+        reused = plan is not None and mk0 is None
+        if plan is None:
+            _sc.stats.add("record_runs")
+            t0 = time.perf_counter()
+            mk0, topo, O_mem, O_alu, prov = _event_loop_classes(
+                g.is_mem, sim_lists, m, alphas[remaining[0]], cls, unit,
+                cs, record=True)
+            plan = _ReplayPlan(g, topo, O_mem, O_alu, m, cs,
+                               prov=prov, classes=cls)
+            _sc.stats.add("record_seconds", time.perf_counter() - t0)
+            if persist:
+                _memo_plan(g, key, plan)
+            persist = False
+        ok = np.zeros(remaining.size, dtype=bool)
+        chunk = _points_chunk(n, remaining.size, mem_budget)
+        for c0 in range(0, remaining.size, chunk):
+            sel = remaining[c0:c0 + chunk]
+            F, R = plan.replay(alphas[sel], unit, backend=backend,
+                               replay_dtype=replay_dtype)
+            okc = _verify_class(g, plan.rank, F, R, plan.O_mem,
+                                plan.Om_rel)
+            okc &= _verify_slots(plan, F)
+            if cs:
+                okc &= _verify_class(g, plan.rank, F, R, plan.O_alu,
+                                     plan.Oa_rel)
+            mk = F.max(axis=0)
+            out[sel[okc]] = mk[okc]
+            ok[c0:c0 + chunk] = okc
+        if not ok[0] and mk0 is not None:
+            # the master's own schedule always certifies; if the check
+            # ever disagrees, trust its recorded makespan and progress
+            out[remaining[0]] = mk0
+            ok[0] = True
+        if reused and not ok.all():
+            persist = use_cache
+        remaining = remaining[~ok]
+        plan, mk0 = None, None
+    return out
+
+
 def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                   compute_slots: int = 0, batch: Optional[bool] = None,
                   backend: Optional[str] = None,
@@ -662,7 +981,11 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     results are bit-identical either way).  The batched path dedupes and
     sorts repeated/unsorted alphas internally and returns results in
     caller order; the reference loop stays a literal per-point replay (it
-    is the oracle the benchmarks time against)."""
+    is the oracle the benchmarks time against).
+
+    A 2-D ``(P, n_classes)`` alpha matrix sweeps latency-class vectors
+    against the eDAG's ``set_mem_classes`` overlay instead of scalar
+    alphas — same call shape, one makespan per row."""
     g._finalize()
     alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
     use_batch = (len(alphas) >= _MIN_BATCH_POINTS if batch is None
@@ -673,6 +996,11 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                               mem_budget=mem_budget, use_cache=use_cache,
                               replay_dtype=replay_dtype)
     sim_lists = g._sim_lists()   # shared: the sweep pays finalization once
+    if alphas.ndim == 2:
+        cls = g.mem_class_column(alphas.shape[1])
+        return np.array([_event_loop_classes(
+            g.is_mem, sim_lists, int(m), a, cls, float(unit),
+            int(compute_slots)) for a in alphas])
     return np.array([_event_loop(g.is_mem, sim_lists, int(m), float(a),
                                  float(unit), int(compute_slots))
                      for a in alphas])
@@ -703,6 +1031,10 @@ def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     serial recording run per value, paid once per process ever for
     cached traces.  Duplicate or unsorted alphas are deduped and sorted
     internally; the returned axis follows caller order.
+
+    A 2-D ``(P, n_classes)`` alpha matrix evaluates the class-vector ×
+    m × compute_slots grid (one class-mode recording per (m, slots)
+    pair); the first output axis then indexes the P class vectors.
     """
     g._finalize()
     alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)

@@ -163,6 +163,41 @@ def suite_axis_latency_grid(per_axis_by_step: Dict[str, Dict[str,
     return out
 
 
+def object_sensitivity(g, object_vertices: Dict[str, np.ndarray],
+                       m: int = 4,
+                       alpha: float = 1.0) -> Dict[str, AxisSensitivity]:
+    """Eq 3 per traced data object — the ranking key of the greedy
+    disaggregation placement (``placement.search_placement``).
+
+    The paper's axis trick at object granularity: object ``o``'s "memory
+    accesses" are its own mem vertices, so ``W_o`` is its access count,
+    ``D_o`` its chained depth (distinct levels of the one shared
+    ``mem_layers`` pass restricted to ``o``'s vertices — levels that
+    chain through *other* objects still count, which is exactly right:
+    they serialize ``o``'s accesses too), and ``lambda_o = (W_o-D_o)/m +
+    D_o`` approximates d(makespan)/d(alpha_o).  One level pass covers
+    every object; each table entry is a closed-form broadcast.
+
+    ``object_vertices`` maps object name -> vertex ids (e.g. from
+    ``placement.objects_from_edag``); non-mem ids are ignored.  ``alpha``
+    scales ``lam_seconds = lam * alpha`` (cycles here, not seconds —
+    the field name follows the fabric-axis table it shares)."""
+    g._finalize()
+    lay = g.mem_layers()
+    out: Dict[str, AxisSensitivity] = {}
+    for name, vids in object_vertices.items():
+        vids = np.asarray(vids, dtype=np.int64)
+        mem_v = vids[g.is_mem[vids]] if len(vids) else vids
+        W_o = int(len(mem_v))
+        D_o = int(len(np.unique(lay.level[mem_v]))) if W_o else 0
+        lam = lambda_abs(W_o, D_o, m) if W_o else 0.0
+        out[name] = AxisSensitivity(
+            axis=name, W=W_o, D=D_o,
+            bytes=float(g.nbytes[mem_v].sum()) if W_o else 0.0,
+            lam=lam, lam_seconds=lam * alpha)
+    return out
+
+
 def total_step_sensitivity(per_axis: Dict[str, AxisSensitivity],
                            step_seconds: float) -> dict:
     """Relative sensitivity per axis: Eq 4 with C = everything that is not

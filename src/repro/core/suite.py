@@ -168,19 +168,31 @@ def suite_t_inf_sweep(suite: EDagSuite, alphas, unit: float = 1.0,
     through ``backend.replay_accumulate``, so on the jax backend it is
     accelerator-resident under the replay dtype policy (error-bounded f32
     with per-column f64 demotion by default; exact x64 on opt-in) without
-    changing a bit of the result."""
+    changing a bit of the result.
+
+    A 2-D ``(P, n_classes)`` alpha matrix sweeps latency-class vectors:
+    each member's ``set_mem_classes`` overlay prices its own vertices
+    (class ids share one global space across the suite), via one
+    concatenated gather column over the union."""
     alphas = np.asarray(alphas, dtype=np.float64)
     suite._check_members()
     K = suite.n_traces
     if K == 0 or suite.n_vertices == 0 or len(alphas) == 0:
         return np.zeros((K, len(alphas)))
     u = suite.union
+    cls = (np.concatenate([g.mem_class_column(alphas.shape[1])
+                           for g in suite.members])
+           if alphas.ndim == 2 else None)
     chunk = _auto_sweep_chunk(u.n_vertices)
     lv = u._level_csr()
     out = []
     for i in range(0, len(alphas), chunk):
-        F = np.where(u.is_mem[:, None], alphas[None, i:i + chunk],
-                     float(unit))
+        if cls is not None:
+            F = np.where(u.is_mem[:, None], alphas[i:i + chunk].T[cls],
+                         float(unit))
+        else:
+            F = np.where(u.is_mem[:, None], alphas[None, i:i + chunk],
+                         float(unit))
         _bk.replay_accumulate(lv, F,
                               _bk.column_quanta(alphas[i:i + chunk], unit),
                               clamp=True, backend=backend,
@@ -518,6 +530,19 @@ def suite_sweep_grid(suite: EDagSuite, alphas, ms=(4,), compute_slots=(0,),
     if K == 0 or len(alphas) == 0:
         return out
     unit = float(unit)
+    if alphas.ndim == 2:
+        # class-vector grids run the per-member class engine: the union
+        # plan's block format carries the homogeneous slot chains, not
+        # the per-vertex provenance class mode records, and each
+        # member's class-mode batched replay is already one stacked
+        # (max,+) pass over its whole alpha axis — results are identical
+        # to evaluating the member alone by construction
+        for k, g in enumerate(suite.members):
+            out[k] = sweep_grid(g, alphas, ms=ms_l, compute_slots=css,
+                                unit=unit, backend=backend,
+                                mem_budget=mem_budget, use_cache=use_cache,
+                                replay_dtype=replay_dtype)
+        return out
     degenerate = (unit <= 0 or not np.isfinite(unit) or
                   (alphas <= 0).any() or not np.isfinite(alphas).all() or
                   min(ms_l, default=1) < 1)

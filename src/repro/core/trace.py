@@ -223,6 +223,7 @@ class Tracer:
         # §5.1); "lru" evicts the least recently touched value.
         self.spill_policy = spill_policy
         self._heap = 0x4000_0000
+        self._arrays: list = []          # TracedArrays, in allocation order
         self._curr_vs: dict = {}         # memory address -> last store vertex
         self._readers: dict = {}         # memory address -> reader vertices
         # bounded-register-file emulation state
@@ -237,10 +238,27 @@ class Tracer:
         return base
 
     def array(self, arr: np.ndarray, name: str = "") -> TracedArray:
-        return TracedArray(self, np.array(arr, copy=True), name)
+        ta = TracedArray(self, np.array(arr, copy=True), name)
+        self._arrays.append(ta)
+        return ta
 
     def zeros(self, shape, name: str = "", dtype=np.float64) -> TracedArray:
-        return TracedArray(self, np.zeros(shape, dtype=dtype), name)
+        ta = TracedArray(self, np.zeros(shape, dtype=dtype), name)
+        self._arrays.append(ta)
+        return ta
+
+    def object_sizes(self) -> dict:
+        """Footprint bytes per traced data object, by array name.
+
+        Same-named arrays (or repeated unnamed ones, which all land under
+        ``""``) accumulate — the footprint is what a placement decision
+        must fit into local capacity, so aliased names share one budget
+        entry.  This is the size table ``placement.objects_from_edag``
+        consumes; without it, object sizes fall back to traffic sums."""
+        sizes: dict = {}
+        for ta in self._arrays:
+            sizes[ta.name] = sizes.get(ta.name, 0) + int(ta.arr.nbytes)
+        return sizes
 
     # -------------------------------------------------------- register model
     def _touch(self, vid: int) -> int:

@@ -114,7 +114,16 @@ class AnalysisRequest:
     problem size ``n``, or ``"cg"`` for the HPCG conjugate-gradient
     solve on an ``n**3`` grid.  ``deadline_s`` / ``max_retries`` of
     ``None`` take the environment defaults at admission time.  Higher
-    ``priority`` requests are packed into union batches first."""
+    ``priority`` requests are packed into union batches first.
+
+    ``kind="placement"`` requests a disaggregation placement search
+    (:func:`core.placement.search_placement`) instead of a grid report:
+    ``alpha_local`` / ``alpha_remote`` give the latency pair,
+    ``local_budget`` the local-capacity byte budget, and the first
+    entries of ``ms`` / ``compute_slots`` the machine model.  Placement
+    requests inherit the full deadline / retry / demotion-ladder / fault
+    semantics but always run solo — the search is per-trace by nature,
+    so there is no union to poison."""
 
     trace: Optional[EDag] = None
     kernel: Optional[str] = None
@@ -129,6 +138,13 @@ class AnalysisRequest:
     max_retries: Optional[int] = None
     priority: int = 0
     name: Optional[str] = None
+    kind: str = "grid"
+    alpha_local: float = 1.0
+    alpha_remote: float = 200.0
+    local_budget: Optional[int] = None
+    local_budgets: Optional[Sequence[int]] = None
+    object_sizes: Optional[dict] = None
+    placement_method: str = "auto"
 
     def __post_init__(self):
         if (self.trace is None) == (self.kernel is None):
@@ -140,6 +156,16 @@ class AnalysisRequest:
         if self.max_retries is not None and self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got "
                              f"{self.max_retries!r}")
+        if self.kind not in ("grid", "placement"):
+            raise ValueError(f"kind must be 'grid' or 'placement', got "
+                             f"{self.kind!r}")
+        if self.kind == "placement":
+            if self.local_budget is None or self.local_budget < 0:
+                raise ValueError(
+                    "placement requests need local_budget >= 0 bytes")
+            if self.placement_method not in ("auto", "oracle", "greedy"):
+                raise ValueError(f"unknown placement_method "
+                                 f"{self.placement_method!r}")
 
 
 @dataclass
@@ -326,6 +352,13 @@ class AnalysisService:
         groups: Dict[tuple, List[_Pending]] = {}
         for p in loaded:
             r = p.req
+            if r.kind == "placement":
+                # a placement search is per-trace by nature (the class
+                # overlay is the trace's own objects), so it never joins
+                # a union batch — it runs solo right here, with the same
+                # deadline/retry/ladder semantics
+                self._execute_placement(p)
+                continue
             key = (tuple(r.ms), tuple(r.compute_slots), float(r.unit),
                    r.backend, r.replay_dtype)
             groups.setdefault(key, []).append(p)
@@ -530,6 +563,93 @@ class AnalysisService:
             self._fail_replay(p, exc)
             return
         self._finish(p, rep, None, alphas, policy, (p.rid,))
+
+    def _execute_placement(self, p: _Pending) -> None:
+        """Placement requests: one solo run of
+        :func:`core.placement.search_placement` under the request's
+        deadline, retry budget and the same demotion ladder as a grid
+        replay — the search replays candidate placements through the
+        class-vector engine, so an accelerator that stops certifying
+        demotes to jax f64 and then numpy like any other replay.
+        Terminal failures quarantine the trace and report through the
+        existing ``replay-error`` code: placement adds a fault *stage*,
+        not new error vocabulary."""
+        from ..core.placement import search_placement
+        r = p.req
+        ladder = _demotion_ladder(r.backend, r.replay_dtype)
+        failures = 0
+        while True:
+            try:
+                p.check_deadline()
+                bk, dt = ladder[min(failures, len(ladder) - 1)]
+                faults.check("placement", rid=p.rid)
+                rep = search_placement(
+                    p.g, r.alpha_local, r.alpha_remote, r.local_budget,
+                    sizes=r.object_sizes, budgets=r.local_budgets,
+                    m=int(r.ms[0]),
+                    compute_slots=int(r.compute_slots[0]),
+                    unit=float(r.unit), method=r.placement_method,
+                    backend=bk, replay_dtype=dt)
+                policy = {"backend": bk, "replay_dtype": dt,
+                          "demotions": failures}
+                break
+            except DeadlineExceeded as exc:
+                self._fail(p, "deadline", "placement", exc)
+                return
+            except Exception as exc:
+                if failures >= p.max_retries + len(ladder) - 1:
+                    if p.digest:
+                        self._quarantined.setdefault(
+                            p.digest,
+                            f"placement search failed after retries and "
+                            f"the demotion ladder ({exc!r})")
+                    self._fail(p, "replay-error", "placement", exc)
+                    return
+                failures += 1
+                p.retries += 1
+                if self.backoff_s > 0:
+                    time.sleep(min(self.backoff_s * 2 ** (failures - 1),
+                                   max(p.remaining(), 0.0)))
+        try:
+            report = self._retrying(
+                p, "report",
+                lambda attempt: self._placement_report(p, rep))
+        except Exception as exc:
+            self._fail(p, "report-error", "report", exc)
+            return
+        p.result = AnalysisResult(
+            rid=p.rid, ok=True, report=report, retries=p.retries,
+            policy=policy, elapsed_s=time.monotonic() - p.t0,
+            batch_rids=(p.rid,))
+        self._store(p)
+        p.event.set()
+
+    def _placement_report(self, p: _Pending, rep) -> dict:
+        """Flatten a :class:`~repro.core.placement.PlacementReport` into
+        the same JSON-serializable shape ``_store`` writes for grids."""
+        faults.check("report", rid=p.rid)
+        return {
+            "name": p.req.name or (p.req.kernel or f"r{p.rid}"),
+            "kind": "placement",
+            "method": rep.method,
+            "alpha_local": rep.alpha_local,
+            "alpha_remote": rep.alpha_remote,
+            "m": rep.m, "compute_slots": rep.compute_slots,
+            "unit": rep.unit,
+            "budget": rep.budget,
+            "local": list(rep.local),
+            "makespan": rep.makespan,
+            "all_local": rep.all_local,
+            "all_remote": rep.all_remote,
+            "budgets": np.asarray(rep.budgets),
+            "curve": np.asarray(rep.curve),
+            "curve_local": [list(t) for t in rep.curve_local],
+            "marginal": dict(rep.marginal),
+            "objects": [dict(name=o.name, nbytes=int(o.nbytes),
+                             traffic=int(o.traffic), lam=float(o.lam),
+                             n_accesses=o.n_accesses)
+                        for o in rep.objects],
+        }
 
     def _fail_replay(self, p: _Pending, exc) -> None:
         """Terminal replay failure: quarantine the trace (unless the

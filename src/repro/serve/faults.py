@@ -8,8 +8,8 @@ only claims until a fault actually fires.  This module makes faults
 property-tested rather than hoped-for:
 
 * **Stages** — every service pipeline stage is an injection point
-  (``load``, ``finalize``, ``schedule``, ``replay``, ``report``,
-  ``store``), plus two core hook points: ``kernel`` fires inside the jax
+  (``load``, ``finalize``, ``schedule``, ``replay``, ``placement``,
+  ``report``, ``store``), plus two core hook points: ``kernel`` fires inside the jax
   kernel path (``backend.fault_hook`` — exceptions there are swallowed
   by the backend's own best-effort dispatch, proving the in-kernel
   demotion ladder), and ``cache-load`` / ``cache-store`` fire inside the
@@ -58,8 +58,8 @@ from typing import List, Optional
 from ..core import backend as _bk
 from ..core import schedule_cache as _sc
 
-STAGES = ("load", "finalize", "schedule", "replay", "report", "store",
-          "kernel", "cache-load", "cache-store")
+STAGES = ("load", "finalize", "schedule", "replay", "placement", "report",
+          "store", "kernel", "cache-load", "cache-store")
 KINDS = ("io", "backend", "latency", "cache")
 _PARAMS = ("count", "every", "delay", "rid", "min_batch")
 

@@ -3,7 +3,8 @@
 The container image does not ship ``hypothesis`` and new packages cannot be
 installed, so ``conftest.py`` registers this module as ``hypothesis`` when the
 real one is missing.  It implements exactly the surface the test-suite uses —
-``settings`` profiles, ``given`` and the ``integers`` / ``floats`` / ``lists``
+``settings`` profiles (and the ``@settings(...)`` decorator form),
+``given`` and the ``integers`` / ``floats`` / ``lists`` / ``sampled_from``
 / ``composite`` strategies — with deterministic per-test seeding (no
 shrinking, no database).  When real hypothesis is available it is used
 instead.
@@ -25,6 +26,14 @@ class _Profile:
 class settings:  # noqa: N801 - mirrors hypothesis' lowercase class
     _profiles = {"default": _Profile()}
     _active = _profiles["default"]
+
+    def __init__(self, **kwargs):
+        # decorator form: @settings(max_examples=25, deadline=None)
+        self._kwargs = kwargs
+
+    def __call__(self, fn):
+        fn._stub_settings = self._kwargs
+        return fn
 
     @classmethod
     def register_profile(cls, name: str, **kwargs) -> None:
@@ -62,6 +71,12 @@ def _lists(elements, min_size=0, max_size=10):
     return SearchStrategy(sample)
 
 
+def _sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(len(elements)))])
+
+
 def _composite(fn):
     def factory(*args, **kwargs):
         def sample(rng):
@@ -74,6 +89,7 @@ strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.floats = _floats
 strategies.lists = _lists
+strategies.sampled_from = _sampled_from
 strategies.composite = _composite
 strategies.SearchStrategy = SearchStrategy
 
@@ -83,7 +99,9 @@ def given(*strats):
         seed0 = zlib.crc32(fn.__qualname__.encode())
 
         def wrapper():
-            for i in range(settings._active.max_examples):
+            n = getattr(wrapper, "_stub_settings", {}).get(
+                "max_examples", settings._active.max_examples)
+            for i in range(n):
                 rng = np.random.default_rng((seed0 + 7919 * i) & 0x7FFFFFFF)
                 fn(*(s.example_from(rng) for s in strats))
 

@@ -22,8 +22,9 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import EDag
+from repro.core import EDag, Tracer
 from repro.core.metrics import grid_report
+from repro.core.placement import search_placement
 from repro.core.scheduler import _REPLAY_BYTES_PER_CELL
 from repro.serve import (AnalysisRequest, AnalysisService, faults,
                          default_deadline_s, default_max_retries)
@@ -342,6 +343,138 @@ def test_env_defaults_applied_at_admission(monkeypatch):
     assert not res2.ok and res2.error["code"] == "replay-error"
 
 
+# --------------------------------------------------------------- placement
+
+def placement_trace(seed: int = 0, n_obj: int = 3, n_ops: int = 24):
+    """A deterministic multi-object trace (same seed => same digest)."""
+    rng = np.random.default_rng(seed)
+    tr = Tracer()
+    arrs = [tr.array(np.arange(8.0 * (i + 1)), f"obj{i}")
+            for i in range(n_obj)]
+    acc = tr.const(0.0)
+    for _ in range(n_ops):
+        a = arrs[rng.integers(n_obj)]
+        acc = tr.alu("+", acc, a.load(int(rng.integers(len(a.arr)))))
+        if rng.random() < 0.4:
+            b = arrs[rng.integers(n_obj)]
+            b.store(int(rng.integers(len(b.arr))), acc)
+    return tr.g, tr.object_sizes()
+
+
+def preq(seed: int = 0, **kw):
+    g, sizes = placement_trace(seed)
+    kw.setdefault("object_sizes", sizes)
+    kw.setdefault("local_budget", sum(sizes.values()) // 2)
+    return AnalysisRequest(trace=g, kind="placement", **kw)
+
+
+def assert_placement_reports_equal(a: dict, b: dict):
+    for key in ("method", "local", "makespan", "all_local", "all_remote",
+                "budget"):
+        assert a[key] == b[key], key
+    for key in ("budgets", "curve"):
+        assert np.array_equal(np.asarray(a[key]), np.asarray(b[key])), key
+
+
+def test_placement_request_matches_direct_search():
+    (res,) = svc().process([preq(0)])
+    assert res.ok and res.error is None and res.retries == 0
+    rep = res.report
+    assert rep["kind"] == "placement"
+    g, sizes = placement_trace(0)
+    want = search_placement(g, 1.0, 200.0, sum(sizes.values()) // 2,
+                            sizes=sizes, m=4, compute_slots=0)
+    assert rep["method"] == want.method
+    assert tuple(rep["local"]) == want.local
+    assert rep["makespan"] == want.makespan
+    assert rep["all_local"] == want.all_local
+    assert rep["all_remote"] == want.all_remote
+    assert np.array_equal(np.asarray(rep["budgets"]), want.budgets)
+    assert np.array_equal(np.asarray(rep["curve"]), want.curve)
+    assert set(rep["marginal"]) == set(want.marginal)
+
+
+def test_placement_runs_solo_in_a_mixed_wave():
+    """A placement request in a wave with grid requests never joins their
+    union batch, and the grid members' results stay bit-identical."""
+    refs = [svc().process([req(s)])[0].report for s in (0, 1)]
+    out = svc().process([req(0), preq(3), req(1)])
+    grid0, place, grid1 = out
+    assert all(r.ok for r in out)
+    assert place.batch_rids == (place.rid,)
+    assert place.report["kind"] == "placement"
+    assert_reports_equal(grid0.report, refs[0])
+    assert_reports_equal(grid1.report, refs[1])
+    # the two grid members still co-batched with each other
+    assert len(grid0.batch_rids) == 2 and len(grid1.batch_rids) == 2
+
+
+def test_transient_placement_fault_demotes_and_recovers():
+    faults.install("placement", "backend", count=1)
+    (res,) = svc().process([preq(0)])
+    assert res.ok and res.retries == 1
+    assert res.policy["demotions"] == 1
+    assert (res.policy["backend"], res.policy["replay_dtype"]) == \
+        ("jax", "float64")
+    faults.reset()
+    (clean,) = svc().process([preq(0)])
+    assert clean.policy["demotions"] == 0
+    assert_placement_reports_equal(res.report, clean.report)
+
+
+def test_hard_placement_fault_structured_and_quarantined():
+    faults.install("placement", "backend")       # hard: survives the ladder
+    service = svc()
+    (res,) = service.process([preq(7, max_retries=1)])
+    assert not res.ok
+    e = res.error
+    assert e["code"] == "replay-error" and e["stage"] == "placement"
+    assert set(e) == {"code", "stage", "message", "retries"}
+    # quarantine: the same trace digest fails fast on this service...
+    faults.reset()
+    (again,) = service.process([preq(7)])
+    assert not again.ok and again.error["code"] == "quarantined"
+    # ...but a fresh service has no memory of it
+    (fresh,) = svc().process([preq(7)])
+    assert fresh.ok
+
+
+def test_placement_deadline_checked_between_retries():
+    import time
+    faults.install("placement", "backend")
+    t0 = time.monotonic()
+    (res,) = svc(backoff_s=0.05).process(
+        [preq(0, deadline_s=0.2, max_retries=1000)])
+    assert not res.ok
+    assert res.error["code"] == "deadline"
+    assert res.error["stage"] == "placement"
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_placement_request_validation():
+    g, _ = placement_trace(0)
+    with pytest.raises(ValueError, match="local_budget"):
+        AnalysisRequest(trace=g, kind="placement")
+    with pytest.raises(ValueError, match="placement_method"):
+        AnalysisRequest(trace=g, kind="placement", local_budget=0,
+                        placement_method="magic")
+    with pytest.raises(ValueError, match="kind"):
+        AnalysisRequest(trace=g, kind="disaggregate")
+
+
+def test_placement_result_persisted_as_valid_json(tmp_path):
+    out_dir = tmp_path / "results"
+    (res,) = svc(results_dir=out_dir).process([preq(0)])
+    assert res.ok and res.stored is True
+    (f,) = sorted(out_dir.glob("result_*.json"))
+    doc = json.loads(f.read_text())
+    assert doc["rid"] == res.rid
+    assert doc["report"]["kind"] == "placement"
+    assert doc["report"]["makespan"] == res.report["makespan"]
+    assert doc["report"]["curve"] == \
+        np.asarray(res.report["curve"]).tolist()
+
+
 # ------------------------------------------------------ background admission
 
 def test_background_submit_and_run():
@@ -405,6 +538,9 @@ def test_service_survives_ambient_faults(monkeypatch):
         for s in (0, 1):                 # enough waves to reach every=K
             (solo,) = service.process([req(s, deadline_s=300.0)])
             assert solo.ok, solo.error
+        for s in (0, 1):                 # the placement stage, too
+            (place,) = service.process([preq(s, deadline_s=300.0)])
+            assert place.ok, place.error
         if AMBIENT_FAULTS:
             assert sum(faults.fire_log.values()) > 0   # it really fired
     finally:

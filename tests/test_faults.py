@@ -111,6 +111,24 @@ def test_latency_sleeps_and_returns():
     assert time.monotonic() - t0 >= 0.04
 
 
+def test_placement_stage_in_matrix():
+    """The placement search is a first-class fault stage: spec grammar,
+    scheduling and restrictions all apply to it."""
+    assert "placement" in faults.STAGES
+    (s,) = faults.parse_spec("placement:backend:every=2")
+    assert (s.stage, s.kind, s.every) == ("placement", "backend", 2)
+    faults.install("placement", "backend", count=1)
+    with pytest.raises(faults.InjectedBackendError):
+        faults.check("placement")
+    faults.check("placement")                 # transient is over
+    assert faults.fire_log[("placement", "backend")] == 1
+    faults.reset()
+    faults.install("placement", "io", rid=5)
+    faults.check("placement", rid=4)
+    with pytest.raises(faults.InjectedIOError):
+        faults.check("placement", rid=5)
+
+
 # -------------------------------------------------------------- environment
 
 def test_env_spec_armed_and_reparsed_on_change(monkeypatch):

@@ -1,0 +1,119 @@
+"""jaxpr frontend (core.jaxpr): array-granularity eDAGs of JAX programs.
+
+Pins the eDAG shape (vertex/edge counts, labels, costs, mem classification)
+and the trace digest of small jitted functions so the frontend's contract is
+load-bearing: any change to equation emission, scan unrolling or the
+mem-threshold rule shows up as a concrete diff here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edag_from_fn, report, simulate_reference_classes
+from repro.apps.polybench import JAX_KERNELS
+
+
+def dot_plus_one():
+    return edag_from_fn(lambda a, b: jnp.dot(a, b) + 1.0,
+                        jnp.ones((4, 8)), jnp.ones((8, 3)))
+
+
+def test_dot_plus_one_shape_and_costs():
+    """Two equations (dot_general, add), one SSA edge; dot costs 2*M*N*K
+    flops, the broadcast add one flop per output element."""
+    g = dot_plus_one()
+    dg = g.trace_digest()                      # also finalizes the arrays
+    assert (g.n_vertices, g.n_edges) == (2, 1)
+    assert g.labels() == ["dot_general", "add"]
+    assert g.is_mem.sum() == 2                 # threshold 0: every eqn is mem
+    assert list(g.cost) == [2.0 * 4 * 3 * 8, 4 * 3 * 1.0]
+    # dot touches (4*8 + 8*3 + 4*3) f32 elements; add reads+writes 4*3 + out
+    assert list(g.nbytes) == [(32 + 24 + 12) * 4.0, (12 + 12) * 4.0]
+    r = report(g)
+    assert (r.W, r.D) == (2, 2)
+    assert r.t1 == 192.0 + 12.0 + 196.0        # t1 folds mem stall at alpha0
+    assert len(dg) == 64
+
+
+def test_digest_stable_and_jit_transparent():
+    """Same program => same digest, across rebuilds and under jax.jit (the
+    pjit call is inlined, not emitted as an opaque vertex)."""
+    g = dot_plus_one()
+    assert dot_plus_one().trace_digest() == g.trace_digest()
+    gj = edag_from_fn(jax.jit(lambda a, b: jnp.dot(a, b) + 1.0),
+                      jnp.ones((4, 8)), jnp.ones((8, 3)))
+    assert (gj.n_vertices, gj.n_edges) == (2, 1)
+    assert gj.labels() == ["dot_general", "add"]
+    assert gj.trace_digest() == g.trace_digest()
+
+
+def test_mem_threshold_reclassifies_and_changes_digest():
+    """A huge threshold demotes every vertex to compute; the digest covers
+    the mem classification, so it must move."""
+    g = dot_plus_one()
+    gt = edag_from_fn(lambda a, b: jnp.dot(a, b) + 1.0,
+                      jnp.ones((4, 8)), jnp.ones((8, 3)),
+                      mem_threshold_bytes=1e9)
+    dt = gt.trace_digest()
+    assert gt.is_mem.sum() == 0
+    assert (gt.n_vertices, gt.n_edges) == (2, 1)
+    assert dt != g.trace_digest()
+
+
+def test_scan_unrolls_with_carry_depth():
+    """scan of length 10 with a (mul, add) body unrolls to a 20-vertex
+    carry chain — sequential-over-time structure becomes depth."""
+    def body(c, x):
+        c = c * 0.5 + x
+        return c, c
+
+    f = lambda xs: jax.lax.scan(body, jnp.float32(0.0), xs)
+    g = edag_from_fn(f, jnp.ones(10, jnp.float32))
+    g.trace_digest()
+    assert (g.n_vertices, g.n_edges) == (20, 19)
+    assert g.labels()[:2] == ["mul", "add"]
+    assert report(g).D == 20                   # pure chain: D == W
+
+    g4 = edag_from_fn(f, jnp.ones(10, jnp.float32), scan_unroll_limit=4)
+    g4.trace_digest()
+    assert (g4.n_vertices, g4.n_edges) == (8, 7)
+    assert report(g4).D == 8
+
+
+def test_polybench_jax_gemm_pinned():
+    N = 6
+    ones = jnp.ones((N, N))
+    g = edag_from_fn(JAX_KERNELS["gemm"], ones, ones, ones)
+    dg = g.trace_digest()
+    assert (g.n_vertices, g.n_edges) == (4, 3)
+    assert g.labels() == ["mul", "dot_general", "mul", "add"]
+    assert g.is_mem.sum() == 4
+    r = report(g)
+    assert (r.W, r.D) == (4, 3)                # the two muls are parallel
+    assert edag_from_fn(JAX_KERNELS["gemm"], ones, ones,
+                        ones).trace_digest() == dg
+
+
+def test_polybench_jax_atax_pinned():
+    g = edag_from_fn(JAX_KERNELS["atax"], jnp.ones((4, 6)), jnp.ones(6))
+    g.trace_digest()
+    assert (g.n_vertices, g.n_edges) == (3, 2)
+    assert g.labels() == ["transpose", "dot_general", "dot_general"]
+
+
+def test_jaxpr_edag_feeds_class_vector_replay():
+    """Frontier-to-backend smoke: a jaxpr-built eDAG accepts a class
+    overlay and replays through the class-vector engine; the collapsed
+    class vector is bit-identical to the scalar path."""
+    g = edag_from_fn(JAX_KERNELS["gemm"], jnp.ones((4, 4)),
+                     jnp.ones((4, 4)), jnp.ones((4, 4)))
+    g.trace_digest()
+    cls = (np.arange(g.n_vertices) % 2).astype(np.int32)
+    g.set_mem_classes(cls)
+    two = simulate_reference_classes(g, np.array([3.0, 50.0]), m=2)
+    flat = simulate_reference_classes(g, np.array([50.0, 50.0]), m=2)
+    g.set_mem_classes(None)
+    from repro.core import simulate_reference
+    assert flat == simulate_reference(g, m=2, alpha=50.0)
+    assert two < flat                          # half the verts got faster

@@ -1,0 +1,277 @@
+"""Disaggregation placement search (core.placement).
+
+The planner's contract, proved against exhaustive enumeration:
+
+* the oracle returns the true optimum — every subset of objects is
+  brute-force evaluated through the per-event class reference loop and
+  the oracle's choice matches the feasible minimum exactly;
+* greedy obeys its documented bound ``oracle <= greedy <= all_remote``
+  on every random trace and at every curve point;
+* every reported makespan is a verified replay result: a fresh
+  class-vector reference replay of the returned placement reproduces it
+  bit-exactly (never a model estimate).
+"""
+from itertools import combinations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Tracer, objects_from_edag, object_class_map,
+                        placement_rows, search_placement,
+                        simulate_reference_classes)
+from repro.core.placement import MAX_ORACLE_OBJECTS, PlacementObject
+
+
+def traced_objects(seed: int, n_obj: int = 3, n_ops: int = 20):
+    """A random multi-object trace: named arrays combined through random
+    load/ALU/store chains — the object-recovery path under test is the
+    label one the real tracer emits."""
+    rng = np.random.default_rng(seed)
+    tr = Tracer()
+    arrs = [tr.array(np.arange(4.0 * (i + 1)), f"obj{i}")
+            for i in range(n_obj)]
+    acc = tr.const(0.0)
+    for _ in range(n_ops):
+        a = arrs[rng.integers(n_obj)]
+        v = a.load(int(rng.integers(len(a.arr))))
+        if rng.random() < 0.5:
+            acc = tr.alu("+", acc, v)
+        if rng.random() < 0.4:
+            b = arrs[rng.integers(n_obj)]
+            b.store(int(rng.integers(len(b.arr))), acc)
+    return tr.g, tr.object_sizes()
+
+
+def brute_force_best(g, objects, alpha_local, alpha_remote, budget,
+                     m, compute_slots):
+    """Feasible minimum over ALL subsets via the per-event reference."""
+    names = [o.name for o in objects]
+    prev, prev_names = g.mem_classes, g.mem_class_names
+    g.set_mem_classes(object_class_map(g, objects), names=names)
+    try:
+        best = None
+        for r in range(len(objects) + 1):
+            for sub in combinations(range(len(objects)), r):
+                if sum(objects[i].nbytes for i in sub) > budget:
+                    continue
+                row = placement_rows(len(objects), [sub], alpha_local,
+                                     alpha_remote)[0]
+                mk = simulate_reference_classes(
+                    g, row, m=m, compute_slots=compute_slots)
+                if best is None or mk < best[1]:
+                    best = (sub, mk)
+        return best
+    finally:
+        g.set_mem_classes(prev, names=prev_names)
+
+
+# --------------------------------------------------------- object recovery
+
+def test_objects_from_edag_names_sizes_traffic():
+    g, sizes = traced_objects(0, n_obj=3)
+    objs = objects_from_edag(g, sizes=sizes)
+    assert [o.name for o in objs] == sorted(o.name for o in objs)
+    by_name = {o.name: o for o in objs}
+    for i in range(3):
+        o = by_name[f"obj{i}"]
+        assert o.nbytes == sizes[f"obj{i}"] == 4 * (i + 1) * 8
+        assert o.traffic == 8 * o.n_accesses      # 8-byte scalar accesses
+        assert o.n_accesses > 0
+    # without a sizes table, footprint falls back to traffic
+    fall = {o.name: o for o in objects_from_edag(g)}
+    for o in fall.values():
+        assert o.nbytes == o.traffic
+
+
+def test_object_sizes_accumulates_same_name():
+    tr = Tracer()
+    tr.array(np.zeros(4), "x")
+    tr.array(np.zeros(6), "x")
+    tr.array(np.zeros(2), "y")
+    assert tr.object_sizes() == {"x": 10 * 8, "y": 2 * 8}
+
+
+def test_object_class_map_and_rows():
+    g, _ = traced_objects(1, n_obj=2)
+    objs = objects_from_edag(g)
+    cls = object_class_map(g, objs)
+    assert cls.dtype == np.int32 and len(cls) == g.n_vertices
+    for i, o in enumerate(objs):
+        assert (cls[o.vertices] == i).all()
+    A = placement_rows(2, [(), (0,), (0, 1)], 1.0, 9.0)
+    assert np.array_equal(A, [[9.0, 9.0], [1.0, 9.0], [1.0, 1.0]])
+
+
+# ------------------------------------------------------ oracle == optimum
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4),
+       st.sampled_from([0.0, 0.35, 0.7, 1.0]))
+def test_oracle_matches_exhaustive_enumeration(seed, n_obj, bfrac):
+    """The oracle's chosen makespan equals the brute-force feasible
+    minimum over all 2^n subsets, and the report's makespan is exactly
+    a fresh reference replay of the chosen placement."""
+    g, sizes = traced_objects(seed, n_obj=n_obj)
+    objs = objects_from_edag(g, sizes=sizes)
+    total = sum(o.nbytes for o in objs)
+    budget = int(total * bfrac)
+    rep = search_placement(g, 1.0, 200.0, budget, objects=objs,
+                           m=2, method="oracle")
+    _, want_mk = brute_force_best(g, objs, 1.0, 200.0, budget, 2, 0)
+    assert rep.makespan == want_mk
+    # bit-identity: fresh replay of the returned placement
+    names = [o.name for o in objs]
+    loc = [names.index(nm) for nm in rep.local]
+    row = placement_rows(len(objs), [loc], 1.0, 200.0)[0]
+    g.set_mem_classes(object_class_map(g, objs), names=names)
+    assert simulate_reference_classes(g, row, m=2) == rep.makespan
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10 ** 6), st.integers(2, 5),
+       st.sampled_from([0.0, 0.35, 0.7, 1.0]))
+def test_greedy_within_documented_bound(seed, n_obj, bfrac):
+    """oracle <= greedy <= all_remote at the budget and along the curve,
+    and greedy's makespans are fresh-replay exact too."""
+    g, sizes = traced_objects(seed, n_obj=n_obj)
+    objs = objects_from_edag(g, sizes=sizes)
+    total = sum(o.nbytes for o in objs)
+    budget = int(total * bfrac)
+    greedy = search_placement(g, 1.0, 200.0, budget, objects=objs,
+                              m=2, method="greedy")
+    oracle = search_placement(g, 1.0, 200.0, budget, objects=objs,
+                              m=2, method="oracle")
+    assert oracle.makespan <= greedy.makespan <= greedy.all_remote
+    o_at = dict(zip(oracle.budgets.tolist(), oracle.curve.tolist()))
+    for b, mk in zip(greedy.budgets.tolist(), greedy.curve.tolist()):
+        if b in o_at:
+            assert o_at[b] <= mk <= greedy.all_remote
+    names = [o.name for o in objs]
+    loc = [names.index(nm) for nm in greedy.local]
+    row = placement_rows(len(objs), [loc], 1.0, 200.0)[0]
+    g.set_mem_classes(object_class_map(g, objs), names=names)
+    assert simulate_reference_classes(g, row, m=2) == greedy.makespan
+
+
+def test_curve_monotone_and_endpoints():
+    g, sizes = traced_objects(7, n_obj=4)
+    objs = objects_from_edag(g, sizes=sizes)
+    total = sum(o.nbytes for o in objs)
+    for method in ("oracle", "greedy"):
+        rep = search_placement(g, 1.0, 200.0, total, objects=objs,
+                               m=3, method=method)
+        assert (np.diff(rep.curve) <= 0).all()
+        assert rep.curve[0] == rep.all_remote       # budget 0: all remote
+        assert rep.curve[-1] == min(rep.all_local, rep.all_remote)
+        assert rep.budgets[0] == 0
+        assert set(rep.marginal) == {o.name for o in objs}
+        assert all(v >= 0 for v in rep.marginal.values())
+        rows = rep.rows()
+        assert len(rows) == len(rep.budgets)
+        assert rows[-1]["makespan"] == rep.curve[-1]
+
+
+def test_zero_budget_all_remote_and_big_budget_all_local():
+    g, sizes = traced_objects(11, n_obj=3)
+    objs = objects_from_edag(g, sizes=sizes)
+    rep0 = search_placement(g, 1.0, 200.0, 0, objects=objs)
+    assert rep0.local == () and rep0.makespan == rep0.all_remote
+    repN = search_placement(g, 1.0, 200.0, 10 ** 9, objects=objs)
+    assert set(repN.local) == {o.name for o in objs}
+    assert repN.makespan == repN.all_local <= rep0.makespan
+
+
+# ------------------------------------------------------- search mechanics
+
+def test_auto_method_switches_on_object_count():
+    g, sizes = traced_objects(13, n_obj=3)
+    objs = objects_from_edag(g, sizes=sizes)
+    assert search_placement(g, 1.0, 9.0, 0, objects=objs).method == \
+        "oracle"
+    assert search_placement(g, 1.0, 9.0, 0, objects=objs,
+                            max_oracle_objects=2).method == "greedy"
+    with pytest.raises(ValueError, match="oracle"):
+        search_placement(g, 1.0, 9.0, 0, objects=objs, method="oracle",
+                         max_oracle_objects=2)
+    assert MAX_ORACLE_OBJECTS == 8
+
+
+def test_overlay_saved_and_restored():
+    """The search must not clobber a caller's own class overlay."""
+    g, _ = traced_objects(17, n_obj=2)
+    mine = np.zeros(g.n_vertices, dtype=np.int32)
+    mine[g.n_vertices // 2:] = 1
+    g.set_mem_classes(mine, names=["lo", "hi"])
+    search_placement(g, 1.0, 200.0, 0)
+    assert np.array_equal(g.mem_classes, mine)
+    assert g.mem_class_names == ["lo", "hi"]
+    g.set_mem_classes(None)
+    search_placement(g, 1.0, 200.0, 0)
+    assert g.mem_classes is None
+
+
+def test_validation():
+    g, _ = traced_objects(19, n_obj=2)
+    with pytest.raises(ValueError, match="positive"):
+        search_placement(g, 0.0, 200.0, 0)
+    with pytest.raises(ValueError, match="positive"):
+        search_placement(g, 1.0, np.inf, 0)
+    with pytest.raises(ValueError, match="budget"):
+        search_placement(g, 1.0, 200.0, -1)
+    with pytest.raises(ValueError, match="method"):
+        search_placement(g, 1.0, 200.0, 0, method="magic")
+    with pytest.raises(ValueError, match="budgets"):
+        search_placement(g, 1.0, 200.0, 0, budgets=[-5, 0])
+
+
+def test_lambda_ranking_fills_objects():
+    """Greedy ranking fills per-object Eq 3 lambda; a hot object (many
+    accesses) outranks a cold one of equal size."""
+    tr = Tracer()
+    hot = tr.array(np.zeros(4), "hot")
+    cold = tr.array(np.zeros(4), "cold")
+    acc = tr.const(0.0)
+    for _ in range(10):
+        acc = tr.alu("+", acc, hot.load(0))
+    acc = tr.alu("+", acc, cold.load(0))
+    g = tr.g
+    objs = objects_from_edag(g, sizes=tr.object_sizes())
+    rep = search_placement(g, 1.0, 200.0, 4 * 8, objects=objs, m=2,
+                           method="greedy")
+    by_name = {o.name: o for o in rep.objects}
+    assert by_name["hot"].lam > by_name["cold"].lam
+    assert rep.local == ("hot",)
+
+
+def test_anonymous_mem_vertices_group_under_anon():
+    from repro.core import EDag
+    g = EDag()
+    g.add_vertex(is_mem=True, nbytes=8.0)            # no ld/st label
+    g.add_vertex(is_mem=False)
+    (o,) = objects_from_edag(g)
+    assert o.name == "<anon>" and o.n_accesses == 1
+    rep = search_placement(g, 1.0, 200.0, 8)
+    assert rep.local == ("<anon>",) and rep.makespan == rep.all_local
+
+
+def test_no_memory_objects_degenerates_cleanly():
+    """A trace with no memory vertices has nothing to place: the search
+    returns the compute-only makespan with an empty placement rather
+    than raising."""
+    from repro.core import EDag
+    g = EDag()
+    g.add_vertex(is_mem=False)
+    g.add_vertex(is_mem=False)
+    g.add_edge(0, 1)
+    assert objects_from_edag(g) == []
+    rep = search_placement(g, 1.0, 9.0, 0)
+    assert rep.local == () and rep.marginal == {}
+    assert rep.makespan == rep.all_local == rep.all_remote
+    assert rep.curve.tolist() == [rep.makespan]
+
+
+def test_placement_object_dataclass():
+    o = PlacementObject(name="x", vertices=np.array([1, 2, 3]),
+                        nbytes=24, traffic=24)
+    assert o.n_accesses == 3

@@ -347,6 +347,123 @@ def test_f32_policy_with_x64_flag_already_on_runs_f64_device():
         jax.config.update("jax_enable_x64", was)
 
 
+# --------------------------------------- per-vertex latency classes on device
+
+def _class_edag(seed: int, n: int = 60, C: int = 3) -> EDag:
+    g = _random_edag(seed, n=n)
+    rng = np.random.default_rng(seed + 1)
+    g.set_mem_classes(rng.integers(0, C, size=g.n_vertices,
+                                   dtype=np.int32))
+    return g
+
+
+def test_class_vector_f32_certified_bit_identical(x64_off):
+    """Clean per-class alpha rows certify on device and come back
+    bit-identical to the per-event class reference — the f32 certificate
+    applies per replay column, and a class row is just a column."""
+    from repro.core import simulate_reference_classes
+
+    g = _class_edag(41)
+    rng = np.random.default_rng(5)
+    alphas = rng.choice(np.array(CLEAN_ALPHAS), size=(4, 3))
+    want = np.array([simulate_reference_classes(g, row, m=3,
+                                                compute_slots=2)
+                     for row in alphas])
+    bk.reset_stats()
+    got = simulate_batch(g, alphas, m=3, compute_slots=2, backend="jax",
+                         use_cache=False)
+    assert np.array_equal(got, want)
+    assert bk.stats["jax_chunks"] == bk.stats["chunks"] > 0
+    assert bk.stats["demoted_columns"] == 0
+
+
+def test_class_vector_x64_mode_bit_identical():
+    """replay_dtype="float64" runs class rows exactly on device — dirty
+    per-class alphas included."""
+    from repro.core import simulate_reference_classes
+
+    was = bool(jax.config.jax_enable_x64)
+    jax.config.update("jax_enable_x64", False)
+    try:
+        g = _class_edag(43)
+        alphas = np.array([[0.1, 50.0, 1.0 / 3.0],
+                           [333.333, 0.1, 75.0]])
+        want = np.array([simulate_reference_classes(g, row, m=2)
+                         for row in alphas])
+        bk.reset_stats()
+        got = simulate_batch(g, alphas, m=2, backend="jax",
+                             replay_dtype="float64", use_cache=False)
+        assert np.array_equal(got, want)
+        assert bk.stats["jax_f64_chunks"] == bk.stats["chunks"] > 0
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+@st.composite
+def class_drift_cases(draw):
+    """Random class overlays with adversarial (mostly dirty) alpha rows."""
+    n = draw(st.integers(5, 50))
+    seed = draw(st.integers(0, 2 ** 31))
+    rng = np.random.default_rng(seed)
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < 0.6))
+        for j in range(i):
+            if rng.random() < 0.12:
+                g.add_edge(j, i)
+    C = draw(st.integers(1, 3))
+    g._finalize()
+    g.set_mem_classes(rng.integers(0, C, size=n, dtype=np.int32))
+    m = draw(st.integers(1, 4))
+    cs = draw(st.integers(0, 3))
+    alphas = rng.choice(np.array(DIRTY_ALPHAS + CLEAN_ALPHAS),
+                        size=(3, C))
+    return g, m, cs, alphas
+
+
+@given(class_drift_cases())
+def test_class_vector_demotion_property_both_backends(case):
+    """Satellite contract, class edition: adversarial class rows whose
+    f32 replay drifts are detected and produce bit-identical f64
+    results on both backends — and collapsed (all-classes-equal) rows
+    stay bit-identical to the scalar path under the same policies."""
+    from repro.core import simulate_reference_classes
+
+    g, m, cs, alphas = case
+    was = bool(jax.config.jax_enable_x64)
+    jax.config.update("jax_enable_x64", False)
+    try:
+        want = np.array([simulate_reference_classes(g, row, m=m,
+                                                    compute_slots=cs)
+                         for row in alphas])
+        flat = np.repeat(alphas[:, :1], alphas.shape[1], axis=1)
+        for backend in ("numpy", "jax"):
+            got = simulate_batch(g, alphas, m=m, compute_slots=cs,
+                                 backend=backend, use_cache=False)
+            assert np.array_equal(got, want), backend
+            coll = simulate_batch(g, flat, m=m, compute_slots=cs,
+                                  backend=backend, use_cache=False)
+            scal = simulate_batch(g, flat[:, 0], m=m, compute_slots=cs,
+                                  backend=backend, use_cache=False)
+            assert np.array_equal(coll, scal), backend
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def test_column_quanta_class_rows():
+    """2-D alpha grids get one quantum per row: the min over the row's
+    per-class quanta (a row certifies only if its coarsest-safe quantum
+    divides every class alpha)."""
+    A = np.array([[200.0, 50.0],
+                  [0.1, 50.0]])
+    q = column_quanta(A, 1.0)
+    assert q.shape == (2,)
+    assert q[0] == 1.0
+    assert 0 < q[1] < 1e-15
+    assert np.array_equal(
+        column_quanta(np.array([[200.0, 200.0]]), 8.0), [8.0])
+
+
 # -------------------------------------------------------- jit cache bound
 
 def test_jax_jit_cache_is_bounded_lru(monkeypatch, x64_off):

@@ -363,6 +363,167 @@ def test_sweep_grid_unsorted_duplicate_alphas():
                     g, m=m, alpha=a, compute_slots=cs)
 
 
+# --------------------------------------------- per-vertex latency classes
+
+@st.composite
+def class_cases(draw):
+    """Random tie-heavy DAG + random class overlay + (P, C) alpha-row
+    grid — the adversarial case for the slot-provenance verification
+    (small-integer alphas make pop-order ties plentiful)."""
+    n = draw(st.integers(1, 60))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < 0.5), nbytes=8.0)
+        for j in range(i):
+            if rng.random() < 0.12:
+                g.add_edge(j, i)
+    C = draw(st.integers(1, 3))
+    g._finalize()
+    g.set_mem_classes(rng.integers(0, C, size=g.n_vertices,
+                                   dtype=np.int32))
+    m = draw(st.integers(1, 4))
+    cs = draw(st.integers(0, 3))
+    P = draw(st.integers(1, 5))
+    palette = np.array([0.5, 1.0, 2.0, 3.0, 50.0, 200.0, 333.25])
+    alphas = rng.choice(palette, size=(P, C))
+    return g, m, cs, alphas
+
+
+@given(class_cases())
+def test_class_batch_matches_reference_exactly(case):
+    """Class-vector simulate_batch is bit-identical to the per-event
+    class reference loop at every alpha row."""
+    from repro.core import simulate_reference_classes
+
+    g, m, cs, alphas = case
+    got = simulate_batch(g, alphas, m=m, compute_slots=cs)
+    want = np.array([simulate_reference_classes(g, row, m=m,
+                                                compute_slots=cs)
+                     for row in alphas])
+    assert np.array_equal(got, want)
+
+
+@given(class_cases())
+def test_class_collapse_differential(case):
+    """THE collapse property: when every class shares one alpha, the
+    class-vector path is bit-identical to the scalar path — engine,
+    reference loop, and per-point scalar reference all agree."""
+    from repro.core import simulate_reference_classes
+
+    g, m, cs, alphas = case
+    flat = np.repeat(alphas[:, :1], alphas.shape[1], axis=1)
+    got = simulate_batch(g, flat, m=m, compute_slots=cs)
+    scalar = simulate_batch(g, flat[:, 0], m=m, compute_slots=cs)
+    assert np.array_equal(got, scalar)
+    for row, want in zip(flat, scalar):
+        assert simulate_reference_classes(g, row, m=m,
+                                          compute_slots=cs) == want
+        assert simulate_reference(g, m=m, alpha=float(row[0]),
+                                  compute_slots=cs) == want
+
+
+@given(class_cases())
+def test_class_sweep_grid_and_latency_sweep(case):
+    """2-D grids thread through sweep_grid / latency_sweep unchanged:
+    every (row, m, cs) point equals the per-event class reference, and
+    the batch=False path agrees bitwise."""
+    from repro.core import simulate_reference_classes
+
+    g, m, cs, alphas = case
+    ms, css = sorted({1, m}), sorted({0, cs})
+    grid = sweep_grid(g, alphas, ms=ms, compute_slots=css)
+    assert grid.shape == (len(alphas), len(ms), len(css))
+    for i, row in enumerate(alphas):
+        for j, mm in enumerate(ms):
+            for l, ccs in enumerate(css):
+                assert grid[i, j, l] == simulate_reference_classes(
+                    g, row, m=mm, compute_slots=ccs), (i, mm, ccs)
+    assert np.array_equal(
+        latency_sweep(g, alphas, m=m, compute_slots=cs),
+        latency_sweep(g, alphas, m=m, compute_slots=cs, batch=False))
+
+
+def test_class_degenerate_rows_keep_reference_semantics():
+    """Rows containing non-positive or non-finite alphas route through
+    the per-event class loop, like the scalar degenerate screen."""
+    from repro.core import simulate_reference_classes
+
+    g = EDag()
+    a = g.add_vertex(is_mem=True)
+    b = g.add_vertex(is_mem=True)
+    c = g.add_vertex(is_mem=False)
+    g.add_edge(a, c)
+    g._finalize()
+    g.set_mem_classes(np.array([0, 1, 0], dtype=np.int32))
+    alphas = np.array([[0.0, 50.0], [50.0, -1.0], [2.0, 3.0]])
+    got = simulate_batch(g, alphas, m=2)
+    want = np.array([simulate_reference_classes(g, row, m=2)
+                     for row in alphas])
+    assert np.array_equal(got, want)
+
+
+def test_class_overlay_changes_makespan_and_digest():
+    """A non-uniform overlay actually prices classes differently, and
+    the class digest keys plan memoization correctly (overlay change =>
+    digest change; clearing restores the scalar digest)."""
+    g = _tie_graph(seed=23)
+    g._finalize()
+    assert g.mem_class_digest() == "scalar"
+    cls = (np.arange(g.n_vertices) % 2).astype(np.int32)
+    g.set_mem_classes(cls)
+    d1 = g.mem_class_digest()
+    assert d1 != "scalar"
+    fast_slow = simulate_batch(g, np.array([[1.0, 500.0]]), m=2)[0]
+    slow_fast = simulate_batch(g, np.array([[500.0, 1.0]]), m=2)[0]
+    uniform = simulate_batch(g, np.array([500.0]), m=2)[0]
+    assert fast_slow < uniform and slow_fast < uniform
+    g.set_mem_classes(None)
+    assert g.mem_class_digest() == "scalar"
+    assert simulate_batch(g, np.array([500.0]), m=2)[0] == uniform
+
+
+def test_class_column_validation():
+    g = _tie_graph(seed=29)
+    g._finalize()
+    with pytest.raises(ValueError):
+        g.set_mem_classes(np.zeros(3, dtype=np.int32))   # wrong length
+    with pytest.raises(ValueError):
+        g.set_mem_classes(-np.ones(g.n_vertices, dtype=np.int32))
+    g.set_mem_classes(np.full(g.n_vertices, 2, dtype=np.int32))
+    with pytest.raises(ValueError):
+        g.mem_class_column(2)          # class id 2 needs >= 3 classes
+    assert g.mem_class_column(3).max() == 2
+
+
+def test_class_grid_report_brackets_and_prices_exactly():
+    """grid_report on 2-D class rows: simulated/t_inf price each vertex
+    by its own class exactly, while the Eq 1-2 bounds from each row's
+    extreme alphas bracket the simulated makespan."""
+    from repro.core import simulate_reference_classes, t_inf_sweep
+
+    g = _tie_graph(seed=31)
+    g._finalize()
+    g.set_mem_classes((np.arange(g.n_vertices) % 2).astype(np.int32))
+    rows = np.array([[30.0, 400.0], [400.0, 30.0], [120.0, 120.0]])
+    ms, css = [2, 4], [0]
+    rep = grid_report(g, rows, ms=ms, compute_slots=css,
+                      simulate_points=True)
+    assert rep["simulated"].shape == (len(rows), len(ms), len(css))
+    for i, row in enumerate(rows):
+        for j, m in enumerate(ms):
+            sim = rep["simulated"][i, j, 0]
+            assert sim == simulate_reference_classes(g, row, m=m)
+            assert rep["t_lower"][i, j] <= sim <= rep["t_upper"][i, j]
+    assert np.array_equal(rep["t_inf"], t_inf_sweep(g, rows))
+    # the uniform row collapses: bounds equal the scalar report's
+    flat = grid_report(g, np.array([120.0]), ms=ms)
+    assert np.array_equal(rep["t_lower"][2], flat["t_lower"][0])
+    assert np.array_equal(rep["t_upper"][2], flat["t_upper"][0])
+    assert np.array_equal(rep["Lam"][2], flat["Lam"][0])
+    g.set_mem_classes(None)
+
+
 # ------------------------------------------------- fig10-13 seed regression
 
 def _force_reference_engine(monkeypatch):

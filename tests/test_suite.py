@@ -342,6 +342,35 @@ def test_suite_grid_report_matches_member_grid_reports():
         assert np.array_equal(rep["simulated"][k], r1["simulated"])
 
 
+def test_suite_class_vector_grid_matches_members_and_reference():
+    """Class-vector (2-D alpha) grids through the suite entry points:
+    every per-trace slice equals the single-trace class engine and the
+    per-event class reference; members keep their own overlays."""
+    from repro.core import simulate_reference_classes
+    members = [rand_edag(61, 35), rand_edag(62, 20), rand_edag(63, 0)]
+    for k, g in enumerate(members):
+        rng = np.random.default_rng(100 + k)
+        g.set_mem_classes(rng.integers(0, 2, size=g.n_vertices,
+                                       dtype=np.int32))
+    suite = EDagSuite(members)
+    rows = np.array([[40.0, 300.0], [300.0, 300.0], [120.0, 60.0]])
+    ms, css = [1, 3], [0, 2]
+    got = suite_sweep_grid(suite, rows, ms=ms, compute_slots=css)
+    assert got.shape == (3, len(rows), len(ms), len(css))
+    for k, g in enumerate(suite.members):
+        assert np.array_equal(
+            got[k], sweep_grid(g, rows, ms=ms, compute_slots=css))
+        for p, row in enumerate(rows):
+            assert got[k, p, 1, 0] == simulate_reference_classes(
+                g, row, m=3)
+    tinf = suite_t_inf_sweep(suite, rows)
+    assert tinf.shape == (3, len(rows))
+    for k, g in enumerate(suite.members):
+        assert np.array_equal(tinf[k], t_inf_sweep(g, rows))
+    for g in members:
+        g.set_mem_classes(None)
+
+
 def test_suite_axis_latency_grid_matches_per_step():
     from repro.core import (AxisSensitivity, axis_latency_grid, lambda_abs,
                             suite_axis_latency_grid)
