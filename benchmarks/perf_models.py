@@ -1,0 +1,214 @@
+"""Model-zoo latency-sensitivity benchmark: the EDAN method on LLM
+workloads (ROADMAP item 2's deliverable).
+
+Two deliverables, both written to the ``models`` section of
+``BENCH_sim.json`` and printed fig/table-style:
+
+* **MLP vs attention vs SSM memory-level parallelism** — isolated
+  component blocks at matched width traced to eDAGs, Eq 1–4 per block
+  (W, D, lambda at several m) plus the simulated latency-sensitivity
+  curve over alpha.  This is the paper's question asked of the three
+  block kinds that define 2026 LLMs.
+
+* **Model-zoo grids** — one config per family (dense / moe / ssm /
+  hybrid / encdec / vlm) traced for prefill, decode and a train step,
+  each run through the full alpha × m grid, with a compiled-HLO
+  flop/HBM roofline companion per prefill trace and a placement search
+  over a decode step.
+
+Gates run inside the bench, not after it:
+
+* **suite-vs-solo bit-identity** — every phase's family set is also run
+  as ONE union ``suite_grid_report``; every per-trace field of every
+  grid row must equal the solo ``grid_report`` bit-for-bit (the repo's
+  standing fast-path invariant, now holding for jaxpr model traces);
+* **sensitivity sanity** — every simulated latency curve is
+  non-decreasing in alpha and every trace shows real memory-level
+  parallelism (W > D, so the m axis has room to help).
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_models [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import grid_report, suite_grid_report
+from repro.core.suite import EDagSuite
+from repro.models import tracing
+
+ALPHAS = (1.0, 4.0, 16.0, 64.0, 256.0, 1024.0)
+MS = (1, 4, 16)
+SLOTS = (0,)
+PER_TRACE_KEYS = ("W", "D", "C", "lam", "t_inf", "t_lower", "t_upper",
+                  "Lam", "simulated")
+
+
+def _report_row(name: str, g, rep: dict) -> dict:
+    """Flatten one grid report into a JSON-ready bench row."""
+    W, D = float(rep["W"]), float(rep["D"])
+    sim = np.asarray(rep["simulated"])           # (n_alphas, n_ms, n_slots)
+    curves = {f"m={m}": sim[:, j, 0].tolist() for j, m in enumerate(MS)}
+    # sensitivity: how much the worst alpha hurts vs the best, per m —
+    # the paper's question as one number per machine width
+    sens = {f"m={m}": float(sim[-1, j, 0] / sim[0, j, 0])
+            for j, m in enumerate(MS)}
+    assert W > D > 0, f"{name}: no memory-level parallelism (W={W}, D={D})"
+    assert (np.diff(sim, axis=0) >= 0).all(), \
+        f"{name}: simulated makespan decreased with alpha"
+    return dict(name=name, n_vertices=int(g.n_vertices),
+                n_edges=int(g.n_edges), W=W, D=D, C=float(rep["C"]),
+                lam={f"m={m}": float(np.asarray(rep["lam"])[j])
+                     for j, m in enumerate(MS)},
+                curves=curves, sensitivity=sens)
+
+
+def bench_components() -> list:
+    """Eq 1–4 for isolated MLP / attention / SSM blocks at matched width."""
+    rows = []
+    for kind in tracing.COMPONENTS:
+        g = tracing.trace_component(kind)
+        rep = grid_report(g, list(ALPHAS), ms=MS, compute_slots=SLOTS,
+                          simulate_points=True)
+        rows.append(_report_row(kind, g, rep))
+    return rows
+
+
+def bench_phase(phase: str, families: list, seq_len: int) -> dict:
+    """All families of one phase: solo grids, then the union suite, with
+    every per-trace field asserted bit-identical."""
+    names = [tracing.ZOO[f] for f in families]
+    traces = [tracing.trace_model(n, phase, seq_len=seq_len,
+                                  use_store=False) for n in names]
+    t0 = time.perf_counter()
+    solos = [grid_report(g, list(ALPHAS), ms=MS, compute_slots=SLOTS,
+                         simulate_points=True) for g in traces]
+    solo_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    suite = EDagSuite(traces, names=names)
+    srep = suite_grid_report(suite, list(ALPHAS), ms=MS,
+                             compute_slots=SLOTS, simulate_points=True)
+    suite_s = time.perf_counter() - t0
+    verified = 0
+    for k, solo in enumerate(solos):
+        for key in PER_TRACE_KEYS:
+            a = np.asarray(solo[key])
+            b = np.asarray(srep[key])[k]
+            assert np.array_equal(a, b), \
+                f"{names[k]}/{phase}: suite {key} differs from solo"
+            verified += 1
+    rows = [_report_row(f"{n}:{phase}", g, solo)
+            for n, g, solo in zip(names, traces, solos)]
+    return dict(phase=phase, rows=rows, verified_fields=verified,
+                solo_s=solo_s, suite_s=suite_s,
+                suite_speedup=solo_s / max(suite_s, 1e-12))
+
+
+def bench_placement(name: str, seq_len: int) -> dict:
+    """Placement search over a model decode step via primitive-label
+    objects — DOLMA-style planning on a real model trace."""
+    from repro.core.placement import search_placement
+    g = tracing.trace_model(name, "decode", seq_len=seq_len,
+                            use_store=False)
+    objs = tracing.model_objects(g)
+    total = sum(o.nbytes for o in objs)
+    rep = search_placement(g, alpha_local=1.0, alpha_remote=200.0,
+                           budget=total // 2, objects=objs, m=4)
+    assert rep.all_local <= rep.makespan <= rep.all_remote
+    return dict(name=name, n_objects=len(objs),
+                footprint_bytes=int(total), budget=int(total // 2),
+                method=rep.method, makespan=float(rep.makespan),
+                all_local=float(rep.all_local),
+                all_remote=float(rep.all_remote),
+                local=list(rep.local), curve=rep.rows())
+
+
+def run(smoke: bool = False) -> dict:
+    families = (["dense", "ssm"] if smoke else list(tracing.ZOO))
+    phases = (("prefill", "decode") if smoke
+              else ("prefill", "decode", "train"))
+    seq_len = 32
+    components = bench_components()
+    zoo = [bench_phase(ph, families, seq_len) for ph in phases]
+    hlo = {}
+    for fam in (["dense"] if smoke else families):
+        n = tracing.ZOO[fam]
+        hlo[n] = tracing.model_hlo_summary(n, "prefill", seq_len=seq_len)
+    placement = bench_placement(tracing.ZOO["dense"], seq_len)
+    n_rows = sum(len(z["rows"]) for z in zoo)
+    if not smoke:
+        assert len(families) >= 5, "full run must cover >= 5 families"
+    return dict(
+        components=components, zoo=zoo, hlo_roofline=hlo,
+        placement=placement,
+        families=[tracing.ZOO[f] for f in families],
+        n_families=len(families), n_rows=n_rows,
+        verified_fields=sum(z["verified_fields"] for z in zoo),
+        bitexact=True,
+        config=dict(alphas=list(ALPHAS), ms=list(MS), slots=list(SLOTS),
+                    seq_len=seq_len, batch_size=2, reduced=True,
+                    smoke=smoke))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 families, 2 phases for CI wall-clock")
+    ap.add_argument("--out-sim", default="BENCH_sim.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+
+    print("# MLP vs attention vs SSM (Eq 1-4, matched width):")
+    print("kind,W,D,lam@m1,lam@m4,lam@m16,sens@m4")
+    for r in res["components"]:
+        print(f"{r['name']},{r['W']:.0f},{r['D']:.0f},"
+              f"{r['lam']['m=1']:.0f},{r['lam']['m=4']:.1f},"
+              f"{r['lam']['m=16']:.1f},{r['sensitivity']['m=4']:.1f}x")
+    print("# latency-sensitivity curves (simulated makespan @ m=4, "
+          f"alpha={list(ALPHAS)}):")
+    for r in res["components"]:
+        pts = ", ".join(f"{v:.0f}" for v in r["curves"]["m=4"])
+        print(f"#   {r['name']:10s} [{pts}]")
+
+    print("# model zoo (one config per family):")
+    print("trace,V,W,D,lam@m4,sens@m4")
+    for z in res["zoo"]:
+        for r in z["rows"]:
+            print(f"{r['name']},{r['n_vertices']},{r['W']:.0f},"
+                  f"{r['D']:.0f},{r['lam']['m=4']:.1f},"
+                  f"{r['sensitivity']['m=4']:.1f}x")
+        print(f"# {z['phase']}: {z['verified_fields']} suite-vs-solo "
+              f"fields bit-identical; union pass {z['suite_speedup']:.1f}x "
+              f"vs the solo loop")
+    print("# compiled-HLO roofline (prefill):")
+    for n, h in res["hlo_roofline"].items():
+        ai = h["flops"] / max(h["hbm_bytes"], 1.0)
+        print(f"#   {n}: {h['flops']:.3g} flops, {h['hbm_bytes']:.3g} "
+              f"HBM bytes, arithmetic intensity {ai:.2f}")
+    pl = res["placement"]
+    print(f"# placement over {pl['name']}:decode — {pl['n_objects']} "
+          f"objects, makespan {pl['makespan']:.0f} at half-footprint "
+          f"budget (all-local {pl['all_local']:.0f}, all-remote "
+          f"{pl['all_remote']:.0f}), local set {pl['local']}")
+
+    sim = {}
+    if os.path.exists(args.out_sim):
+        try:
+            with open(args.out_sim) as f:
+                sim = json.load(f)
+        except (OSError, ValueError):
+            sim = {}
+    sim["models"] = res
+    with open(args.out_sim, "w") as f:
+        json.dump(sim, f, indent=2)
+    print(f"# wrote {args.out_sim} (models section): "
+          f"{res['n_families']} families, {res['n_rows']} grid rows, "
+          f"{res['verified_fields']} fields verified bit-identical")
+
+
+if __name__ == "__main__":
+    main()

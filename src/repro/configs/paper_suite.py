@@ -17,10 +17,10 @@ class AnalysisConfig:
     tau: float = 100.0              # data-movement phase width (Fig 15/16)
 
 
-POLYBENCH_N = 20
-SIM_COMPUTE_SLOTS = 8   # ground-truth realism: finite ALU issue width                    # trace size for the ranking study
+POLYBENCH_N = 20                    # trace size for the ranking study
+SIM_COMPUTE_SLOTS = 8               # ground-truth realism: finite ALU issue width
 HPCG_N = 16                         # the paper's data size (16^3)
-HPCG_ITERS = 6                      # paper used 50; 6 keeps the trace ~1M vertices                     # paper used 50
+HPCG_ITERS = 6                      # paper used 50; 6 keeps the trace ~1M vertices
 LULESH_NE = 10                      # ~1000 elements (paper's data size 1000)
 LULESH_ITERS = 3
 

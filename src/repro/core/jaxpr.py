@@ -37,16 +37,68 @@ def _eqn_flops(eqn) -> float:
     out_elems = sum(float(np.prod(v.aval.shape)) for v in eqn.outvars
                     if hasattr(v.aval, "shape"))
     if prim == "dot_general":
-        dims = eqn.params["dimension_numbers"]
-        (lc, _), _ = dims
-        lhs = eqn.invars[0].aval
-        k = float(np.prod([lhs.shape[i] for i in lc])) if lc else 1.0
+        # out_elems already covers batch x M x N; k is the contraction
+        # extent.  Read it from whichever operand's contracting dims index
+        # validly — batched layouts put batch dims first, so a stale or
+        # hand-built dims tuple can misindex one side; the other side's
+        # contracting sizes are the same K by the dot_general contract.
+        (lhs_c, rhs_c), _ = eqn.params["dimension_numbers"]
+        k = 1.0
+        for operand, contract in ((eqn.invars[0], lhs_c),
+                                  (eqn.invars[1], rhs_c)):
+            shape = getattr(getattr(operand, "aval", None), "shape", None)
+            if shape is None:
+                continue
+            if not contract:
+                k = 1.0
+                break
+            try:
+                k = float(np.prod([shape[i] for i in contract]))
+                break
+            except IndexError:
+                continue
         return max(2.0 * out_elems * k, 1.0)
     if prim in ("reduce_sum", "reduce_max", "reduce_min", "argmax", "argmin"):
         in_elems = sum(float(np.prod(v.aval.shape)) for v in eqn.invars
                        if hasattr(v.aval, "shape"))
         return max(in_elems, 1.0)
     return max(out_elems * _ELEMENTWISE_COST, 1.0)
+
+
+#: Call-like primitives whose sub-jaxpr is inlined transparently.  ``remat2``
+#: is jax's current name for the ``jax.checkpoint`` primitive — without it a
+#: checkpointed layer body collapses to one opaque vertex and whole-model
+#: traces lose all their memory parallelism.
+_CALL_PRIMS = ("pjit", "custom_jvp_call", "custom_vjp_call",
+               "custom_vjp_call_jaxpr", "custom_lin", "remat", "remat2",
+               "checkpoint", "closed_call", "core_call", "xla_call")
+
+
+def _jaxpr_cost(jaxpr, limit: int) -> float:
+    """Total flop cost of a (sub-)jaxpr under the builder's traversal rules:
+    scans count ``min(length, limit)`` body repeats, call primitives inline,
+    and ``cond`` counts its max-cost branch.  Used to pick which cond branch
+    to emit without mutating the real graph."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            steps = min(int(eqn.params["length"]), limit)
+            total += steps * _jaxpr_cost(eqn.params["jaxpr"].jaxpr, limit)
+            continue
+        if prim == "cond":
+            branches = eqn.params.get("branches") or ()
+            if branches:
+                total += max(_jaxpr_cost(getattr(b, "jaxpr", b), limit)
+                             for b in branches)
+                continue
+        if prim in _CALL_PRIMS:
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                total += _jaxpr_cost(getattr(sub, "jaxpr", sub), limit)
+                continue
+        total += _eqn_flops(eqn)
+    return total
 
 
 class _Builder:
@@ -63,13 +115,19 @@ class _Builder:
             if prim == "scan":
                 self._scan(eqn, env)
                 continue
-            if prim in ("pjit", "custom_jvp_call", "custom_vjp_call",
-                        "custom_vjp_call_jaxpr", "remat", "checkpoint",
-                        "closed_call", "core_call", "xla_call"):
+            if prim in _CALL_PRIMS:
                 sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
             if prim == "cond":
-                branches = eqn.params.get("branches")
-                sub = branches[0] if branches else None
+                # A static eDAG cannot keep both sides of a data-dependent
+                # branch, so emit the worst-case path: traverse every branch
+                # and keep the max-total-cost one (ties break to the first
+                # branch).  This matches the paper's pessimistic-latency
+                # framing — the sensitivity bound must cover the expensive
+                # side — and never silently drops a branch's cost/depth the
+                # way "always branches[0]" did.
+                branches = eqn.params.get("branches") or ()
+                sub = max(branches, default=None, key=lambda b: _jaxpr_cost(
+                    getattr(b, "jaxpr", b), self.limit))
             if sub is not None:
                 inner = getattr(sub, "jaxpr", sub)
                 sub_env = {}
@@ -122,6 +180,7 @@ class _Builder:
         xs_args = eqn.invars[n_consts + n_carry:]
         carry_vids = [env.get(a) if not isinstance(a, jcore.Literal) else None
                       for a in carry_args]
+        out_env: Dict = {}
         for _ in range(steps):
             sub_env: Dict = {}
             ivs = inner.invars
@@ -139,9 +198,13 @@ class _Builder:
         outs = eqn.outvars
         for ov, cv in zip(outs[:n_carry], carry_vids):
             env[ov] = cv
-        for ov in outs[n_carry:]:
-            # stacked ys: attribute to the last step's producing vertices
-            env[ov] = carry_vids[0] if carry_vids else None
+        # Stacked ys: each eqn outvar past the carries corresponds
+        # positionally to a body outvar past the carries — wire it to the
+        # final iteration's actual producer, not (as before) to the first
+        # carry, which fabricated a dependency on an unrelated vertex.
+        for ov, sv in zip(outs[n_carry:], inner.outvars[n_carry:]):
+            env[ov] = (out_env.get(sv)
+                       if not isinstance(sv, jcore.Literal) else None)
 
 
 def edag_from_fn(fn, *args, mem_threshold_bytes: float = 0.0,

@@ -184,6 +184,11 @@ def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
     h = constrain(embed_lookup(params["embed"], tokens, jnp.dtype(cfg.dtype)),
                   "batch", "seq_res", None)
     positions = jnp.full((1,), cur_index)
+    # dynamic_update_slice wants all start indices in one dtype; pin the
+    # literal zeros to cur_index's dtype so an x64-enabled process
+    # (python ints trace as int64) mixes with an int32 cur_index cleanly
+    cur_index = jnp.asarray(cur_index)
+    z = jnp.zeros((), cur_index.dtype)
 
     def body(hh, xs):
         wb, ck, cv, xk, xv = xs
@@ -194,9 +199,9 @@ def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, cur_index, 0, 0))
+                                          (z, cur_index, z, z))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, cur_index, 0, 0))
+                                          (z, cur_index, z, z))
         hh = hh + jnp.einsum(
             "bthk,hkd->btd",
             attention_decode(q, ck, cv, cur_index),

@@ -196,6 +196,12 @@ def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
     S = cache["k"].shape[2]
     W = cfg.sliding_window
     write_pos = (cur_index % W) if (W and W <= S) else cur_index
+    # dynamic_update_slice wants every start index in ONE dtype; pin the
+    # whole index tuple to write_pos's dtype so an x64-enabled process
+    # (where python-int literals trace as int64) mixes with an int32
+    # cur_index without a TypeError
+    write_pos = jnp.asarray(write_pos)
+    zero = jnp.zeros((), write_pos.dtype)
     positions = jnp.full((1,), cur_index)
     L = cfg.n_layers
 
@@ -208,10 +214,12 @@ def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
         wb, li = xs
         x = rms_norm(hh, wb["ln1"])
         q, k, v = _attn_proj(x, wb, cfg, positions)
+        li = li.astype(write_pos.dtype)
+        idx = (li, zero, write_pos, zero, zero)
         ck_all = jax.lax.dynamic_update_slice(
-            ck_all, k[None].astype(ck_all.dtype), (li, 0, write_pos, 0, 0))
+            ck_all, k[None].astype(ck_all.dtype), idx)
         cv_all = jax.lax.dynamic_update_slice(
-            cv_all, v[None].astype(cv_all.dtype), (li, 0, write_pos, 0, 0))
+            cv_all, v[None].astype(cv_all.dtype), idx)
         ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
         cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)

@@ -77,10 +77,15 @@ def shared_attn(h, x0, w, cfg: ModelConfig, positions, cache=None, cur=None):
         kv = (k, v)
     else:
         ck, cv = cache
+        # dynamic_update_slice wants all start indices in one dtype; pin
+        # the literal zeros to cur's dtype so an x64-enabled process
+        # (python ints trace as int64) mixes with an int32 cur cleanly
+        cur = jnp.asarray(cur)
+        z = jnp.zeros((), cur.dtype)
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, cur, 0, 0))
+                                          (z, cur, z, z))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, cur, 0, 0))
+                                          (z, cur, z, z))
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
         o = attention_decode(q, ck, cv, cur)

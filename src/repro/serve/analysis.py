@@ -123,11 +123,26 @@ class AnalysisRequest:
     entries of ``ms`` / ``compute_slots`` the machine model.  Placement
     requests inherit the full deadline / retry / demotion-ladder / fault
     semantics but always run solo — the search is per-trace by nature,
-    so there is no union to poison."""
+    so there is no union to poison.
+
+    ``kind="model"`` requests a grid over a *server-traced model*: the
+    trace source is ``config`` (a model-zoo config name from
+    ``src/repro/configs``) plus ``phase`` (prefill / decode / train)
+    instead of an uploaded trace or a kernel name; the server runs
+    :func:`models.tracing.trace_model` under its own fault stage
+    (``trace-model``) and deduped through the trace store, and from
+    there the request is an ordinary grid member — it joins union
+    batches and inherits every deadline / retry / demotion / quarantine
+    behaviour above."""
 
     trace: Optional[EDag] = None
     kernel: Optional[str] = None
     n: int = 6
+    config: Optional[str] = None
+    phase: str = "prefill"
+    seq_len: int = 32
+    batch_size: int = 2
+    reduced: bool = True
     alphas: Sequence[float] = (200.0,)
     ms: Sequence[int] = (4,)
     compute_slots: Sequence[int] = (0,)
@@ -147,18 +162,30 @@ class AnalysisRequest:
     placement_method: str = "auto"
 
     def __post_init__(self):
-        if (self.trace is None) == (self.kernel is None):
+        n_src = sum(x is not None
+                    for x in (self.trace, self.kernel, self.config))
+        if n_src != 1:
             raise ValueError(
-                "exactly one of trace= or kernel= must be given")
+                "exactly one of trace=, kernel= or config= must be given")
         if self.deadline_s is not None and not self.deadline_s > 0:
             raise ValueError(f"deadline_s must be positive, got "
                              f"{self.deadline_s!r}")
         if self.max_retries is not None and self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got "
                              f"{self.max_retries!r}")
-        if self.kind not in ("grid", "placement"):
-            raise ValueError(f"kind must be 'grid' or 'placement', got "
-                             f"{self.kind!r}")
+        if self.kind not in ("grid", "placement", "model"):
+            raise ValueError(f"kind must be 'grid', 'placement' or "
+                             f"'model', got {self.kind!r}")
+        if self.kind == "model":
+            if self.config is None:
+                raise ValueError("model requests need config= (a model-zoo "
+                                 "config name)")
+            from ..models.tracing import PHASES
+            if self.phase not in PHASES:
+                raise ValueError(f"phase must be one of {PHASES}, got "
+                                 f"{self.phase!r}")
+        elif self.config is not None:
+            raise ValueError("config= requires kind='model'")
         if self.kind == "placement":
             if self.local_budget is None or self.local_budget < 0:
                 raise ValueError(
@@ -437,15 +464,23 @@ class AnalysisService:
         p.event.set()
 
     def _load(self, p: _Pending) -> bool:
-        """Stage 1+2: resolve the trace (client-supplied or server-side
-        kernel tracing) and finalize it.  Failures resolve ``p`` alone;
-        returns True when ``p`` may join a batch."""
+        """Stage 1+2: resolve the trace (client-supplied, server-side
+        kernel tracing, or model-zoo jaxpr tracing) and finalize it.
+        Failures resolve ``p`` alone; returns True when ``p`` may join a
+        batch."""
         r = p.req
+        src_stage = "trace-model" if r.kind == "model" else "load"
 
         def load_fn(attempt):
             faults.check("load", rid=p.rid)
             return r.trace if r.trace is not None \
                 else _trace_kernel_by_name(r.kernel, r.n)
+
+        def trace_model_fn(attempt):
+            faults.check("trace-model", rid=p.rid)
+            from ..models.tracing import trace_model
+            return trace_model(r.config, r.phase, seq_len=r.seq_len,
+                               batch_size=r.batch_size, reduced=r.reduced)
 
         def finalize_fn(attempt):
             faults.check("finalize", rid=p.rid)
@@ -453,10 +488,12 @@ class AnalysisService:
             return p.g.trace_digest()
 
         try:
-            p.g = self._retrying(p, "load", load_fn)
+            p.g = self._retrying(
+                p, src_stage,
+                trace_model_fn if r.kind == "model" else load_fn)
             p.digest = self._retrying(p, "finalize", finalize_fn)
         except Exception as exc:
-            self._fail(p, "load-error", "load", exc)
+            self._fail(p, "load-error", src_stage, exc)
             return False
         if p.digest in self._quarantined:
             self._fail(p, "quarantined", "load", RuntimeError(
@@ -691,8 +728,11 @@ class AnalysisService:
             v = rep[key]
             return v[k] if k is not None else v
 
+        r = p.req
+        auto = (f"{r.config}:{r.phase}" if r.config is not None
+                else r.kernel) or f"r{p.rid}"
         out = {
-            "name": p.req.name or (p.req.kernel or f"r{p.rid}"),
+            "name": r.name or auto,
             "alphas": req_alphas,
             "ms": np.asarray(rep["ms"]),
             "compute_slots": np.asarray(rep["compute_slots"]),

@@ -58,8 +58,9 @@ from typing import List, Optional
 from ..core import backend as _bk
 from ..core import schedule_cache as _sc
 
-STAGES = ("load", "finalize", "schedule", "replay", "placement", "report",
-          "store", "kernel", "cache-load", "cache-store")
+STAGES = ("load", "trace-model", "finalize", "schedule", "replay",
+          "placement", "report", "store", "kernel", "cache-load",
+          "cache-store")
 KINDS = ("io", "backend", "latency", "cache")
 _PARAMS = ("count", "every", "delay", "rid", "min_batch")
 

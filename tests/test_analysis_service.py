@@ -475,6 +475,77 @@ def test_placement_result_persisted_as_valid_json(tmp_path):
         np.asarray(res.report["curve"]).tolist()
 
 
+# ------------------------------------------------------- model-zoo requests
+
+def mreq(config="qwen3-0.6b", phase="decode", **kw):
+    for k, v in GRID.items():
+        kw.setdefault(k, v)
+    return AnalysisRequest(config=config, phase=phase, kind="model", **kw)
+
+
+def test_model_request_matches_direct_grid_report():
+    """kind='model' server-traces the config and the grid is bit-identical
+    to tracing + grid_report by hand."""
+    from repro.models.tracing import trace_model
+    (res,) = svc().process([mreq()])
+    assert res.ok and res.error is None
+    assert res.report["name"] == "qwen3-0.6b:decode"
+    g = trace_model("qwen3-0.6b", "decode", use_store=False)
+    want = grid_report(g, list(ALPHAS), ms=GRID["ms"],
+                       compute_slots=GRID["compute_slots"],
+                       simulate_points=True)
+    assert res.report["W"] == float(want["W"])
+    assert res.report["D"] == float(want["D"])
+    assert np.array_equal(res.report["simulated"], want["simulated"])
+    assert np.array_equal(res.report["t_inf"], want["t_inf"])
+
+
+def test_model_requests_join_union_batches():
+    """Model requests are ordinary grid members: two configs plus an
+    uploaded trace co-batch into one union, every result bit-identical
+    to its solo run."""
+    reqs = [mreq("qwen3-0.6b"), mreq("rwkv6-7b"), req(0)]
+    batched = svc().process(reqs)
+    assert all(r.ok for r in batched)
+    assert all(len(r.batch_rids) == 3 for r in batched)
+    for r, solo_req in zip(batched, [mreq("qwen3-0.6b"), mreq("rwkv6-7b"),
+                                     req(0)]):
+        (solo,) = svc().process([solo_req])
+        assert_reports_equal(r.report, solo.report)
+
+
+def test_transient_trace_model_fault_recovers():
+    faults.install("trace-model", "io", count=1)
+    (res,) = svc().process([mreq()])
+    assert res.ok and res.retries == 1
+
+
+def test_hard_trace_model_fault_structured():
+    faults.install("trace-model", "io")          # hard fault, every attempt
+    (res,) = svc().process([mreq(max_retries=1)])
+    assert not res.ok
+    assert res.error["code"] == "load-error"
+    assert res.error["stage"] == "trace-model"
+    assert res.retries >= 1
+
+
+def test_unknown_config_fails_with_choices():
+    (res,) = svc().process([mreq("not-a-model", max_retries=0)])
+    assert not res.ok and res.error["code"] == "load-error"
+    assert "qwen3-0.6b" in res.error["message"]
+
+
+def test_model_request_validation():
+    with pytest.raises(ValueError, match="phase"):
+        AnalysisRequest(config="qwen3-0.6b", kind="model", phase="serve")
+    with pytest.raises(ValueError, match="kind='model'"):
+        AnalysisRequest(config="qwen3-0.6b")
+    with pytest.raises(ValueError, match="exactly one"):
+        AnalysisRequest(config="qwen3-0.6b", kernel="atax", kind="model")
+    with pytest.raises(ValueError, match="config="):
+        AnalysisRequest(kind="model")
+
+
 # ------------------------------------------------------ background admission
 
 def test_background_submit_and_run():
@@ -541,6 +612,10 @@ def test_service_survives_ambient_faults(monkeypatch):
         for s in (0, 1):                 # the placement stage, too
             (place,) = service.process([preq(s, deadline_s=300.0)])
             assert place.ok, place.error
+        # the trace-model stage, too: enough requests to reach every=K
+        for ph in ("prefill", "decode", "decode"):
+            (mdl,) = service.process([mreq(phase=ph, deadline_s=300.0)])
+            assert mdl.ok, mdl.error
         if AMBIENT_FAULTS:
             assert sum(faults.fire_log.values()) > 0   # it really fired
     finally:

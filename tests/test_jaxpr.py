@@ -81,6 +81,100 @@ def test_scan_unrolls_with_carry_depth():
     assert report(g4).D == 8
 
 
+def test_scan_stacked_ys_wired_to_final_producers():
+    """Regression: stacked ys used to be attributed to the first *carry*
+    vertex instead of the final iteration's actual producer.  Two carries
+    (add / sub chains) plus a non-carry ys eqn (mul): the downstream
+    consumer of ys must depend on the last mul, not a carry vertex."""
+    def body(carry, x):
+        c1, c2 = carry
+        y = x * 3.0
+        return (c1 + x, c2 - x), y
+
+    def f(xs):
+        (c1, _), ys = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(1.0)), xs)
+        return jnp.sum(ys) + c1
+
+    g = edag_from_fn(f, jnp.ones(3, jnp.float32))
+    g.trace_digest()
+    labels = g.labels()
+    # 3 steps x (mul, add, sub) + reduce_sum + final add
+    assert labels == ["mul", "add", "sub"] * 3 + ["reduce_sum", "add"]
+    rid = labels.index("reduce_sum")
+    ys_preds = {int(s) for s, d in zip(g.src, g.dst) if d == rid}
+    assert {labels[p] for p in ys_preds} == {"mul"}
+    assert ys_preds == {6}                     # the *last* step's mul
+    # the carry output still rides the carry chain into the final add
+    fin_preds = {int(s) for s, d in zip(g.src, g.dst) if d == rid + 1}
+    assert {labels[p] for p in fin_preds} == {"reduce_sum", "add"}
+
+
+def test_cond_keeps_max_cost_branch():
+    """Regression: ``cond`` used to traverse only ``branches[0]`` (the
+    false branch), silently dropping the other branch's cost and depth.
+    The frontend now emits the max-cost branch — worst-case-path
+    semantics — so the dot_general side must survive regardless of
+    which slot it lands in."""
+    def f(v):
+        return jax.lax.cond(jnp.sum(v) > 0.0,
+                            lambda x: jnp.sum(x @ x.T),   # expensive: true
+                            lambda x: jnp.sum(x),          # cheap: false
+                            v)
+
+    g = edag_from_fn(f, jnp.ones((8, 8)))
+    g.trace_digest()
+    assert "dot_general" in g.labels()
+    # pinned two-branch shape: pred (reduce_sum, gt, convert) + expensive
+    # branch body (transpose, dot_general, reduce_sum)
+    assert g.labels() == ["reduce_sum", "gt", "convert_element_type",
+                          "transpose", "dot_general", "reduce_sum"]
+    # orientation swap: expensive branch as branches[0] keeps working
+    gs = edag_from_fn(
+        lambda v: jax.lax.cond(jnp.sum(v) > 0.0, lambda x: jnp.sum(x),
+                               lambda x: jnp.sum(x @ x.T), v),
+        jnp.ones((8, 8)))
+    gs.trace_digest()
+    assert "dot_general" in gs.labels()
+
+
+def test_dot_general_batched_flops_pinned():
+    """Batched matmul cost must be the hand-computed 2*B*M*N*K."""
+    B, M, N, K = 2, 4, 3, 8
+    g = edag_from_fn(lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b),
+                     jnp.ones((B, M, K)), jnp.ones((B, K, N)))
+    g.trace_digest()
+    assert g.labels() == ["dot_general"]
+    assert list(g.cost) == [2.0 * B * M * N * K]
+
+
+def test_dot_general_flops_survives_lhs_misindex():
+    """Regression: ``_eqn_flops`` indexed only the lhs shape with the lhs
+    contracting dims, so a dims tuple whose lhs indices don't fit the lhs
+    rank raised IndexError.  The contraction extent is the same K on both
+    operands, so the rhs contracting sizes are a valid fallback."""
+    from types import SimpleNamespace as NS
+    from repro.core.jaxpr import _eqn_flops
+    B, M, N, K = 2, 4, 3, 8
+    aval = lambda shape: NS(shape=shape)
+    eqn = NS(primitive=NS(name="dot_general"),
+             params={"dimension_numbers": (((5,), (1,)), ((0,), (0,)))},
+             invars=[NS(aval=aval((B, M, K))), NS(aval=aval((B, K, N)))],
+             outvars=[NS(aval=aval((B, M, N)))])
+    assert _eqn_flops(eqn) == 2.0 * B * M * N * K
+
+
+def test_checkpoint_body_inlined_not_opaque():
+    """``jax.checkpoint`` lowers to the ``remat2`` primitive; the frontend
+    must inline its body like any other call, not emit one opaque vertex
+    (whole-model traces collapse otherwise)."""
+    f = jax.checkpoint(lambda x: jnp.sum(x * 2.0 + 1.0))
+    g = edag_from_fn(lambda x: f(x) * 3.0, jnp.ones(16, jnp.float32))
+    g.trace_digest()
+    assert "remat2" not in g.labels()
+    assert g.labels() == ["mul", "add", "reduce_sum", "mul"]
+
+
 def test_polybench_jax_gemm_pinned():
     N = 6
     ones = jnp.ones((N, N))

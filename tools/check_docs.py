@@ -5,7 +5,8 @@
    repo (anchors are stripped; ``http(s)``/``mailto`` links are skipped —
    CI runs offline).
 2. **Executable quickstart**: every ```` ```python ```` fence in
-   ``docs/SWEEPS.md``, ``docs/SERVICE.md`` and ``docs/PERFORMANCE.md``
+   ``docs/SWEEPS.md``, ``docs/SERVICE.md``, ``docs/PERFORMANCE.md`` and
+   ``docs/MODELS.md``
    is executed, top to bottom, in one shared namespace per document — the user guides' code
    is run on every CI push, so the documented API can never silently
    drift from the implementation.  Fences annotated
@@ -70,13 +71,13 @@ def main() -> int:
             errors += check_links(md)
         else:
             errors.append(f"missing expected doc: {md.relative_to(ROOT)}")
-    for doc in ("SWEEPS.md", "SERVICE.md", "PERFORMANCE.md"):
+    for doc in ("SWEEPS.md", "SERVICE.md", "PERFORMANCE.md", "MODELS.md"):
         errors += run_snippets(ROOT / "docs" / doc)
     for e in errors:
         print(f"FAIL {e}")
     if not errors:
-        print(f"docs OK: {len(docs)} files link-checked, "
-              "SWEEPS.md + SERVICE.md + PERFORMANCE.md snippets executed")
+        print(f"docs OK: {len(docs)} files link-checked, SWEEPS.md + "
+              "SERVICE.md + PERFORMANCE.md + MODELS.md snippets executed")
     return 1 if errors else 0
 
 
