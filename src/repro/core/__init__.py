@@ -7,6 +7,7 @@ Three trace frontends over one analysis core:
     memory accesses), powering the multi-pod latency-sensitivity analysis.
 """
 from .graph import EDag, IndexOverflowError, MemLayering, concat_edags
+from .plan import ExecPolicy, SweepSpec, replay_mem_budget
 from .cache import NoCache, SetAssociativeCache, make_cache
 from .trace import Tracer, Value, build_edag_from_trace
 from .cost import (CostModelParams, memory_cost_bounds, total_cost_bounds,
@@ -38,7 +39,8 @@ from .sensitivity import (collective_sensitivity, AxisSensitivity,
                           object_sensitivity, suite_axis_latency_grid)
 
 __all__ = [
-    "EDag", "IndexOverflowError", "MemLayering", "NoCache",
+    "EDag", "IndexOverflowError", "MemLayering",
+    "ExecPolicy", "SweepSpec", "replay_mem_budget", "NoCache",
     "SetAssociativeCache", "make_cache",
     "save_edag", "load_edag", "put_trace", "get_trace", "trace_store_dir",
     "Tracer", "Value", "build_edag_from_trace", "CostModelParams",

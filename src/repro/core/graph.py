@@ -872,7 +872,8 @@ class EDag:
     def t_inf_sweep_mem(self, alphas, unit: float = 1.0,
                         chunk: Optional[int] = None,
                         backend: Optional[str] = None,
-                        replay_dtype: Optional[str] = None) -> np.ndarray:
+                        replay_dtype: Optional[str] = None, *,
+                        policy=None) -> np.ndarray:
         """Span at each alpha for the standard memory cost model
         (alpha for RAM-access vertices, ``unit`` otherwise) — builds the
         (n, n_sweep) cost matrix directly, skipping the transpose copy.
@@ -896,7 +897,10 @@ class EDag:
         class's alpha (``set_mem_classes``) via a per-vertex gather —
         same stacked level kernel, same dtype policy, one more gather."""
         self._finalize()
-        from .backend import column_quanta, replay_accumulate
+        from .backend import column_quanta
+        from .plan import ExecPolicy
+        pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                                 policy=policy)
         alphas = np.asarray(alphas, dtype=np.float64)
         if self.n_vertices == 0 or len(alphas) == 0:
             return np.zeros(len(alphas))
@@ -913,10 +917,9 @@ class EDag:
             else:
                 F = np.where(self.is_mem[:, None],
                              alphas[None, i:i + chunk], float(unit))
-            replay_accumulate(lv, F,
-                              column_quanta(alphas[i:i + chunk], unit),
-                              clamp=True, backend=backend,
-                              replay_dtype=replay_dtype)
+            pol.accumulate(lv, F,
+                           column_quanta(alphas[i:i + chunk], unit),
+                           clamp=True)
             out.append(F.max(axis=0))
         return np.concatenate(out)
 

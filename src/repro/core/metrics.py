@@ -8,6 +8,7 @@ import numpy as np
 
 from .cost import CostModelParams, non_memory_cost
 from .graph import EDag
+from .plan import ExecPolicy, SweepSpec
 
 
 # ------------------------------------------------------------------- Eq 3-4
@@ -57,7 +58,8 @@ def cost_matrix(g: EDag, alphas, unit: float = 1.0) -> np.ndarray:
 
 def t_inf_sweep(g: EDag, alphas, unit: float = 1.0,
                 backend: Optional[str] = None,
-                replay_dtype: Optional[str] = None) -> np.ndarray:
+                replay_dtype: Optional[str] = None, *,
+                policy: Optional[ExecPolicy] = None) -> np.ndarray:
     """Span T-inf at every latency point in one level-synchronous pass.
 
     The whole alpha sweep is a single batched longest-path evaluation over
@@ -66,21 +68,24 @@ def t_inf_sweep(g: EDag, alphas, unit: float = 1.0,
     the pass is accelerator-resident under the replay dtype policy
     (``backend.replay_dtype_policy``) without changing a bit of the
     result."""
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             policy=policy)
     g._finalize()
     if g.n_vertices == 0:
         return np.zeros(len(np.atleast_1d(alphas)))
-    return g.t_inf_sweep_mem(alphas, unit, backend=backend,
-                             replay_dtype=replay_dtype)
+    return g.t_inf_sweep_mem(alphas, unit, policy=pol)
 
 
 def bandwidth_sweep(g: EDag, alphas, unit: float = 1.0,
                     cycles_per_second: float = 1e9,
                     backend: Optional[str] = None,
-                    replay_dtype: Optional[str] = None) -> np.ndarray:
+                    replay_dtype: Optional[str] = None, *,
+                    policy: Optional[ExecPolicy] = None) -> np.ndarray:
     """Eq 5 bandwidth at every latency point, from one batched span pass."""
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             policy=policy)
     g._finalize()
-    t_inf = t_inf_sweep(g, alphas, unit, backend=backend,
-                        replay_dtype=replay_dtype)
+    t_inf = t_inf_sweep(g, alphas, unit, policy=pol)
     moved = float(g.nbytes[g.is_mem].sum())
     out = np.zeros_like(t_inf)
     np.divide(moved * cycles_per_second, t_inf, out=out, where=t_inf > 0)
@@ -156,7 +161,8 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
                  backend: Optional[str] = None,
                  mem_budget: Optional[int] = None,
                  use_cache: bool = True,
-                 replay_dtype: Optional[str] = None) -> dict:
+                 replay_dtype: Optional[str] = None, *,
+                 policy: Optional[ExecPolicy] = None) -> dict:
     """Full latency sweep in one pass (§3.3 metrics per alpha point).
 
     The analytic quantities — T-inf, Eq-2 bounds, bandwidth, Lambda — come
@@ -176,15 +182,16 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
     from .cost import non_memory_cost, total_cost_bounds
     from .scheduler import latency_sweep as _sim_sweep
 
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
     g._finalize()
     alphas = np.asarray(alphas, dtype=np.float64)
     lay = g.mem_layers()
     C = non_memory_cost(g, params.unit)
     lam = lambda_abs(lay.W, lay.D, params.m)
-    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend,
-                        replay_dtype=replay_dtype)
-    B = bandwidth_sweep(g, alphas, params.unit, backend=backend,
-                        replay_dtype=replay_dtype)
+    t_inf = t_inf_sweep(g, alphas, params.unit, policy=pol)
+    B = bandwidth_sweep(g, alphas, params.unit, policy=pol)
     lo, hi = total_cost_bounds(lay.W, lay.D, params.m, alphas, C)
     denom = lam * alphas + C
     Lam = np.divide(lam, denom, out=np.zeros_like(denom), where=denom > 0)
@@ -194,10 +201,7 @@ def sweep_report(g: EDag, alphas, params: CostModelParams = CostModelParams(),
         out["simulated"] = _sim_sweep(g, alphas, m=params.m,
                                       unit=params.unit,
                                       compute_slots=compute_slots,
-                                      backend=backend,
-                                      mem_budget=mem_budget,
-                                      use_cache=use_cache,
-                                      replay_dtype=replay_dtype)
+                                      policy=pol)
     return out
 
 
@@ -207,7 +211,8 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
                 backend: Optional[str] = None,
                 mem_budget: Optional[int] = None,
                 use_cache: bool = True,
-                replay_dtype: Optional[str] = None) -> dict:
+                replay_dtype: Optional[str] = None, *,
+                policy: Optional[ExecPolicy] = None) -> dict:
     """§3.3 metrics on the alpha × m grid — the analytic side of the
     capacity-planning sweep — plus, with ``simulate_points=True``, the §4
     simulated grid over the full alpha × m × compute_slots product.
@@ -234,19 +239,22 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     the Eq 4 Lambda built on it) its largest.
     """
     from .cost import non_memory_cost
-    from .scheduler import sweep_grid as _sim_grid
+    from .scheduler import _sweep_grid_spec
 
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
+    spec = SweepSpec.make(alphas, ms=ms, compute_slots=compute_slots,
+                          unit=params.unit)
     g._finalize()
-    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
-    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)], dtype=np.int64)
-    css = np.asarray([int(v) for v in np.atleast_1d(compute_slots)],
-                     dtype=np.int64)
+    alphas = spec.alphas
+    ms_arr = np.asarray(spec.ms, dtype=np.int64)
+    css = np.asarray(spec.css, dtype=np.int64)
     lay = g.mem_layers()
     W, D = lay.W, lay.D
     C = non_memory_cost(g, params.unit)
     lam = lambda_abs(W, D, ms_arr)                         # Eq 3, per m
-    t_inf = t_inf_sweep(g, alphas, params.unit, backend=backend,
-                        replay_dtype=replay_dtype)
+    t_inf = t_inf_sweep(g, alphas, params.unit, policy=pol)
     if alphas.ndim == 2:
         # class rows: the scalar bounds hold at the extreme class alphas
         # of each row, bracketing every per-vertex class assignment
@@ -266,10 +274,7 @@ def grid_report(g: EDag, alphas, ms=(4,), compute_slots=(0,),
                W=W, D=D, C=C, lam=lam, Lam=Lam, t_inf=t_inf,
                t_lower=mem_lo + C, t_upper=mem_hi + C)
     if simulate_points:
-        out["simulated"] = _sim_grid(
-            g, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
-            backend=backend, mem_budget=mem_budget, use_cache=use_cache,
-            replay_dtype=replay_dtype)
+        out["simulated"] = _sweep_grid_spec(g, spec, pol)
     return out
 
 
@@ -279,7 +284,8 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
                       backend: Optional[str] = None,
                       mem_budget: Optional[int] = None,
                       use_cache: bool = True,
-                      replay_dtype: Optional[str] = None) -> dict:
+                      replay_dtype: Optional[str] = None, *,
+                      policy: Optional[ExecPolicy] = None) -> dict:
     """§3.3 metrics for a whole ``EDagSuite`` on the alpha × m grid —
     per-trace Eq 1-4 tables from ONE pass over the block-diagonal union.
 
@@ -296,12 +302,16 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
     (K, n_alphas, n_ms), and simulated (K, n_alphas, n_ms, n_css) when
     requested)`` where K is the number of member traces.
     """
-    from .suite import suite_sweep_grid, suite_t_inf_sweep
+    from .suite import _suite_sweep_grid_spec, suite_t_inf_sweep
 
-    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
-    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)], dtype=np.int64)
-    css = np.asarray([int(v) for v in np.atleast_1d(compute_slots)],
-                     dtype=np.int64)
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
+    spec = SweepSpec.make(alphas, ms=ms, compute_slots=compute_slots,
+                          unit=params.unit)
+    alphas = spec.alphas
+    ms_arr = np.asarray(spec.ms, dtype=np.int64)
+    css = np.asarray(spec.css, dtype=np.int64)
     K = suite.n_traces
     if K and suite.n_vertices:
         u = suite.union
@@ -310,9 +320,7 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
         D = suite.segment_max(lay.level).astype(np.int64)
         counts = np.diff(suite.offsets)
         C = (counts - W) * params.unit
-        t_inf = suite_t_inf_sweep(suite, alphas, params.unit,
-                                  backend=backend,
-                                  replay_dtype=replay_dtype)
+        t_inf = suite_t_inf_sweep(suite, alphas, params.unit, policy=pol)
     else:
         W = D = np.zeros(K, dtype=np.int64)
         C = np.zeros(K)
@@ -338,10 +346,7 @@ def suite_grid_report(suite, alphas, ms=(4,), compute_slots=(0,),
                t_inf=t_inf, t_lower=mem_lo + C[:, None, None],
                t_upper=mem_hi + C[:, None, None])
     if simulate_points:
-        out["simulated"] = suite_sweep_grid(
-            suite, alphas, ms=ms_arr, compute_slots=css, unit=params.unit,
-            backend=backend, mem_budget=mem_budget, use_cache=use_cache,
-            replay_dtype=replay_dtype)
+        out["simulated"] = _suite_sweep_grid_spec(suite, spec, pol)
     return out
 
 

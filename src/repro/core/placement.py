@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import EDag
+from .plan import ExecPolicy
 
 # Oracle cost is one replay column per subset: 2^8 = 256 columns is one
 # comfortable batch; past that the greedy path takes over.
@@ -173,8 +174,7 @@ def _evaluate_placements(g: EDag, objects: Sequence[PlacementObject],
                          locals_list: Sequence[Sequence[int]],
                          alpha_local: float, alpha_remote: float,
                          m: int, compute_slots: int, unit: float,
-                         backend: Optional[str],
-                         replay_dtype: Optional[str]) -> np.ndarray:
+                         pol: ExecPolicy) -> np.ndarray:
     """Makespan per candidate placement, one class-mode batch.
 
     Installs the object class map as the eDAG's overlay for the call and
@@ -189,8 +189,7 @@ def _evaluate_placements(g: EDag, objects: Sequence[PlacementObject],
         A = placement_rows(len(objects), locals_list, alpha_local,
                            alpha_remote)
         return simulate_batch(g, A, m=m, compute_slots=compute_slots,
-                              unit=unit, backend=backend,
-                              replay_dtype=replay_dtype)
+                              unit=unit, policy=pol)
     finally:
         g.set_mem_classes(prev, names=prev_names)
 
@@ -242,7 +241,8 @@ def search_placement(g: EDag, alpha_local: float, alpha_remote: float,
                      unit: float = 1.0, method: str = "auto",
                      max_oracle_objects: int = MAX_ORACLE_OBJECTS,
                      backend: Optional[str] = None,
-                     replay_dtype: Optional[str] = None) -> PlacementReport:
+                     replay_dtype: Optional[str] = None, *,
+                     policy: Optional[ExecPolicy] = None) -> PlacementReport:
     """Search the object -> {local, remote} assignment minimizing the
     simulated makespan under a local-capacity byte budget.
 
@@ -258,6 +258,8 @@ def search_placement(g: EDag, alpha_local: float, alpha_remote: float,
     object's marginal cost — the makespan increase of remoting only that
     object from the all-local placement, the per-object number a
     DOLMA-style planner negotiates with."""
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             policy=policy)
     if alpha_local <= 0 or alpha_remote <= 0 or \
             not (np.isfinite(alpha_local) and np.isfinite(alpha_remote)):
         raise ValueError("alpha_local and alpha_remote must be positive "
@@ -285,7 +287,7 @@ def search_placement(g: EDag, alpha_local: float, alpha_remote: float,
     def run(locals_list):
         return _evaluate_placements(
             g, objects, locals_list, alpha_local, alpha_remote, m,
-            compute_slots, unit, backend, replay_dtype)
+            compute_slots, unit, pol)
 
     all_idx = tuple(range(n_obj))
     if method == "oracle":

@@ -62,7 +62,6 @@ through the level kernel instead of materializing (n, |grid|) matrices.
 from __future__ import annotations
 
 import heapq
-import os
 import time
 from typing import Optional
 
@@ -71,17 +70,16 @@ import numpy as np
 from . import backend as _bk
 from . import schedule_cache as _sc
 from .graph import EDag
+from .plan import (REPLAY_BYTES_PER_CELL, REPLAY_MEM_BUDGET, ExecPolicy,
+                   SweepSpec, replay_mem_budget)
 
-# Point-chunk memory budget for the batched replay: the per-master pass
-# holds ~3 (n_vertices, chunk) float64 matrices (base/finish, ready times,
-# scratch) plus, on the jax backend's f32 mode, the float32 copies of the
-# live columns (+8 bytes/cell worst case), so chunk ~ budget /
-# (_REPLAY_BYTES_PER_CELL * n).  Override per call with ``mem_budget=``
-# or process-wide with $EDAN_REPLAY_MEM_BUDGET (bytes).  The per-cell
-# constant is shared with ``suite._member_groups`` so the heterogeneous-
-# suite grouping rule and the actual chunk divisor can never drift apart.
-_REPLAY_MEM_BUDGET = 512 * 1024 * 1024
-_REPLAY_BYTES_PER_CELL = 32
+# Budget constants and the env-resolution rule live in ``plan`` now (one
+# accounting rule shared by the chunk divisor, the suite's grouping rule
+# and the service's admission packing); the historical underscored names
+# stay importable for external callers and tests.
+_REPLAY_MEM_BUDGET = REPLAY_MEM_BUDGET
+_REPLAY_BYTES_PER_CELL = REPLAY_BYTES_PER_CELL
+_replay_mem_budget = replay_mem_budget
 # Below this many sweep points the recording run cannot amortize.
 _MIN_BATCH_POINTS = 2
 # Per-EDag in-process plan memo: one entry per (m, compute_slots) pair.
@@ -350,6 +348,33 @@ def _prov_qpred(rank: np.ndarray, O_mem: np.ndarray, O_alu: np.ndarray,
     return qpred
 
 
+def _prov_check_arrays(prov: np.ndarray, m: int):
+    """Verification scaffolding for a recorded slot-provenance array:
+    ``(prov_ok, t_chk, need_chk)`` as ``_verify_slots`` consumes them.
+
+    Shared by the single-trace class plan and the union suite's class
+    blocks, so both certify recorded provenance with the identical rule.
+    ``prov_ok`` is the structural screen — greedy pops the m initial
+    zeros first (every finish is positive), then only real finishes;
+    ``pop_step[i]`` is the issue step whose service popped i's finish (W
+    if never popped); a finish sits in the slot heap from step i+1
+    through ``t_chk[i]``, so it must dominate the popped value at
+    ``t_chk[i]`` (pops are nondecreasing per column), checked for the
+    ``need_chk`` subset where that window is non-empty."""
+    W = len(prov)
+    k0 = min(m, W)
+    prov_ok = bool(
+        (prov[:k0] == -1).all() and
+        (W <= k0 or ((prov[k0:] >= 0).all() and
+                     (prov[k0:] < np.arange(k0, W)).all())))
+    pop_step = np.full(W, W, dtype=np.int64)
+    has = np.nonzero(prov >= 0)[0]
+    pop_step[prov[has]] = has
+    t_chk = np.minimum(pop_step - 1, W - 1)
+    need_chk = np.nonzero(t_chk > np.arange(W))[0].astype(np.int64)
+    return prov_ok, t_chk, need_chk
+
+
 def _aug_level_valid(level, asrc: np.ndarray, adst: np.ndarray,
                      n: int) -> bool:
     """Whether a persisted level assignment is usable for the augmented
@@ -419,24 +444,8 @@ class _ReplayPlan:
         self.cls_topo = (np.ascontiguousarray(classes[topo])
                          if classes is not None else None)
         if prov is not None:
-            W = len(O_mem)
-            k0 = min(m, W)
-            # greedy pops the m initial zeros first (every finish is
-            # positive), then only real finishes — checked once per plan
-            self.prov_ok = bool(
-                (prov[:k0] == -1).all() and
-                (W <= k0 or ((prov[k0:] >= 0).all() and
-                             (prov[k0:] < np.arange(k0, W)).all())))
-            # pop_step[i] = issue step whose service popped i's finish
-            # (W if never popped); a finish sits in the slot heap from
-            # step i+1 through t_chk[i], so it must dominate the popped
-            # value at t_chk[i] (pops are nondecreasing per column)
-            pop_step = np.full(W, W, dtype=np.int64)
-            has = np.nonzero(prov >= 0)[0]
-            pop_step[prov[has]] = has
-            self.t_chk = np.minimum(pop_step - 1, W - 1)
-            self.need_chk = np.nonzero(
-                self.t_chk > np.arange(W))[0].astype(np.int64)
+            self.prov_ok, self.t_chk, self.need_chk = \
+                _prov_check_arrays(prov, m)
         else:
             self.prov_ok = True
             self.t_chk = self.need_chk = None
@@ -463,19 +472,19 @@ class _ReplayPlan:
         self.lv = lv
 
     def replay(self, alphas: np.ndarray, unit: float,
-               backend: Optional[str] = None,
-               replay_dtype: Optional[str] = None):
+               policy: Optional[ExecPolicy] = None):
         """Evaluate all points at once: returns finish times F and ready
         times R, both (n+1, k) in pop-order (topo) vertex space (the last
         row is the zero sentinel the slot chains bottom out on).  The
-        pass runs through ``backend.replay_accumulate`` under the dtype
-        policy (x64 on device / error-bounded f32 with per-column
-        demotion / numpy f64), so the returned matrices are always
-        bit-identical to the float64 numpy kernel.
+        pass runs through ``ExecPolicy.accumulate`` under the policy's
+        backend / replay dtype (x64 on device / error-bounded f32 with
+        per-column demotion / numpy f64), so the returned matrices are
+        always bit-identical to the float64 numpy kernel.
 
         ``alphas`` may be 2-D ``(k, n_classes)`` on a class-mode plan:
         each memory vertex then gathers its own class's alpha — one more
         gather, same stacked kernel."""
+        pol = ExecPolicy.resolve(policy=policy)
         k = len(alphas)
         F = np.empty((self.n + 1, k))
         if alphas.ndim == 2:
@@ -486,9 +495,8 @@ class _ReplayPlan:
                               alphas[None, :], unit)
         F[-1] = 0.0
         R = np.zeros_like(F)
-        _bk.replay_accumulate(self.lv, F, _bk.column_quanta(alphas, unit),
-                              clamp=False, R_out=R, backend=backend,
-                              replay_dtype=replay_dtype)
+        pol.accumulate(self.lv, F, _bk.column_quanta(alphas, unit),
+                       clamp=False, R_out=R)
         return F, R
 
     def array_nbytes(self) -> dict:
@@ -614,36 +622,11 @@ def _verify_slots(plan: _ReplayPlan, F: np.ndarray) -> np.ndarray:
     return ok
 
 
-def _replay_mem_budget(override: Optional[int] = None) -> int:
-    """Replay working-set budget in bytes: arg > $EDAN_REPLAY_MEM_BUDGET >
-    default.  Bounds the (n, chunk) matrices of one stacked pass so
-    HPCG/LULESH-size traces stream through the level kernel.
-
-    Environment values that are empty, unparseable or non-positive fall
-    back to the default — a stray ``export EDAN_REPLAY_MEM_BUDGET=``
-    must never raise mid-sweep (explicit override arguments stay strict:
-    a wrong *argument* is a caller bug worth surfacing)."""
-    if override is not None:
-        return max(int(override), 1)
-    try:
-        env = int(os.environ.get("EDAN_REPLAY_MEM_BUDGET", ""))
-    except (TypeError, ValueError):
-        return _REPLAY_MEM_BUDGET
-    return env if env > 0 else _REPLAY_MEM_BUDGET
-
-
 def _points_chunk(n: int, k: int, mem_budget: Optional[int] = None) -> int:
-    """Balanced point chunk under the replay memory budget: the level loop
-    pays per-level dispatch once per chunk, so fewer, equal-sized chunks
-    beat one full chunk plus a sliver.
-
-    The floor is a single point — at million-vertex scale even one
-    (n, 4) float64 pair is ~70 MB, so a higher floor would silently
-    break the budget exactly where it matters."""
-    cap = max(1, int(_replay_mem_budget(mem_budget) //
-                     max(_REPLAY_BYTES_PER_CELL * n, 1)))
-    n_chunks = -(-k // cap)
-    return -(-k // n_chunks)
+    """Balanced point chunk under the replay memory budget — legacy
+    wrapper over ``ExecPolicy.points_chunk`` for callers holding a raw
+    byte budget instead of a policy."""
+    return ExecPolicy.resolve(mem_budget=mem_budget).points_chunk(n, k)
 
 
 # ----------------------------------------------------------- schedule reuse
@@ -762,80 +745,38 @@ def _record_plan(g: EDag, sim_lists, m: int, cs: int, a0: float,
     return mk0, plan
 
 
-def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
-                   compute_slots: int = 0,
-                   backend: Optional[str] = None,
-                   mem_budget: Optional[int] = None,
-                   use_cache: bool = True,
-                   replay_dtype: Optional[str] = None) -> np.ndarray:
-    """Simulated makespans for a whole latency sweep in one batched pass.
+def _reference_points(g: EDag, spec: SweepSpec, m: int,
+                      cs: int) -> np.ndarray:
+    """The degenerate-model path: one reference event loop per caller
+    point, literally — no dedupe, no replay, exact seed semantics."""
+    out = np.zeros(spec.n_points)
+    sim_lists = g._sim_lists()
+    if spec.class_mode:
+        cls = g.mem_class_column(spec.alphas.shape[1])
+        for i in range(spec.n_points):
+            out[i] = _event_loop_classes(g.is_mem, sim_lists, m,
+                                         spec.alphas[i], cls, spec.unit, cs)
+    else:
+        for i, a in enumerate(spec.alphas):
+            out[i] = _event_loop(g.is_mem, sim_lists, m, float(a),
+                                 spec.unit, cs)
+    return out
 
-    Bit-identical to ``[simulate_reference(g, m, a, unit, compute_slots)
-    for a in alphas]`` — the schedule-replay engine re-verifies its
-    recorded issue order for every point and falls back to fresh recordings
-    (at worst, the reference engine per point) whenever the order shifts.
 
-    ``use_cache`` (default True) reuses recorded schedules — the
-    per-process plan memo and, for traces of at least
-    ``schedule_cache.min_vertices()`` vertices, the persistent on-disk
-    cache keyed by ``(trace digest, m, compute_slots)``.  A reused
-    schedule is only an optimistic first candidate: every point is still
-    verified, so the cache never changes results.  ``mem_budget`` bounds
-    the bytes of one stacked replay chunk (default 512 MB, or
-    $EDAN_REPLAY_MEM_BUDGET) so large traces stream through the level
-    kernel.  ``replay_dtype`` selects the jax-backend execution policy
-    (``backend.replay_dtype_policy``: opt-in exact x64, or the default
-    error-bounded f32 mode with per-column f64 demotion) — returned
-    makespans are bit-identical to the reference under every policy.
-
-    Unsorted or duplicate ``alphas`` are deduped and sorted internally
-    (duplicates would waste replay columns and an unsorted first point
-    would pick an arbitrary recording master); results always come back
-    in caller order.
-
-    ``alphas`` may also be a 2-D ``(P, n_classes)`` matrix of
-    latency-class vectors (class mode): each point prices memory vertex
-    ``v`` at ``alphas[i, classes[v]]`` per the eDAG's
-    ``set_mem_classes`` overlay, and every point is bit-identical to
-    ``simulate_reference_classes`` — the class engine verifies the
-    recorded issue order *and* the recorded slot provenance per point.
-    """
-    g._finalize()
-    alphas = np.asarray(alphas, dtype=np.float64)
-    if alphas.ndim == 2:
-        return _simulate_batch_classes(
-            g, alphas, int(m), float(unit), int(compute_slots),
-            backend=backend, mem_budget=mem_budget,
-            use_cache=use_cache, replay_dtype=replay_dtype)
+def _batch_uniq(g: EDag, alphas: np.ndarray, m: int, cs: int, unit: float,
+                pol: ExecPolicy) -> np.ndarray:
+    """The scalar batched engine over a sorted-unique, finite-positive
+    alpha axis: record → chunked replay → verify → re-record stragglers.
+    ``SweepSpec`` guarantees the axis shape; callers restore caller
+    order from the spec."""
     P = len(alphas)
     out = np.zeros(P)
     n = g.n_vertices
-    if n == 0 or P == 0:
-        return out
-    unit = float(unit)
-    cs = int(compute_slots)
-    m = int(m)
     sim_lists = g._sim_lists()
-    if m < 1 or unit <= 0 or not np.isfinite(unit) or \
-            (alphas <= 0).any() or not np.isfinite(alphas).all():
-        # degenerate machine models keep the reference semantics exactly
-        for i, a in enumerate(alphas):
-            out[i] = _event_loop(g.is_mem, sim_lists, m, float(a), unit, cs)
-        return out
-
-    uniq, inv = np.unique(alphas, return_inverse=True)
-    if len(uniq) != P or not np.array_equal(uniq, alphas):
-        # dedupe + sort once, scatter back to caller order (alphas are
-        # all finite here, so np.unique's ordering is total)
-        return simulate_batch(g, uniq, m=m, unit=unit, compute_slots=cs,
-                              backend=backend, mem_budget=mem_budget,
-                              use_cache=use_cache,
-                              replay_dtype=replay_dtype)[inv]
-
     remaining = np.arange(P)
-    plan = _get_plan(g, m, cs, unit) if use_cache else None
+    plan = _get_plan(g, m, cs, unit) if pol.use_cache else None
     mk0: Optional[float] = None       # master makespan; None for reused plans
-    persist = use_cache and plan is None
+    persist = pol.use_cache and plan is None
     while remaining.size:
         reused = plan is not None and mk0 is None
         if plan is None:
@@ -847,11 +788,10 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
             # would thrash the cache with alpha-specific schedules
             persist = False
         ok = np.zeros(remaining.size, dtype=bool)
-        chunk = _points_chunk(n, remaining.size, mem_budget)
+        chunk = pol.points_chunk(n, remaining.size)
         for c0 in range(0, remaining.size, chunk):
             sel = remaining[c0:c0 + chunk]
-            F, R = plan.replay(alphas[sel], unit, backend=backend,
-                               replay_dtype=replay_dtype)
+            F, R = plan.replay(alphas[sel], unit, policy=pol)
             okc = _verify_class(g, plan.rank, F, R, plan.O_mem, plan.Om_rel)
             if cs:
                 okc &= _verify_class(g, plan.rank, F, R, plan.O_alu,
@@ -869,7 +809,7 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
             # fresh recording replace it (memo + disk), so repeated
             # sweeps converge on a schedule that certifies their points
             # instead of re-paying the serial recording forever
-            persist = use_cache
+            persist = pol.use_cache
         remaining = remaining[~ok]
         # anything a reused plan failed to certify re-records from a fresh
         # master on the next iteration (guaranteed progress from then on)
@@ -877,15 +817,11 @@ def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     return out
 
 
-def _simulate_batch_classes(g: EDag, alphas: np.ndarray, m: int,
-                            unit: float, cs: int,
-                            backend: Optional[str] = None,
-                            mem_budget: Optional[int] = None,
-                            use_cache: bool = True,
-                            replay_dtype: Optional[str] = None
-                            ) -> np.ndarray:
-    """Class-mode ``simulate_batch``: one recorded provenance schedule,
-    stacked class-vector replay, per-point order + slot verification.
+def _batch_uniq_classes(g: EDag, alphas: np.ndarray, m: int, cs: int,
+                        unit: float, pol: ExecPolicy) -> np.ndarray:
+    """Class-mode batched engine over lexsorted-unique class-vector rows:
+    one recorded provenance schedule, stacked class-vector replay,
+    per-point order + slot verification.
 
     Mirrors the scalar engine's structure (record → chunked replay →
     verify → re-record stragglers) with two differences: the recording
@@ -896,36 +832,18 @@ def _simulate_batch_classes(g: EDag, alphas: np.ndarray, m: int,
     P = len(alphas)
     out = np.zeros(P)
     n = g.n_vertices
-    if n == 0 or P == 0:
-        return out
     cls = g.mem_class_column(alphas.shape[1])
     sim_lists = g._sim_lists()
-    if m < 1 or unit <= 0 or not np.isfinite(unit) or \
-            (alphas <= 0).any() or not np.isfinite(alphas).all():
-        # degenerate machine models keep the reference semantics exactly
-        for i in range(P):
-            out[i] = _event_loop_classes(g.is_mem, sim_lists, m,
-                                         alphas[i], cls, unit, cs)
-        return out
-
-    uniq, inv = np.unique(alphas, axis=0, return_inverse=True)
-    if len(uniq) != P or not np.array_equal(uniq, alphas):
-        # dedupe + lexsort rows once, scatter back to caller order
-        return _simulate_batch_classes(
-            g, uniq, m, unit, cs, backend=backend, mem_budget=mem_budget,
-            use_cache=use_cache,
-            replay_dtype=replay_dtype)[np.asarray(inv).reshape(-1)]
-
     remaining = np.arange(P)
     key = ("classes", m, cs, float(unit), g.mem_class_digest())
     plan = None
     memo = getattr(g, "_replay_plans", None)
-    if use_cache and memo is not None and key in memo:
+    if pol.use_cache and memo is not None and key in memo:
         memo.move_to_end(key)
         _sc.stats.add("memory_hits")
         plan = memo[key]
     mk0: Optional[float] = None
-    persist = use_cache and plan is None
+    persist = pol.use_cache and plan is None
     while remaining.size:
         reused = plan is not None and mk0 is None
         if plan is None:
@@ -941,11 +859,10 @@ def _simulate_batch_classes(g: EDag, alphas: np.ndarray, m: int,
                 _memo_plan(g, key, plan)
             persist = False
         ok = np.zeros(remaining.size, dtype=bool)
-        chunk = _points_chunk(n, remaining.size, mem_budget)
+        chunk = pol.points_chunk(n, remaining.size)
         for c0 in range(0, remaining.size, chunk):
             sel = remaining[c0:c0 + chunk]
-            F, R = plan.replay(alphas[sel], unit, backend=backend,
-                               replay_dtype=replay_dtype)
+            F, R = plan.replay(alphas[sel], unit, policy=pol)
             okc = _verify_class(g, plan.rank, F, R, plan.O_mem,
                                 plan.Om_rel)
             okc &= _verify_slots(plan, F)
@@ -961,10 +878,76 @@ def _simulate_batch_classes(g: EDag, alphas: np.ndarray, m: int,
             out[remaining[0]] = mk0
             ok[0] = True
         if reused and not ok.all():
-            persist = use_cache
+            persist = pol.use_cache
         remaining = remaining[~ok]
         plan, mk0 = None, None
     return out
+
+
+def _batch_for_pair(g: EDag, spec: SweepSpec, m: int, cs: int,
+                    pol: ExecPolicy) -> np.ndarray:
+    """One (m, compute_slots) configuration over the spec's whole alpha
+    axis, results in caller order — the shared engine dispatcher every
+    sweep/grid entry point reduces to."""
+    if g.n_vertices == 0 or spec.n_points == 0:
+        return np.zeros(spec.n_points)
+    if spec.degenerate(m):
+        return _reference_points(g, spec, m, cs)
+    if spec.class_mode:
+        res = _batch_uniq_classes(g, spec.uniq, m, cs, spec.unit, pol)
+    else:
+        res = _batch_uniq(g, spec.uniq, m, cs, spec.unit, pol)
+    return spec.restore(res)
+
+
+def simulate_batch(g: EDag, alphas, m: int = 4, unit: float = 1.0,
+                   compute_slots: int = 0,
+                   backend: Optional[str] = None,
+                   mem_budget: Optional[int] = None,
+                   use_cache: bool = True,
+                   replay_dtype: Optional[str] = None, *,
+                   policy: Optional[ExecPolicy] = None) -> np.ndarray:
+    """Simulated makespans for a whole latency sweep in one batched pass.
+
+    Bit-identical to ``[simulate_reference(g, m, a, unit, compute_slots)
+    for a in alphas]`` — the schedule-replay engine re-verifies its
+    recorded issue order for every point and falls back to fresh recordings
+    (at worst, the reference engine per point) whenever the order shifts.
+
+    Execution knobs fold into one ``plan.ExecPolicy`` (pass a pre-resolved
+    ``policy=`` to skip re-resolution): ``use_cache`` (default True)
+    reuses recorded schedules — the per-process plan memo and, for traces
+    of at least ``schedule_cache.min_vertices()`` vertices, the
+    persistent on-disk cache keyed by ``(trace digest, m,
+    compute_slots)``.  A reused schedule is only an optimistic first
+    candidate: every point is still verified, so the cache never changes
+    results.  ``mem_budget`` bounds the bytes of one stacked replay chunk
+    (default 512 MB, or $EDAN_REPLAY_MEM_BUDGET) so large traces stream
+    through the level kernel.  ``replay_dtype`` selects the jax-backend
+    execution policy (``backend.replay_dtype_policy``: opt-in exact x64,
+    or the default error-bounded f32 mode with per-column f64 demotion) —
+    returned makespans are bit-identical to the reference under every
+    policy.
+
+    Unsorted or duplicate ``alphas`` are deduped and sorted internally
+    (duplicates would waste replay columns and an unsorted first point
+    would pick an arbitrary recording master); results always come back
+    in caller order.
+
+    ``alphas`` may also be a 2-D ``(P, n_classes)`` matrix of
+    latency-class vectors (class mode): each point prices memory vertex
+    ``v`` at ``alphas[i, classes[v]]`` per the eDAG's
+    ``set_mem_classes`` overlay, and every point is bit-identical to
+    ``simulate_reference_classes`` — the class engine verifies the
+    recorded issue order *and* the recorded slot provenance per point.
+    """
+    g._finalize()
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
+    spec = SweepSpec.make(alphas, ms=(m,), compute_slots=(compute_slots,),
+                          unit=unit)
+    return _batch_for_pair(g, spec, spec.ms[0], spec.css[0], pol)
 
 
 def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
@@ -972,7 +955,8 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
                   backend: Optional[str] = None,
                   mem_budget: Optional[int] = None,
                   use_cache: bool = True,
-                  replay_dtype: Optional[str] = None) -> np.ndarray:
+                  replay_dtype: Optional[str] = None, *,
+                  policy: Optional[ExecPolicy] = None) -> np.ndarray:
     """Simulated makespan across a latency sweep (the §4 gem5 protocol).
 
     One finalize builds the shared CSR; the batched schedule-replay engine
@@ -987,30 +971,44 @@ def latency_sweep(g: EDag, alphas, m: int = 4, unit: float = 1.0,
     against the eDAG's ``set_mem_classes`` overlay instead of scalar
     alphas — same call shape, one makespan per row."""
     g._finalize()
-    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
-    use_batch = (len(alphas) >= _MIN_BATCH_POINTS if batch is None
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
+    spec = SweepSpec.make(alphas, ms=(m,), compute_slots=(compute_slots,),
+                          unit=unit)
+    use_batch = (spec.n_points >= _MIN_BATCH_POINTS if batch is None
                  else bool(batch))
     if use_batch:
-        return simulate_batch(g, alphas, m=m, unit=unit,
-                              compute_slots=compute_slots, backend=backend,
-                              mem_budget=mem_budget, use_cache=use_cache,
-                              replay_dtype=replay_dtype)
+        return _batch_for_pair(g, spec, spec.ms[0], spec.css[0], pol)
     sim_lists = g._sim_lists()   # shared: the sweep pays finalization once
-    if alphas.ndim == 2:
-        cls = g.mem_class_column(alphas.shape[1])
+    m, cs = spec.ms[0], spec.css[0]
+    if spec.class_mode:
+        cls = g.mem_class_column(spec.alphas.shape[1])
         return np.array([_event_loop_classes(
-            g.is_mem, sim_lists, int(m), a, cls, float(unit),
-            int(compute_slots)) for a in alphas])
-    return np.array([_event_loop(g.is_mem, sim_lists, int(m), float(a),
-                                 float(unit), int(compute_slots))
-                     for a in alphas])
+            g.is_mem, sim_lists, m, a, cls, spec.unit, cs)
+            for a in spec.alphas])
+    return np.array([_event_loop(g.is_mem, sim_lists, m, float(a),
+                                 spec.unit, cs) for a in spec.alphas])
+
+
+def _sweep_grid_spec(g: EDag, spec: SweepSpec,
+                     pol: ExecPolicy) -> np.ndarray:
+    """``sweep_grid`` on a pre-normalized query: the whole machine grid
+    shares the spec's one dedupe and the policy's one resolution."""
+    g._finalize()
+    out = np.zeros((spec.n_points, len(spec.ms), len(spec.css)))
+    for j, mm in enumerate(spec.ms):
+        for l, cs in enumerate(spec.css):
+            out[:, j, l] = _batch_for_pair(g, spec, mm, cs, pol)
+    return out
 
 
 def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
                unit: float = 1.0, backend: Optional[str] = None,
                mem_budget: Optional[int] = None,
                use_cache: bool = True,
-               replay_dtype: Optional[str] = None) -> np.ndarray:
+               replay_dtype: Optional[str] = None, *,
+               policy: Optional[ExecPolicy] = None) -> np.ndarray:
     """Simulated makespans over the full alpha × m × compute_slots grid.
 
     The capacity-planning what-if: one call evaluates every hardware
@@ -1021,10 +1019,11 @@ def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     compute_slots=compute_slots[l])``.
 
     Cost structure: the whole grid shares one ``_finalize`` /
-    ``_sim_lists`` build; each ``(m, compute_slots)`` pair needs one
-    recorded schedule (in-process memo / persistent ``schedule_cache``
-    hits skip even that) and evaluates its entire alpha axis as stacked
-    (max,+) passes through ``backend.level_accumulate`` — chunked under
+    ``_sim_lists`` build and one ``SweepSpec`` normalization; each
+    ``(m, compute_slots)`` pair needs one recorded schedule (in-process
+    memo / persistent ``schedule_cache`` hits skip even that) and
+    evaluates its entire alpha axis as stacked (max,+) passes through
+    ``backend.level_accumulate`` — chunked under the policy's
     ``mem_budget`` so million-vertex traces stream through the level
     kernel instead of materializing an (n, |grid|) matrix.  Alpha is
     therefore the cheap axis; m and compute_slots each cost at most one
@@ -1036,15 +1035,9 @@ def sweep_grid(g: EDag, alphas, ms=(4,), compute_slots=(0,),
     m × compute_slots grid (one class-mode recording per (m, slots)
     pair); the first output axis then indexes the P class vectors.
     """
-    g._finalize()
-    alphas = np.asarray(list(np.atleast_1d(alphas)), dtype=np.float64)
-    ms = [int(v) for v in np.atleast_1d(ms)]
-    css = [int(v) for v in np.atleast_1d(compute_slots)]
-    out = np.zeros((len(alphas), len(ms), len(css)))
-    for j, mm in enumerate(ms):
-        for l, cs in enumerate(css):
-            out[:, j, l] = simulate_batch(
-                g, alphas, m=mm, unit=unit, compute_slots=cs,
-                backend=backend, mem_budget=mem_budget,
-                use_cache=use_cache, replay_dtype=replay_dtype)
-    return out
+    pol = ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                             mem_budget=mem_budget, use_cache=use_cache,
+                             policy=policy)
+    spec = SweepSpec.make(alphas, ms=ms, compute_slots=compute_slots,
+                          unit=unit)
+    return _sweep_grid_spec(g, spec, pol)

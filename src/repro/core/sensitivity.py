@@ -10,11 +10,13 @@ number for resource disaggregation (paper §1's motivation).
 
 Unlike the trace-level sweeps, every grid in this module is a closed-form
 Eq 3-4 broadcast — no (max,+) level kernel runs, so there is nothing for
-the ``backend`` / ``replay_dtype`` execution policy to select and these
-entry points deliberately take neither.  The accelerator-resident policy
-(``backend.replay_accumulate``: opt-in x64, error-bounded f32 with f64
-demotion) applies to everything upstream that feeds ``AxisSensitivity``
-tables through ``metrics.sweep_report`` / ``grid_report``.
+a ``plan.ExecPolicy`` to select and these entry points deliberately take
+none.  The execution policy (backend / replay dtype / chunk budget /
+cache reuse, resolved once per entry point by ``ExecPolicy.resolve``)
+applies to everything upstream that feeds ``AxisSensitivity`` tables
+through ``metrics.sweep_report`` / ``grid_report``.  The grid *query*
+normalization, however, is shared: the (alpha, m) axes here go through
+the same ``plan.SweepSpec`` the replay sweeps use.
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ import numpy as np
 
 from .hlo import analyze_collectives
 from .metrics import lambda_abs, lambda_rel
+from .plan import SweepSpec
 
 # Default per-collective latencies (seconds): intra-pod ICI hop vs inter-pod
 # DCI.  These are order-of-magnitude fabric constants, not measurements.
@@ -138,9 +141,9 @@ def suite_axis_latency_grid(per_axis_by_step: Dict[str, Dict[str,
     step_seconds[step])`` (the ops are elementwise, so stacking cannot
     change a bit).  Returns ``{step: {axis: {...}}}`` with the same leaf
     layout as ``axis_latency_grid``."""
-    alphas = np.asarray(alphas, dtype=np.float64)
-    ms_arr = np.asarray([int(v) for v in np.atleast_1d(ms)],
-                        dtype=np.int64)
+    spec = SweepSpec.make(alphas, ms=ms)
+    alphas = spec.alphas
+    ms_arr = np.asarray(spec.ms, dtype=np.int64)
     rows = [(step, axis) for step, pa in per_axis_by_step.items()
             for axis in pa]
     if not rows:

@@ -164,6 +164,32 @@ def model_suite(names: List[str], phase: str = "prefill",
     return EDagSuite(traces, names=list(names)), list(names)
 
 
+def model_grid_report(names: List[str], alphas, phase: str = "prefill",
+                      ms=(4,), compute_slots=(0,), *,
+                      params=None, simulate_points: bool = False,
+                      policy=None, **trace_kw) -> dict:
+    """Latency-sensitivity grid over a set of model configs, end to end.
+
+    Traces every named config for ``phase`` (through the warm trace
+    store), builds the union suite, and runs one
+    ``metrics.suite_grid_report`` over the (alpha, m, compute_slots)
+    grid — every member rides the same block-diagonal stacked pass
+    under one ``plan.ExecPolicy`` (pass a pre-resolved ``policy=`` to
+    pin backend / replay dtype / chunk budget / cache reuse for the
+    whole pipeline; ``alphas`` may be scalar latencies or latency-class
+    vectors).  Extra keyword arguments go to ``trace_model``.  Returns
+    the ``suite_grid_report`` dict with ``names`` added."""
+    from ..core.metrics import suite_grid_report
+    from ..core.metrics import CostModelParams as _CMP
+    suite, names = model_suite(list(names), phase, **trace_kw)
+    rep = suite_grid_report(
+        suite, alphas, ms=ms, compute_slots=compute_slots,
+        params=params if params is not None else _CMP(),
+        simulate_points=simulate_points, policy=policy)
+    rep["names"] = list(names)
+    return rep
+
+
 def model_objects(g: EDag, min_vertices: int = 1) -> List[PlacementObject]:
     """Placement objects for a jaxpr-traced eDAG.
 

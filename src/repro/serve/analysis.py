@@ -65,7 +65,7 @@ import numpy as np
 
 from ..core.graph import EDag
 from ..core.metrics import grid_report, suite_grid_report
-from ..core.scheduler import _REPLAY_BYTES_PER_CELL, _replay_mem_budget
+from ..core.plan import REPLAY_BYTES_PER_CELL, ExecPolicy
 from ..core.suite import EDagSuite
 from . import faults
 
@@ -263,19 +263,15 @@ def _error(code: str, stage: str, message: str, retries: int = 0) -> dict:
             "retries": retries}
 
 
-def _demotion_ladder(backend: Optional[str], replay_dtype: Optional[str]):
+def _demotion_ladder(backend: Optional[str], replay_dtype: Optional[str],
+                     mem_budget: Optional[int] = None):
     """Replay policies in degradation order: what was asked for, then jax
     with exact f64 (kills certificate trouble), then pure numpy (kills
-    the accelerator entirely).  Consecutive duplicates collapse so a
-    numpy request has a one-rung ladder."""
-    ladder = [(backend, replay_dtype), ("jax", "float64"), ("numpy", None)]
-    if backend == "numpy":
-        ladder = [(backend, replay_dtype), ("numpy", None)]
-    out = []
-    for rung in ladder:
-        if not out or out[-1] != rung:
-            out.append(rung)
-    return out
+    the accelerator entirely).  Duplicates collapse so a numpy request
+    has a one-rung ladder.  Each rung is a resolved ``plan.ExecPolicy``
+    carrying the service's replay budget."""
+    return ExecPolicy.resolve(backend=backend, replay_dtype=replay_dtype,
+                              mem_budget=mem_budget).ladder()
 
 
 class AnalysisService:
@@ -405,7 +401,7 @@ class AnalysisService:
         streams it."""
         members = sorted(members,
                          key=lambda p: (-p.req.priority, p.rid))
-        budget = _replay_mem_budget(self.mem_budget)
+        budget = ExecPolicy.resolve(mem_budget=self.mem_budget).mem_budget
         batches: List[List[_Pending]] = []
         cur: List[_Pending] = []
         cur_alphas: set = set()
@@ -418,7 +414,7 @@ class AnalysisService:
             tb = sum(p.g.array_nbytes().values())
             alphas = cur_alphas | set(float(a) for a in r.alphas)
             cells = (cur_rows + rows) * len(alphas)
-            if cur and (cells * _REPLAY_BYTES_PER_CELL
+            if cur and (cells * REPLAY_BYTES_PER_CELL
                         + cur_trace_bytes + tb) > budget:
                 batches.append(cur)
                 cur, cur_alphas, cur_rows = [], set(), 0
@@ -545,7 +541,8 @@ class AnalysisService:
         demotion ladder across retries.  The retry budget and deadline
         are the *strictest* member's — a batch must not outlive the
         tightest deadline riding in it."""
-        ladder = _demotion_ladder(r0.backend, r0.replay_dtype)
+        ladder = _demotion_ladder(r0.backend, r0.replay_dtype,
+                                  self.mem_budget)
         strict = min(live, key=lambda p: p.remaining())
         budget = max(p.max_retries for p in live)
         failures = 0
@@ -555,7 +552,7 @@ class AnalysisService:
         while True:
             for p in live:
                 p.check_deadline()
-            bk, dt = ladder[min(failures, len(ladder) - 1)]
+            pol = ladder[min(failures, len(ladder) - 1)]
             try:
                 faults.check("schedule", rid=strict.rid, batch=batch_size)
                 faults.check("replay", rid=strict.rid, batch=batch_size)
@@ -563,15 +560,14 @@ class AnalysisService:
                     rep = suite_grid_report(
                         suite, alphas, ms=tuple(r0.ms),
                         compute_slots=tuple(r0.compute_slots),
-                        simulate_points=True, backend=bk,
-                        mem_budget=self.mem_budget, replay_dtype=dt)
+                        simulate_points=True, policy=pol)
                 else:
                     rep = grid_report(
                         live[0].g, alphas, ms=tuple(r0.ms),
                         compute_slots=tuple(r0.compute_slots),
-                        simulate_points=True, backend=bk,
-                        mem_budget=self.mem_budget, replay_dtype=dt)
-                return rep, {"backend": bk, "replay_dtype": dt,
+                        simulate_points=True, policy=pol)
+                return rep, {"backend": pol.backend,
+                             "replay_dtype": pol.replay_dtype,
                              "demotions": failures}, failures
             except DeadlineExceeded:
                 raise
@@ -613,12 +609,13 @@ class AnalysisService:
         not new error vocabulary."""
         from ..core.placement import search_placement
         r = p.req
-        ladder = _demotion_ladder(r.backend, r.replay_dtype)
+        ladder = _demotion_ladder(r.backend, r.replay_dtype,
+                                  self.mem_budget)
         failures = 0
         while True:
             try:
                 p.check_deadline()
-                bk, dt = ladder[min(failures, len(ladder) - 1)]
+                pol = ladder[min(failures, len(ladder) - 1)]
                 faults.check("placement", rid=p.rid)
                 rep = search_placement(
                     p.g, r.alpha_local, r.alpha_remote, r.local_budget,
@@ -626,8 +623,9 @@ class AnalysisService:
                     m=int(r.ms[0]),
                     compute_slots=int(r.compute_slots[0]),
                     unit=float(r.unit), method=r.placement_method,
-                    backend=bk, replay_dtype=dt)
-                policy = {"backend": bk, "replay_dtype": dt,
+                    policy=pol)
+                policy = {"backend": pol.backend,
+                          "replay_dtype": pol.replay_dtype,
                           "demotions": failures}
                 break
             except DeadlineExceeded as exc:

@@ -1,0 +1,193 @@
+"""The plan layer: SweepSpec normalization and ExecPolicy resolution.
+
+The refactor contract is that every public entry point is now a thin
+shim over one ``SweepSpec`` + one ``ExecPolicy``, bit-identical to the
+pre-refactor behaviour — so besides unit-testing the two objects, the
+property layer here drives the shims against the retained per-event
+reference engine on random tie-heavy DAGs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (EDag, EDagSuite, ExecPolicy, SweepSpec,
+                        latency_sweep, replay_mem_budget, simulate_batch,
+                        simulate_reference, suite_sweep_grid, sweep_grid)
+from repro.core.plan import REPLAY_MEM_BUDGET
+
+
+def rand_edag(seed: int, n: int, p_edge: float = 0.15,
+              p_mem: float = 0.5) -> EDag:
+    rng = np.random.default_rng(seed)
+    g = EDag()
+    for i in range(n):
+        g.add_vertex(is_mem=bool(rng.random() < p_mem), nbytes=8.0)
+        for j in range(i):
+            if rng.random() < p_edge:
+                g.add_edge(j, i)
+    g._finalize()
+    return g
+
+
+# ------------------------------------------------------------- SweepSpec
+
+def test_sweepspec_scalar_normalization_and_restore():
+    spec = SweepSpec.make([3.0, 1.0, 3.0, 2.0], ms=[2, 4],
+                          compute_slots=[0, 1])
+    assert spec.alphas.dtype == np.float64
+    assert spec.n_points == 4 and spec.n_uniq == 3
+    assert np.array_equal(spec.uniq, [1.0, 2.0, 3.0])
+    assert spec.ms == (2, 4) and spec.css == (0, 1)
+    assert spec.pairs == [(2, 0), (2, 1), (4, 0), (4, 1)]
+    assert not spec.class_mode and spec.n_classes is None
+    # restore scatters uniq-axis results back to caller order
+    res = np.array([10.0, 20.0, 30.0])
+    assert np.array_equal(spec.restore(res), [30.0, 10.0, 30.0, 20.0])
+    got = spec.restore(np.tile(res, (2, 1)), axis=1)
+    assert np.array_equal(got, [[30.0, 10.0, 30.0, 20.0]] * 2)
+
+
+def test_sweepspec_normalization_is_idempotent():
+    spec = SweepSpec.make([5.0, 0.25, 5.0])
+    again = SweepSpec.make(spec.uniq)
+    # normalizing an already-normalized axis is the identity: no dedupe
+    # permutation, the same uniq array
+    assert again.inv is None
+    assert np.array_equal(again.uniq, spec.uniq)
+    assert np.array_equal(again.restore(again.uniq), again.alphas)
+    # already-sorted-unique caller input short-circuits the same way
+    assert SweepSpec.make([1.0, 2.0, 3.0]).inv is None
+
+
+def test_sweepspec_class_mode():
+    rows = [[3.0, 1.0], [1.0, 2.0], [3.0, 1.0]]
+    spec = SweepSpec.make(rows)
+    assert spec.class_mode and spec.n_classes == 2
+    assert spec.n_uniq == 2
+    res = np.array([[5.0], [7.0]])          # one result row per uniq row
+    want = [[7.0], [5.0], [7.0]]
+    assert np.array_equal(spec.restore(res), want)
+
+
+def test_sweepspec_degenerate_screen_disables_dedupe():
+    spec = SweepSpec.make([2.0, -1.0, 2.0])
+    assert spec.bad_costs and spec.inv is None
+    assert spec.degenerate(4)
+    assert np.array_equal(spec.uniq, spec.alphas)   # caller order kept
+    assert SweepSpec.make([2.0], unit=0.0).bad_costs
+    assert SweepSpec.make([np.inf]).bad_costs
+    assert not SweepSpec.make([2.0]).bad_costs
+    assert SweepSpec.make([2.0]).degenerate(0)      # m < 1 alone
+
+
+def test_sweepspec_rejects_rank_3():
+    with pytest.raises(ValueError, match="1-D.*or 2-D"):
+        SweepSpec.make(np.ones((2, 2, 2)))
+
+
+# ------------------------------------------------------------ ExecPolicy
+
+def test_policy_arg_beats_env(monkeypatch):
+    monkeypatch.setenv("EDAN_REPLAY_MEM_BUDGET", "4096")
+    assert ExecPolicy.resolve(mem_budget=123).mem_budget == 123
+    assert ExecPolicy.resolve().mem_budget == 4096
+    assert replay_mem_budget() == 4096
+    monkeypatch.setenv("EDAN_REPLAY_MEM_BUDGET", "garbage")
+    assert ExecPolicy.resolve().mem_budget == REPLAY_MEM_BUDGET
+    monkeypatch.delenv("EDAN_REPLAY_MEM_BUDGET")
+    assert ExecPolicy.resolve().mem_budget == REPLAY_MEM_BUDGET
+
+
+def test_policy_is_frozen_and_pre_resolved_policy_wins():
+    pol = ExecPolicy.resolve(mem_budget=64, use_cache=False)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.mem_budget = 1
+    # a pre-resolved policy= wins outright over shim kwargs
+    assert ExecPolicy.resolve(mem_budget=999, policy=pol) is pol
+    assert hash(pol) == hash(ExecPolicy(mem_budget=64, use_cache=False))
+
+
+def test_policy_chunk_accounting():
+    pol = ExecPolicy.resolve(mem_budget=32 * 100)   # 100 cells
+    # cap 10 points/chunk -> 4 chunks, balanced to ceil(37/4) = 10
+    assert pol.points_chunk(10, 37) == 10
+    assert pol.points_chunk(10 ** 9, 5) == 1        # floor of one point
+    assert pol.cap_rows(10) == 10
+    assert ExecPolicy.resolve(mem_budget=1).cap_rows(10 ** 9) == 1
+
+
+def test_policy_ladder():
+    lad = ExecPolicy.resolve(backend=None, replay_dtype=None,
+                             mem_budget=77, use_cache=False).ladder()
+    assert [(p.backend, p.replay_dtype) for p in lad] == \
+        [(None, None), ("jax", "float64"), ("numpy", None)]
+    assert all(p.mem_budget == 77 and not p.use_cache for p in lad)
+    # a numpy request has no device to demote onto
+    lad = ExecPolicy.resolve(backend="numpy", mem_budget=77).ladder()
+    assert [(p.backend, p.replay_dtype) for p in lad] == [("numpy", None)]
+    # a jax-f64 request collapses into its own demotion rung
+    lad = ExecPolicy.resolve(backend="jax",
+                             replay_dtype="float64").ladder()
+    assert [(p.backend, p.replay_dtype) for p in lad] == \
+        [("jax", "float64"), ("numpy", None)]
+
+
+def test_one_frozen_policy_reused_across_entry_points():
+    """The designed idiom: resolve once, thread the same instance through
+    many calls — results match the per-call kwarg shims bit-exactly."""
+    pol = ExecPolicy.resolve(backend="numpy", mem_budget=4096,
+                             use_cache=False)
+    g = rand_edag(7, 30)
+    alphas = [50.0, 0.5, 50.0, 200.0]
+    a = simulate_batch(g, alphas, m=3, policy=pol)
+    b = simulate_batch(g, alphas, m=3, backend="numpy", mem_budget=4096,
+                       use_cache=False)
+    assert np.array_equal(a, b)
+    grid = sweep_grid(g, alphas, ms=[1, 3], compute_slots=[0, 2],
+                      policy=pol)
+    want = sweep_grid(g, alphas, ms=[1, 3], compute_slots=[0, 2],
+                      backend="numpy", mem_budget=4096, use_cache=False)
+    assert np.array_equal(grid, want)
+    suite = EDagSuite([g, rand_edag(8, 20)])
+    sg = suite_sweep_grid(suite, alphas, ms=[1, 3], policy=pol)
+    assert np.array_equal(
+        sg, suite_sweep_grid(suite, alphas, ms=[1, 3], backend="numpy",
+                             mem_budget=4096, use_cache=False))
+
+
+# ------------------------------------- property: shims vs the reference
+
+@st.composite
+def shim_cases(draw):
+    """Random tie-heavy DAG + machine config: duplicated / unsorted
+    alphas drawn from a small pool force dedupe-and-restore and slot-tie
+    verification through every shim at once."""
+    seed = draw(st.integers(0, 2 ** 31))
+    n = draw(st.integers(0, 40))
+    m = draw(st.integers(1, 5))
+    cs = draw(st.integers(0, 3))
+    rng = np.random.default_rng(seed)
+    alphas = rng.choice([0.5, 1.0, 1.0, 2.0, 50.0, 333.25],
+                        size=5, replace=True)
+    return rand_edag(seed, n), alphas, m, cs
+
+
+@given(shim_cases())
+def test_shims_bit_identical_to_reference(case):
+    """Every shim's output equals the retained per-event heapq oracle,
+    point by point, in caller order — the refactor's central contract."""
+    g, alphas, m, cs = case
+    want = np.array([simulate_reference(g, m=m, alpha=float(a),
+                                        compute_slots=cs)
+                     for a in alphas])
+    got = simulate_batch(g, alphas, m=m, compute_slots=cs)
+    assert np.array_equal(got, want)
+    assert np.array_equal(
+        latency_sweep(g, alphas, m=m, compute_slots=cs), want)
+    grid = sweep_grid(g, alphas, ms=[m], compute_slots=[cs])
+    assert np.array_equal(grid[:, 0, 0], want)
+    sgrid = suite_sweep_grid(EDagSuite([g]), alphas, ms=[m],
+                             compute_slots=[cs])
+    assert np.array_equal(sgrid[0, :, 0, 0], want)

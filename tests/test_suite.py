@@ -371,6 +371,50 @@ def test_suite_class_vector_grid_matches_members_and_reference():
         g.set_mem_classes(None)
 
 
+def test_suite_class_grid_honors_env_mem_budget(monkeypatch):
+    """Class-vector suite grids go through the same union plan and
+    ``$EDAN_REPLAY_MEM_BUDGET`` chunk accounting as scalar runs — the
+    per-member silent fallback that used to skip budget accounting is
+    gone.  A tiny budget must multiply replay dispatches (chunks of ~one
+    point each) and change no bits."""
+    from repro.core import backend as bk
+
+    members = [rand_edag(71, 40), rand_edag(72, 30)]
+    for k, g in enumerate(members):
+        rng = np.random.default_rng(200 + k)
+        g.set_mem_classes(rng.integers(0, 2, size=g.n_vertices,
+                                       dtype=np.int32))
+    suite = EDagSuite(members)
+    rows = np.array([[40.0, 300.0], [120.0, 60.0],
+                     [80.0, 200.0], [300.0, 45.0]])
+    ms, css = [2, 4], [0]
+    # prove the class grid really builds union plans (one per distinct
+    # m), not a per-member loop
+    import repro.core.suite as suite_mod
+    built = []
+    orig_build = suite_mod._build_suite_plan
+
+    def spy(suite_, pairs, unit, a0, use_cache, member_idx=None,
+            n_classes=None):
+        built.append(n_classes)
+        return orig_build(suite_, pairs, unit, a0, use_cache,
+                          member_idx=member_idx, n_classes=n_classes)
+
+    monkeypatch.setattr(suite_mod, "_build_suite_plan", spy)
+    bk.reset_stats()
+    full = suite_sweep_grid(suite, rows, ms=ms, compute_slots=css)
+    full_chunks = bk.stats["chunks"]
+    assert full_chunks > 0
+    assert built and all(nc == 2 for nc in built)
+    monkeypatch.setenv("EDAN_REPLAY_MEM_BUDGET", "1")
+    bk.reset_stats()
+    tiny = suite_sweep_grid(suite, rows, ms=ms, compute_slots=css)
+    assert bk.stats["chunks"] > full_chunks
+    assert np.array_equal(full, tiny)
+    for g in members:
+        g.set_mem_classes(None)
+
+
 def test_suite_axis_latency_grid_matches_per_step():
     from repro.core import (AxisSensitivity, axis_latency_grid, lambda_abs,
                             suite_axis_latency_grid)
@@ -410,6 +454,7 @@ def test_member_groups_partition_streams_big_blocks():
     """A member too big to fit a full-width replay chunk in the budget
     becomes its own replay group; small members stay batched together;
     every member lands in exactly one group."""
+    from repro.core.plan import ExecPolicy
     from repro.core.suite import _member_groups
 
     members = [rand_edag(40, 20), rand_edag(41, 600, p_edge=0.02),
@@ -417,15 +462,17 @@ def test_member_groups_partition_streams_big_blocks():
     suite = EDagSuite(members)
     P, n_pairs = 8, 2
     # budget sized so only the 600-vertex member overflows cap_rows
-    budget = 24 * P * 300 * n_pairs
-    groups = _member_groups(suite, n_pairs, P, budget)
+    pol = ExecPolicy.resolve(mem_budget=24 * P * 300 * n_pairs)
+    groups = _member_groups(suite, n_pairs, P, pol)
     assert [1] in groups
     flat = sorted(i for grp in groups for i in grp)
     assert flat == [0, 1, 2, 3]
     covered = [i for grp in groups for i in grp]
     assert len(covered) == len(set(covered))
     # a huge budget keeps the whole suite in one batched group
-    assert _member_groups(suite, n_pairs, P, 1 << 40) == [[0, 1, 2, 3]]
+    assert _member_groups(suite, n_pairs, P,
+                          ExecPolicy.resolve(mem_budget=1 << 40)) \
+        == [[0, 1, 2, 3]]
 
 
 def test_heterogeneous_suite_grid_bit_identical_under_grouping():

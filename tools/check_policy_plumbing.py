@@ -1,0 +1,75 @@
+"""Static check: the execution-policy tuple must not be re-threaded.
+
+``core/plan.py`` is the single home of the execution-policy tuple
+(backend, replay_dtype, mem_budget, use_cache).  Public entry points
+keep the historical keyword *signatures* as thin shims, but the only
+call sites allowed to pass the raw policy kwargs onward are:
+
+* anything inside ``core/plan.py`` itself, and
+* calls to ``ExecPolicy.resolve(...)`` — the designated fold point every
+  shim uses to turn its keywords into one frozen policy object.
+
+Everything else must pass ``policy=`` / a resolved ``ExecPolicy``.  This
+script walks every ``Call`` node under ``src/repro`` and fails (exit 1)
+on any other call passing ``replay_dtype=``, ``mem_budget=`` or
+``use_cache=`` as a keyword argument.  ``backend=`` is deliberately not
+policed: the kernel layer (``core/backend.py``) legitimately dispatches
+on it below the policy layer, and non-policy APIs use the name too.
+
+Usage: ``PYTHONPATH=src python tools/check_policy_plumbing.py``
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+
+#: Kwargs that identify a raw execution-policy re-thread.
+POLICY_KWARGS = {"replay_dtype", "mem_budget", "use_cache"}
+
+#: Files where the raw tuple is the implementation, not a leak.
+ALLOWED_FILES = {SRC / "core" / "plan.py"}
+
+
+def _is_resolve_call(call: ast.Call) -> bool:
+    """True for ``<anything>.resolve(...)`` — the shim fold point."""
+    fn = call.func
+    return isinstance(fn, ast.Attribute) and fn.attr == "resolve"
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or _is_resolve_call(node):
+            continue
+        bad = sorted(kw.arg for kw in node.keywords
+                     if kw.arg in POLICY_KWARGS)
+        if bad:
+            errors.append(
+                f"{path.relative_to(ROOT)}:{node.lineno}: call passes raw "
+                f"policy kwarg(s) {', '.join(bad)} — resolve an ExecPolicy "
+                f"once and pass policy= instead (see core/plan.py)")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in sorted(SRC.rglob("*.py")):
+        if path in ALLOWED_FILES:
+            continue
+        errors.extend(check_file(path))
+    if errors:
+        print("\n".join(errors))
+        print(f"\ncheck_policy_plumbing: {len(errors)} violation(s)")
+        return 1
+    print("check_policy_plumbing: OK (no raw policy kwarg re-threading "
+          "outside core/plan.py)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
